@@ -1,0 +1,2 @@
+"""Benchmark harness: one module per paper table/figure + the roofline
+analysis driven by the dry-run artifacts."""

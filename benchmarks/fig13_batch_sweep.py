@@ -1,0 +1,34 @@
+"""Paper Fig. 13: throughput & latency vs batch size.
+
+The paper measured a GTX 1080 climbing toward its compute roofline with
+batch (weight reuse) while latency grows. We reproduce the same curve on the
+v5e roofline translation for the 2L-768H GRU: batch-1 is memory-bound (the
+paper's core premise), and the knee sits where arithmetic intensity crosses
+the ridge point — with temporal sparsity shifting the knee right.
+"""
+from __future__ import annotations
+
+from repro.core.perf_model import V5E, batch_sweep
+from repro.core.sparsity import GruDims
+
+BATCHES = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+
+
+def run() -> list[str]:
+    dims = GruDims(40, 768, 2)
+    lines = []
+    for geff, tag in [(0.0, "dense"), (0.9, "delta90")]:
+        rows = batch_sweep(dims, BATCHES, gamma_eff=geff, chip=V5E)
+        for r in rows:
+            lines.append(
+                f"fig13.{tag}_b{r['batch']},{r['latency_s'] * 1e6:.2f},"
+                f"tput={r['throughput_ops'] / 1e9:.1f}GOp/s")
+        knee = next((r["batch"] for r in rows
+                     if r["throughput_ops"] >= 0.99 * rows[-1]["throughput_ops"]),
+                    BATCHES[-1])
+        lines.append(f"fig13.{tag}_knee,0,compute-bound from batch~{knee}")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,61 @@
+"""Kernel-level benchmark: delta_spmv block-skip efficiency.
+
+Reports the modeled HBM weight traffic of the Pallas block-sparse matvec
+across sparsity levels (the Eq. 8 law at 128-wide block granularity) and
+wall-time of the interpret-mode kernel as a correctness smoke. Structured
+(burst) sparsity keeps block skipping near the element-level ideal;
+unstructured sparsity shows the block-granularity gap — exactly the
+trade-off DESIGN.md §2 documents for the TPU adaptation.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+O, I = 2048, 2048
+
+
+def _traffic(dx):
+    dense = O * I * 2
+    got = float(ops.delta_spmv_hbm_bytes((O, I), dx))
+    return got / dense
+
+
+def run() -> list[str]:
+    lines = []
+    key = jax.random.PRNGKey(0)
+    for gamma in [0.0, 0.5, 0.9, 0.96]:
+        # structured: fire whole 128-blocks (trained delta nets cluster)
+        nb = I // 128
+        fired_blocks = max(1, int(round(nb * (1 - gamma))))
+        dx_s = jnp.zeros((1, I)).at[:, :fired_blocks * 128].set(1.0)
+        # unstructured: uniform random elements
+        dx_u = (jax.random.uniform(key, (1, I)) < (1 - gamma)).astype(
+            jnp.float32)
+        lines.append(
+            f"kernel.delta_spmv_g{int(gamma * 100)},0,"
+            f"traffic_frac_structured={_traffic(dx_s):.3f} "
+            f"unstructured={_traffic(dx_u):.3f} ideal={1 - gamma:.3f}")
+
+    # interpret-mode wall time (correctness-path smoke, not TPU perf)
+    w = jax.random.normal(key, (512, 512))
+    dx = jax.random.normal(jax.random.fold_in(key, 1), (1, 512))
+    dx = dx * (jax.random.uniform(jax.random.fold_in(key, 2), (1, 512)) < 0.2)
+    out = ops.delta_spmv(w, dx, interpret=True)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = ops.delta_spmv(w, dx, interpret=True)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    lines.append(f"kernel.delta_spmv_interpret_512,{us:.0f},"
+                 "interpret-mode (CPU correctness path)")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,53 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig9_threshold_sweep, fig10_11_dual_threshold,
+                            fig13_batch_sweep, fig14_15_latency_traces,
+                            kernel_bench, table2_perfmodel,
+                            table6_7_comparison)
+    suites = [
+        ("table2", table2_perfmodel.run),
+        ("table6_7", table6_7_comparison.run),
+        ("fig13", fig13_batch_sweep.run),
+        ("kernel", kernel_bench.run),
+        ("fig14_15", fig14_15_latency_traces.run),
+        ("fig9", fig9_threshold_sweep.run),
+        ("fig10_11", fig10_11_dual_threshold.run),
+    ]
+    # roofline runs only when dry-run artifacts exist
+    try:
+        from benchmarks import roofline
+        if os.path.isdir(roofline.ART_DIR) and os.listdir(roofline.ART_DIR):
+            suites.append(("roofline", roofline.run))
+    except Exception:
+        pass
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.perf_counter()
+        try:
+            for line in fn():
+                print(line)
+            dt = time.perf_counter() - t0
+            print(f"{name}.suite_wall,{dt * 1e6:.0f},suite wall time")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}.FAILED,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: EdgeDRNN / delta-network training + inference framework in JAX."""
+__version__ = "0.1.0"

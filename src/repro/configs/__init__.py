@@ -1,0 +1,2 @@
+"""Architecture configs: one module per assigned architecture plus the
+paper's own DeltaGRU networks. See registry.get_config(name)."""

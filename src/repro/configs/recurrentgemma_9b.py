@@ -1,0 +1,21 @@
+"""recurrentgemma-9b [hybrid] — RG-LRU + local attention, 2 recurrent : 1
+attention (38 layers = 12x(rec,rec,attn) + (rec,rec)). MQA kv=1, window 2048.
+[arXiv:2402.19427; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,              # MQA
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    block_pattern=("rglru", "rglru", "local_attn"),
+    attn_window=2048,
+    rope_theta=10000.0,
+    norm="rmsnorm",
+    activation="gelu_tanh",
+)

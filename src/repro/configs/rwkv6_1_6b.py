@@ -1,0 +1,20 @@
+"""rwkv6-1.6b [ssm] — "Finch": attention-free, data-dependent decay,
+token-shift. head_dim 64 => 32 heads. [arXiv:2404.05892; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,                # d_model / 64
+    n_kv_heads=32,
+    d_ff=7168,                 # channel-mix width (3.5x)
+    vocab=65536,
+    head_dim=64,
+    rwkv=True,
+    block_pattern=("rwkv",),
+    norm="layernorm",
+    rope_theta=10000.0,        # unused (attention-free)
+    activation="relu_sq",
+)

@@ -1,0 +1,27 @@
+"""The paper's primary contribution: the delta-network (DeltaGRU) algorithm,
+its generalization to arbitrary streamed linear layers, temporal-sparsity
+accounting, threshold policies, and the EdgeDRNN analytical perf model."""
+from repro.core.delta import (DeltaState, delta_encode, delta_encode_sequence,
+                              delta_encode_ste, init_delta_state,
+                              reconstruct_from_deltas)
+from repro.core.delta_dense import (DeltaLinearState, delta_linear,
+                                    delta_linear_reference,
+                                    init_delta_linear_state)
+from repro.core.deltagru import (DeltaGruStackState, GruLayerParams,
+                                 deltagru_sequence, deltagru_step,
+                                 gru_sequence, gru_step, init_deltagru_state,
+                                 init_deltagru_stack_state, init_gru_layer,
+                                 init_gru_stack)
+from repro.core.deltalstm import (LstmLayerParams, deltalstm_sequence,
+                                  deltalstm_step, init_lstm_stack,
+                                  lstm_sequence)
+from repro.core.perf_model import (EDGEDRNN, V5E, AcceleratorSpec,
+                                   TpuChipSpec, batch_sweep,
+                                   delta_unit_latency_cycles,
+                                   dram_traffic_bytes_per_timestep,
+                                   estimate_stack,
+                                   normalized_batch1_throughput,
+                                   tpu_batch1_gru_roofline)
+from repro.core.sparsity import (GruDims, effective_sparsity, fraction_zeros,
+                                 gamma_from_fired)
+from repro.core.thresholds import ThresholdPolicy, dynamic_threshold, q88

@@ -1,0 +1,129 @@
+"""Delta-network state encoding (EdgeDRNN Eq. 2).
+
+The delta network algorithm [Neil et al. 2017; Gao et al. 2020] maintains a
+*state memory* ``s_hat`` alongside every temporally-streamed vector ``s_t``.
+At each timestep an element propagates only if it moved by at least a
+threshold ``theta`` since the last time it propagated:
+
+    delta_i = s_i - s_hat_i          if |s_i - s_hat_i| >= theta else 0
+    s_hat_i = s_i                    if |s_i - s_hat_i| >= theta else s_hat_i
+
+Downstream consumers see the sparse ``delta`` vector; because partial matmul
+results are accumulated in a *delta memory* (see :mod:`repro.core.delta_dense`
+and :mod:`repro.core.deltagru`), the computation stays exact with respect to
+the thresholded state stream.
+
+Everything here is pure JAX (no Python-side state): the state memory is
+threaded explicitly so the encode step can live inside ``jax.lax.scan`` and
+be differentiated through (straight-through estimator on the threshold mask).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class DeltaState(NamedTuple):
+    """State memory for one delta-encoded stream.
+
+    Attributes:
+      memory: the last *propagated* value per element (``s_hat`` in Eq. 2).
+    """
+
+    memory: Array
+
+    @property
+    def shape(self):
+        return self.memory.shape
+
+
+def init_delta_state(shape, dtype=jnp.float32) -> DeltaState:
+    """Zero-initialized state memory (paper: ``x_hat_0 = h_hat_-1 = 0``)."""
+    return DeltaState(memory=jnp.zeros(shape, dtype))
+
+
+class DeltaEncodeOut(NamedTuple):
+    delta: Array        # sparse delta vector (exact value where fired, else 0)
+    state: DeltaState   # updated state memory
+    fired: Array        # bool mask of elements that crossed the threshold
+
+
+def delta_encode(s: Array, state: DeltaState, theta) -> DeltaEncodeOut:
+    """Eq. 2: threshold-gated delta encoding of one timestep.
+
+    Args:
+      s: current raw state vector ``s_t`` (any shape).
+      state: state memory holding ``s_hat_{t-1}``.
+      theta: scalar or broadcastable threshold (>= 0). ``theta == 0``
+        degenerates to plain differencing (exact, dense-ish deltas).
+
+    Returns:
+      ``DeltaEncodeOut(delta, new_state, fired)``.
+    """
+    raw = s - state.memory
+    fired = jnp.abs(raw) >= theta
+    delta = jnp.where(fired, raw, jnp.zeros_like(raw))
+    new_memory = jnp.where(fired, s, state.memory)
+    return DeltaEncodeOut(delta=delta, state=DeltaState(new_memory), fired=fired)
+
+
+def delta_encode_ste(s: Array, state: DeltaState, theta) -> DeltaEncodeOut:
+    """Delta encode with a straight-through estimator for training.
+
+    Forward behaviour is identical to :func:`delta_encode`; the backward pass
+    treats the thresholding as identity (gradients flow to ``s`` as if the
+    delta were ``s - stop_grad(s_hat_{t-1})``). This mirrors the paper's
+    training recipe where the delta operation is included in the forward
+    graph and BPTT flows through the surviving paths.
+    """
+    out = delta_encode(jax.lax.stop_gradient(s), DeltaState(jax.lax.stop_gradient(state.memory)), theta)
+    raw = s - jax.lax.stop_gradient(state.memory)
+    # forward: thresholded delta; backward: d(delta)/d(s) = 1 everywhere.
+    delta = raw + jax.lax.stop_gradient(out.delta - raw)
+    new_memory = out.state.memory
+    return DeltaEncodeOut(delta=delta, state=DeltaState(new_memory), fired=out.fired)
+
+
+def delta_encode_sequence(xs: Array, theta, time_axis: int = 0,
+                          init: DeltaState | None = None):
+    """Delta-encode a whole sequence with ``lax.scan``.
+
+    Args:
+      xs: sequence array with time on ``time_axis``.
+      theta: threshold.
+      time_axis: which axis is time.
+      init: optional initial state memory (defaults to zeros).
+
+    Returns:
+      (deltas, fired, final_state) with deltas/fired shaped like ``xs``.
+    """
+    xs_t = jnp.moveaxis(xs, time_axis, 0)
+    if init is None:
+        init = init_delta_state(xs_t.shape[1:], xs_t.dtype)
+
+    def step(state, x):
+        out = delta_encode(x, state, theta)
+        return out.state, (out.delta, out.fired)
+
+    final_state, (deltas, fired) = jax.lax.scan(step, init, xs_t)
+    deltas = jnp.moveaxis(deltas, 0, time_axis)
+    fired = jnp.moveaxis(fired, 0, time_axis)
+    return deltas, fired, final_state
+
+
+def reconstruct_from_deltas(deltas: Array, time_axis: int = 0,
+                            init: Array | None = None) -> Array:
+    """Inverse of delta encoding: cumulative sum of deltas = ``s_hat`` stream.
+
+    With ``theta == 0`` this reconstructs the original sequence exactly; with
+    ``theta > 0`` it reconstructs the thresholded state-memory trajectory.
+    """
+    d = jnp.moveaxis(deltas, time_axis, 0)
+    if init is not None:
+        d = d.at[0].add(init)
+    s_hat = jnp.cumsum(d, axis=0)
+    return jnp.moveaxis(s_hat, 0, time_axis)

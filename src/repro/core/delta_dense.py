@@ -1,0 +1,81 @@
+"""Delta-linear: the paper's column-skipping trick for *any* linear layer.
+
+For a fixed weight ``W`` applied to a temporally-correlated stream ``x_t``
+(RNN states, autoregressive decode activations, streaming audio frames):
+
+    y_t = W x_t  ==  M_t   where   M_t = M_{t-1} + W (x_t - x_hat_{t-1})
+
+Thresholding the delta makes the matmul's contraction dimension sparse and
+— on real hardware — lets whole blocks of ``W`` stay in HBM unread. This is
+the bridge between the paper's FPGA column skipping and the TPU block
+skipping implemented in :mod:`repro.kernels.delta_spmv`.
+
+``DeltaLinearState`` is carried explicitly so the op composes with
+``lax.scan`` decode loops and with pjit sharding (state shards like the
+activations).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import DeltaState, delta_encode, init_delta_state
+
+Array = jax.Array
+
+
+class DeltaLinearState(NamedTuple):
+    x_mem: DeltaState  # [..., I]   last-propagated input
+    m: Array           # [..., O]   accumulated output (delta memory)
+
+
+def init_delta_linear_state(in_dim: int, out_dim: int, batch_shape=(),
+                            dtype=jnp.float32,
+                            bias: Array | None = None) -> DeltaLinearState:
+    """Init with M = bias (the paper's consume-bias-once convention)."""
+    m0 = jnp.zeros((*batch_shape, out_dim), dtype)
+    if bias is not None:
+        m0 = m0 + bias.astype(dtype)
+    return DeltaLinearState(
+        x_mem=init_delta_state((*batch_shape, in_dim), dtype), m=m0)
+
+
+class DeltaLinearOut(NamedTuple):
+    y: Array
+    state: DeltaLinearState
+    fired_fraction: Array  # scalar: fraction of inputs that fired (1 - Gamma)
+
+
+def delta_linear(w: Array, x: Array, state: DeltaLinearState, theta,
+                 matvec: Callable | None = None) -> DeltaLinearOut:
+    """One streamed application of ``y = W x`` via delta accumulation.
+
+    Args:
+      w: ``[O, I]`` weight.
+      x: ``[..., I]`` current input.
+      state: delta-linear state (input memory + output memory).
+      theta: delta threshold (0 => exact).
+      matvec: optional sparse kernel ``matvec(w, dx) -> [..., O]``.
+    """
+    enc = delta_encode(x, state.x_mem, theta)
+    mv = matvec if matvec is not None else (lambda wt, v: v @ wt.T)
+    m = state.m + mv(w, enc.delta)
+    fired = jnp.mean(enc.fired.astype(jnp.float32))
+    return DeltaLinearOut(y=m, state=DeltaLinearState(enc.state, m),
+                          fired_fraction=fired)
+
+
+def delta_linear_reference(w: Array, xs: Array, theta) -> Array:
+    """Oracle: run the streamed delta-linear over ``xs: [T, ..., I]`` and
+    return ``ys: [T, ..., O]``. At ``theta=0`` equals ``xs @ w.T`` exactly."""
+    state = init_delta_linear_state(w.shape[1], w.shape[0], xs.shape[1:-1],
+                                    xs.dtype)
+
+    def step(st, x):
+        out = delta_linear(w, x, st, theta)
+        return out.state, out.y
+
+    _, ys = jax.lax.scan(step, state, xs)
+    return ys

@@ -1,0 +1,245 @@
+"""DeltaGRU — the paper's core contribution (EdgeDRNN Eq. 1-3), pure JAX.
+
+A DeltaGRU layer keeps, per stream (batch element):
+
+* state memories ``x_hat`` / ``h_hat`` (Eq. 2, :mod:`repro.core.delta`),
+* four *delta memories* ``M_r, M_u, M_xc, M_hc`` holding running partial
+  sums (Eq. 3), initialized to the biases (``M_hc`` to 0),
+* the ordinary hidden state ``h``.
+
+At ``theta_x == theta_h == 0`` a DeltaGRU is bit-for-bit a standard GRU
+(up to float addition reassociation) — the property tests pin this down.
+
+Gate ordering throughout: ``r`` (reset), ``u`` (update), ``c`` (candidate);
+concatenated weights are ``W_x: [3H, I]`` and ``W_h: [3H, H]`` in that order,
+matching the paper's concatenated-column DRAM layout (Fig. 6).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import DeltaState, delta_encode, init_delta_state
+
+Array = jax.Array
+
+
+class GruLayerParams(NamedTuple):
+    w_x: Array  # [3H, I]   gates (r,u,c) stacked on axis 0
+    w_h: Array  # [3H, H]
+    b: Array    # [3H]
+
+    @property
+    def hidden_size(self) -> int:
+        return self.w_h.shape[-1]
+
+    @property
+    def input_size(self) -> int:
+        return self.w_x.shape[-1]
+
+
+def init_gru_layer(key: Array, input_size: int, hidden_size: int,
+                   dtype=jnp.float32) -> GruLayerParams:
+    """Glorot-uniform weights, zero biases."""
+    kx, kh = jax.random.split(key)
+    sx = (6.0 / (input_size + 3 * hidden_size)) ** 0.5
+    sh = (6.0 / (hidden_size + 3 * hidden_size)) ** 0.5
+    return GruLayerParams(
+        w_x=jax.random.uniform(kx, (3 * hidden_size, input_size), dtype, -sx, sx),
+        w_h=jax.random.uniform(kh, (3 * hidden_size, hidden_size), dtype, -sh, sh),
+        b=jnp.zeros((3 * hidden_size,), dtype),
+    )
+
+
+def init_gru_stack(key: Array, input_size: int, hidden_size: int,
+                   num_layers: int, dtype=jnp.float32) -> list[GruLayerParams]:
+    keys = jax.random.split(key, num_layers)
+    layers = []
+    for l, k in enumerate(keys):
+        i = input_size if l == 0 else hidden_size
+        layers.append(init_gru_layer(k, i, hidden_size, dtype))
+    return layers
+
+
+# ---------------------------------------------------------------------------
+# Reference GRU (Eq. 1)
+# ---------------------------------------------------------------------------
+
+def gru_step(params: GruLayerParams, h_prev: Array, x: Array,
+             sigmoid: Callable = jax.nn.sigmoid,
+             tanh: Callable = jnp.tanh) -> Array:
+    """Standard GRU cell update (Eq. 1). ``x: [..., I]``, ``h: [..., H]``."""
+    h_dim = params.hidden_size
+    zx = x @ params.w_x.T + params.b            # [..., 3H]
+    zh = h_prev @ params.w_h.T                  # [..., 3H]
+    rx, ux, cx = jnp.split(zx, 3, axis=-1)
+    rh, uh, ch = jnp.split(zh, 3, axis=-1)
+    r = sigmoid(rx + rh)
+    u = sigmoid(ux + uh)
+    c = tanh(cx + r * ch)
+    del h_dim
+    return (1.0 - u) * c + u * h_prev
+
+
+# ---------------------------------------------------------------------------
+# DeltaGRU (Eq. 2 + 3)
+# ---------------------------------------------------------------------------
+
+class DeltaGruLayerState(NamedTuple):
+    h: Array             # [..., H] hidden state
+    x_mem: DeltaState    # x_hat  [..., I]
+    h_mem: DeltaState    # h_hat  [..., H]
+    m: Array             # [..., 4H] delta memories (M_r, M_u, M_xc, M_hc)
+
+
+def init_deltagru_state(params: GruLayerParams, batch_shape=(),
+                        dtype=None) -> DeltaGruLayerState:
+    """Paper init: ``M_r = b_r, M_u = b_u, M_xc = b_c, M_hc = 0``; states 0.
+
+    Biases are folded into the delta memories up front, which is exactly the
+    paper's "bias as first weight column, consumed once at t=1" trick.
+    """
+    dtype = dtype or params.w_x.dtype
+    h_dim, i_dim = params.hidden_size, params.input_size
+    b_r, b_u, b_c = jnp.split(params.b.astype(dtype), 3)
+    m0 = jnp.concatenate([b_r, b_u, b_c, jnp.zeros((h_dim,), dtype)])
+    m0 = jnp.broadcast_to(m0, (*batch_shape, 4 * h_dim))
+    return DeltaGruLayerState(
+        h=jnp.zeros((*batch_shape, h_dim), dtype),
+        x_mem=init_delta_state((*batch_shape, i_dim), dtype),
+        h_mem=init_delta_state((*batch_shape, h_dim), dtype),
+        m=m0,
+    )
+
+
+class DeltaGruStepOut(NamedTuple):
+    h: Array
+    state: DeltaGruLayerState
+    delta_x: Array   # the (sparse) encoded input delta actually used
+    delta_h: Array   # the (sparse) encoded hidden delta actually used
+
+
+def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
+                  theta_x, theta_h,
+                  sigmoid: Callable = jax.nn.sigmoid,
+                  tanh: Callable = jnp.tanh,
+                  matvec: Callable | None = None) -> DeltaGruStepOut:
+    """One DeltaGRU timestep (Eq. 3).
+
+    Args:
+      matvec: optional override ``matvec(w, delta) -> product`` used by the
+        Pallas block-sparse kernel path; defaults to a dense matmul (XLA will
+        not exploit the zeros, but semantics are identical).
+    """
+    h_dim = params.hidden_size
+    dx_out = delta_encode(x, state.x_mem, theta_x)
+    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+    dx, dh = dx_out.delta, dh_out.delta
+
+    mv = matvec if matvec is not None else (lambda w, v: v @ w.T)
+    zx = mv(params.w_x, dx)                     # [..., 3H] = W_x @ dx
+    zh = mv(params.w_h, dh)                     # [..., 3H] = W_h @ dh
+
+    m_r, m_u, m_xc, m_hc = jnp.split(state.m, 4, axis=-1)
+    zxr, zxu, zxc = jnp.split(zx, 3, axis=-1)
+    zhr, zhu, zhc = jnp.split(zh, 3, axis=-1)
+
+    m_r = m_r + zxr + zhr
+    m_u = m_u + zxu + zhu
+    m_xc = m_xc + zxc
+    m_hc = m_hc + zhc
+
+    r = sigmoid(m_r)
+    u = sigmoid(m_u)
+    c = tanh(m_xc + r * m_hc)
+    h = (1.0 - u) * c + u * state.h
+    del h_dim
+
+    new_state = DeltaGruLayerState(
+        h=h, x_mem=dx_out.state, h_mem=dh_out.state,
+        m=jnp.concatenate([m_r, m_u, m_xc, m_hc], axis=-1),
+    )
+    return DeltaGruStepOut(h=h, state=new_state, delta_x=dx, delta_h=dh)
+
+
+# ---------------------------------------------------------------------------
+# Multi-layer stacks over sequences
+# ---------------------------------------------------------------------------
+
+class DeltaGruStackState(NamedTuple):
+    layers: tuple  # tuple[DeltaGruLayerState, ...]
+
+
+def init_deltagru_stack_state(params: Sequence[GruLayerParams], batch_shape=(),
+                              dtype=None) -> DeltaGruStackState:
+    return DeltaGruStackState(
+        layers=tuple(init_deltagru_state(p, batch_shape, dtype) for p in params))
+
+
+def deltagru_stack_step(params: Sequence[GruLayerParams],
+                        state: DeltaGruStackState, x: Array,
+                        theta_x, theta_h, **kw):
+    """One timestep through all layers. Per paper Sec. II-C the *input*
+    threshold of layers >= 2 is ``theta_x`` applied to the previous layer's
+    output stream (those deltas count toward Gamma_dx in Eq. 4)."""
+    new_layers = []
+    deltas = []
+    inp = x
+    for p, st in zip(params, state.layers):
+        out = deltagru_step(p, st, inp, theta_x, theta_h, **kw)
+        new_layers.append(out.state)
+        deltas.append((out.delta_x, out.delta_h))
+        inp = out.h
+    return inp, DeltaGruStackState(tuple(new_layers)), deltas
+
+
+def deltagru_sequence(params: Sequence[GruLayerParams], xs: Array,
+                      theta_x, theta_h,
+                      init_state: DeltaGruStackState | None = None,
+                      collect_sparsity: bool = True, **kw):
+    """Run a DeltaGRU stack over ``xs: [T, B, I]`` with ``lax.scan``.
+
+    Returns (ys ``[T, B, H]``, final_state, stats) where stats holds measured
+    per-layer firing fractions for Eq. 4 if ``collect_sparsity``.
+    """
+    if init_state is None:
+        init_state = init_deltagru_stack_state(params, xs.shape[1:-1], xs.dtype)
+
+    def step(state, x):
+        y, new_state, deltas = deltagru_stack_step(params, state, x,
+                                                   theta_x, theta_h, **kw)
+        if collect_sparsity:
+            stats = tuple((jnp.mean((dx == 0).astype(jnp.float32)),
+                           jnp.mean((dh == 0).astype(jnp.float32)))
+                          for dx, dh in deltas)
+        else:
+            stats = ()
+        return new_state, (y, stats)
+
+    final_state, (ys, stats) = jax.lax.scan(step, init_state, xs)
+    if collect_sparsity:
+        gamma_dx = jnp.mean(jnp.stack([jnp.mean(s[0]) for s in stats]))
+        gamma_dh = jnp.mean(jnp.stack([jnp.mean(s[1]) for s in stats]))
+        return ys, final_state, {"gamma_dx": gamma_dx, "gamma_dh": gamma_dh,
+                                 "per_layer": stats}
+    return ys, final_state, {}
+
+
+def gru_sequence(params: Sequence[GruLayerParams], xs: Array, **kw):
+    """Reference multi-layer GRU over ``xs: [T, B, I]`` (Eq. 1 oracle)."""
+    batch_shape = xs.shape[1:-1]
+    h0 = tuple(jnp.zeros((*batch_shape, p.hidden_size), xs.dtype) for p in params)
+
+    def step(hs, x):
+        new_hs = []
+        inp = x
+        for p, h in zip(params, hs):
+            h = gru_step(p, h, inp, **kw)
+            new_hs.append(h)
+            inp = h
+        return tuple(new_hs), inp
+
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys

@@ -1,0 +1,144 @@
+"""DeltaLSTM — the delta-network algorithm applied to LSTM cells.
+
+The paper benchmarks an LSTM on NCS2 (Table VII) and the delta method
+originates from Neil et al. 2017 where it was applied to LSTM-family cells;
+we provide it so the framework covers both gated-RNN families. Gate order:
+``i`` (input), ``f`` (forget), ``g`` (candidate), ``o`` (output);
+``W_x: [4H, I]``, ``W_h: [4H, H]``.
+
+Delta memories: ``M = W_x dx + W_h dh + M_prev`` per gate pre-activation —
+the same bookkeeping as DeltaGRU but with four gates and a cell state ``c``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta import DeltaState, delta_encode, init_delta_state
+
+Array = jax.Array
+
+
+class LstmLayerParams(NamedTuple):
+    w_x: Array  # [4H, I]
+    w_h: Array  # [4H, H]
+    b: Array    # [4H]
+
+    @property
+    def hidden_size(self) -> int:
+        return self.w_h.shape[-1]
+
+    @property
+    def input_size(self) -> int:
+        return self.w_x.shape[-1]
+
+
+def init_lstm_layer(key: Array, input_size: int, hidden_size: int,
+                    dtype=jnp.float32, forget_bias: float = 1.0) -> LstmLayerParams:
+    kx, kh = jax.random.split(key)
+    sx = (6.0 / (input_size + 4 * hidden_size)) ** 0.5
+    sh = (6.0 / (hidden_size + 4 * hidden_size)) ** 0.5
+    b = jnp.zeros((4 * hidden_size,), dtype)
+    b = b.at[hidden_size:2 * hidden_size].set(forget_bias)
+    return LstmLayerParams(
+        w_x=jax.random.uniform(kx, (4 * hidden_size, input_size), dtype, -sx, sx),
+        w_h=jax.random.uniform(kh, (4 * hidden_size, hidden_size), dtype, -sh, sh),
+        b=b,
+    )
+
+
+def init_lstm_stack(key: Array, input_size: int, hidden_size: int,
+                    num_layers: int, dtype=jnp.float32) -> list[LstmLayerParams]:
+    keys = jax.random.split(key, num_layers)
+    return [init_lstm_layer(k, input_size if l == 0 else hidden_size,
+                            hidden_size, dtype)
+            for l, k in enumerate(keys)]
+
+
+def lstm_step(params: LstmLayerParams, carry, x: Array,
+              sigmoid: Callable = jax.nn.sigmoid, tanh: Callable = jnp.tanh):
+    """Reference LSTM cell. ``carry = (h, c)``."""
+    h_prev, c_prev = carry
+    z = x @ params.w_x.T + h_prev @ params.w_h.T + params.b
+    zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
+    i, f, o = sigmoid(zi), sigmoid(zf), sigmoid(zo)
+    g = tanh(zg)
+    c = f * c_prev + i * g
+    h = o * tanh(c)
+    return (h, c)
+
+
+class DeltaLstmLayerState(NamedTuple):
+    h: Array
+    c: Array
+    x_mem: DeltaState
+    h_mem: DeltaState
+    m: Array  # [..., 4H]
+
+
+def init_deltalstm_state(params: LstmLayerParams, batch_shape=(),
+                         dtype=None) -> DeltaLstmLayerState:
+    dtype = dtype or params.w_x.dtype
+    h_dim, i_dim = params.hidden_size, params.input_size
+    m0 = jnp.broadcast_to(params.b.astype(dtype), (*batch_shape, 4 * h_dim))
+    z = jnp.zeros((*batch_shape, h_dim), dtype)
+    return DeltaLstmLayerState(
+        h=z, c=z, x_mem=init_delta_state((*batch_shape, i_dim), dtype),
+        h_mem=init_delta_state((*batch_shape, h_dim), dtype), m=m0)
+
+
+def deltalstm_step(params: LstmLayerParams, state: DeltaLstmLayerState,
+                   x: Array, theta_x, theta_h,
+                   sigmoid: Callable = jax.nn.sigmoid,
+                   tanh: Callable = jnp.tanh,
+                   matvec: Callable | None = None):
+    dx_out = delta_encode(x, state.x_mem, theta_x)
+    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+    mv = matvec if matvec is not None else (lambda w, v: v @ w.T)
+    m = state.m + mv(params.w_x, dx_out.delta) + mv(params.w_h, dh_out.delta)
+    zi, zf, zg, zo = jnp.split(m, 4, axis=-1)
+    i, f, o = sigmoid(zi), sigmoid(zf), sigmoid(zo)
+    g = tanh(zg)
+    c = f * state.c + i * g
+    h = o * tanh(c)
+    new_state = DeltaLstmLayerState(h=h, c=c, x_mem=dx_out.state,
+                                    h_mem=dh_out.state, m=m)
+    return h, new_state, (dx_out.delta, dh_out.delta)
+
+
+def deltalstm_sequence(params: Sequence[LstmLayerParams], xs: Array,
+                       theta_x, theta_h, **kw):
+    """Multi-layer DeltaLSTM over ``xs: [T, B, I]``."""
+    batch_shape = xs.shape[1:-1]
+    init = tuple(init_deltalstm_state(p, batch_shape, xs.dtype) for p in params)
+
+    def step(states, x):
+        inp = x
+        new_states = []
+        for p, st in zip(params, states):
+            inp, ns, _ = deltalstm_step(p, st, inp, theta_x, theta_h, **kw)
+            new_states.append(ns)
+        return tuple(new_states), inp
+
+    final, ys = jax.lax.scan(step, init, xs)
+    return ys, final
+
+
+def lstm_sequence(params: Sequence[LstmLayerParams], xs: Array, **kw):
+    batch_shape = xs.shape[1:-1]
+    init = tuple((jnp.zeros((*batch_shape, p.hidden_size), xs.dtype),) * 2
+                 for p in params)
+
+    def step(carries, x):
+        inp = x
+        new = []
+        for p, hc in zip(params, carries):
+            hc = lstm_step(p, hc, inp, **kw)
+            new.append(hc)
+            inp = hc[0]
+        return tuple(new), inp
+
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys

@@ -1,0 +1,73 @@
+"""Temporal-sparsity metrics (EdgeDRNN Eq. 4) and op counting (Eq. 7 numerator).
+
+``Gamma`` (Γ) is the fraction of zeros in delta vectors. The *effective*
+sparsity weights Γ_Δx and Γ_Δh by the number of parameters each one gates:
+a zero in Δx skips a column of the (3H × I)-ish input weight block, a zero in
+Δh skips a column of the (3H × H) recurrent block.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def fraction_zeros(x: Array) -> Array:
+    """Fraction of exactly-zero elements (a delta that fired is a.s. nonzero)."""
+    return jnp.mean((x == 0).astype(jnp.float32))
+
+
+def gamma_from_fired(fired: Array) -> Array:
+    """Sparsity from a boolean 'fired' mask: Γ = mean(!fired)."""
+    return 1.0 - jnp.mean(fired.astype(jnp.float32))
+
+
+@dataclass(frozen=True)
+class GruDims:
+    """Dimensions of an L-layer GRU/DeltaGRU stack (uniform hidden size)."""
+
+    input_size: int   # I
+    hidden_size: int  # H
+    num_layers: int   # L
+
+    @property
+    def params_per_timestep_ops(self) -> int:
+        """Total MAC*2 (multiply + add) op count per timestep (Eq. 7 'Op').
+
+        Op = 2 * (3HI + 3H^2(L-1) + 3H^2 L): input weights of layer 1 are
+        (3H x I), input weights of layers 2..L are (3H x H), and every layer
+        has recurrent weights (3H x H) plus the extra 1x (W_hc) fold that the
+        paper counts inside 3H^2L.
+        """
+        i, h, l = self.input_size, self.hidden_size, self.num_layers
+        return 2 * (3 * h * i + 3 * h * h * (l - 1) + 3 * h * h * l)
+
+    @property
+    def n_params(self) -> int:
+        """Weight parameter count (biases negligible, per the paper)."""
+        i, h, l = self.input_size, self.hidden_size, self.num_layers
+        return 3 * h * i + 3 * h * h * (l - 1) + 3 * h * h * l
+
+
+def effective_sparsity(dims: GruDims, gamma_dx: float, gamma_dh: float) -> float:
+    """Eq. 4 Γ_eff: parameter-weighted average of input/hidden sparsity."""
+    i, h, l = dims.input_size, dims.hidden_size, dims.num_layers
+    num = (i + h * (l - 1)) * gamma_dx + h * l * gamma_dh
+    den = i + h * (l - 1) + h * l
+    return num / den
+
+
+def measure_layer_sparsity(delta_x: Array, delta_h: Array) -> tuple[Array, Array]:
+    """Measured (Γ_Δx, Γ_Δh) for one layer over a [T, ...] delta sequence."""
+    return fraction_zeros(delta_x), fraction_zeros(delta_h)
+
+
+def stack_sparsity(per_layer_dx: Sequence[Array], per_layer_dh: Sequence[Array]) -> tuple[Array, Array]:
+    """Aggregate per-layer Γ into stack-level Γ_Δx / Γ_Δh (Eq. 4 averages)."""
+    gdx = jnp.mean(jnp.stack([jnp.asarray(g) for g in per_layer_dx]))
+    gdh = jnp.mean(jnp.stack([jnp.asarray(g) for g in per_layer_dh]))
+    return gdx, gdh

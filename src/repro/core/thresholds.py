@@ -1,0 +1,64 @@
+"""Delta-threshold policies.
+
+The paper's contribution #2 is *dual thresholds* — separate Θ_x (input) and
+Θ_h (hidden) — and its conclusion points at *dynamic* Θ scheduling as future
+work ("instantaneous trade-off of accuracy versus latency"). Both are
+first-class here:
+
+* :class:`ThresholdPolicy` — static per-layer (Θ_x, Θ_h) in either float or
+  the paper's Q8.8 integer convention (Θ=64 == 0.25).
+* :func:`dynamic_threshold` — a latency-budget controller that scales Θ by
+  the ratio of measured to target firing rate (the paper's proposed "guided
+  search", closed-loop form).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+Q88_SCALE = 256.0  # paper quotes thresholds as Q8.8 integers: 64 -> 0.25
+
+
+def q88(theta_int: float) -> float:
+    """Convert a paper-style Q8.8 integer threshold to float."""
+    return theta_int / Q88_SCALE
+
+
+@dataclass(frozen=True)
+class ThresholdPolicy:
+    """Static dual-threshold policy, optionally per-layer."""
+
+    theta_x: float = 0.0
+    theta_h: float = 0.0
+    per_layer_x: tuple = field(default=())  # overrides, one per layer
+    per_layer_h: tuple = field(default=())
+
+    def layer(self, idx: int) -> tuple[float, float]:
+        tx = self.per_layer_x[idx] if idx < len(self.per_layer_x) else self.theta_x
+        th = self.per_layer_h[idx] if idx < len(self.per_layer_h) else self.theta_h
+        return tx, th
+
+    @classmethod
+    def global_q88(cls, theta_int: float) -> "ThresholdPolicy":
+        t = q88(theta_int)
+        return cls(theta_x=t, theta_h=t)
+
+    @classmethod
+    def dual_q88(cls, theta_x_int: float, theta_h_int: float) -> "ThresholdPolicy":
+        return cls(theta_x=q88(theta_x_int), theta_h=q88(theta_h_int))
+
+
+def dynamic_threshold(theta, fired_fraction, target_fired_fraction,
+                      gain: float = 0.5, theta_min: float = 0.0,
+                      theta_max: float = 1.0):
+    """Closed-loop Θ controller (multiplicative-increase on overshoot).
+
+    ``theta <- clip(theta * (fired/target)^gain)``: if the stream fires more
+    than the latency budget allows, raise the threshold; if it underfires,
+    lower it and recover accuracy. Pure jnp so it can run inside a jitted
+    serving step.
+    """
+    ratio = (fired_fraction + 1e-6) / (target_fired_fraction + 1e-6)
+    new_theta = theta * ratio ** gain
+    return jnp.clip(new_theta, theta_min, theta_max)

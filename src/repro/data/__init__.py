@@ -1,0 +1,3 @@
+"""Data substrate: synthetic TIDIGITS-like / SensorsGas-like generators
+(offline container — no dataset downloads), LM token streams, and a
+prefetching host pipeline with mesh-sharded device feeding."""

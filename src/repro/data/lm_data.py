@@ -1,0 +1,53 @@
+"""Synthetic LM token streams + modality stubs for the assigned archs.
+
+Tokens follow a Zipf-ish unigram mixed with injected repeated n-grams so the
+stream is compressible (non-degenerate loss curves) and deterministic per
+key. Modality stubs emit the precomputed embeddings the frontends would
+produce (per the assignment: frontends are stubs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("batch", "seq", "vocab"))
+def token_batch(key: Array, batch: int, seq: int, vocab: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Zipf via inverse-CDF on uniform (alpha ~ 1.1)
+    u = jax.random.uniform(k1, (batch, seq), minval=1e-6)
+    ranks = jnp.clip((u ** (-1.0 / 1.1)), 1, vocab) - 1
+    tokens = ranks.astype(jnp.int32)
+    # inject periodic repeated bigrams for structure
+    rep = jax.random.randint(k2, (batch, seq), 0, vocab // 64 + 2)
+    use_rep = jax.random.bernoulli(k3, 0.3, (batch, seq))
+    return jnp.where(use_rep, rep, tokens)
+
+
+def lm_batch(key: Array, cfg: ModelConfig, batch: int, seq: int,
+             dtype=jnp.float32):
+    """Full batch dict for any registry arch (tokens + modality stubs)."""
+    out = {"tokens": token_batch(key, batch, seq, cfg.vocab)}
+    if cfg.cross_attn_every:
+        out["image_embeds"] = jax.random.normal(
+            jax.random.fold_in(key, 1),
+            (batch, cfg.n_image_tokens, cfg.vision_dim or cfg.d_model),
+            dtype) * 0.02
+    if cfg.encdec:
+        out["audio_frames"] = jax.random.normal(
+            jax.random.fold_in(key, 2),
+            (batch, cfg.n_audio_frames, cfg.audio_dim or 80), dtype)
+    return out
+
+
+def lm_batch_stream(key: Array, cfg: ModelConfig, batch: int, seq: int):
+    i = 0
+    while True:
+        yield lm_batch(jax.random.fold_in(key, i), cfg, batch, seq)
+        i += 1

@@ -1,0 +1,115 @@
+"""Synthetic stand-ins for the paper's datasets.
+
+The container is offline, so we synthesize datasets with the *statistical
+properties that matter to the paper's claims*:
+
+* ``digits``: TIDIGITS-like spoken-digit sequences — each digit class is a
+  smooth formant trajectory in a 40-dim filter-bank space; sequences carry
+  1..7 digits with silences. Temporally smooth => realistic delta sparsity;
+  CTC-trainable.
+* ``gas``: SensorsGas-like regression — a slow latent CO concentration
+  (Ornstein-Uhlenbeck) drives 14 metal-oxide-ish sensors through per-sensor
+  power-law responses, baseline drift and noise. The slow dynamics are what
+  give the paper's Θ_x/Θ_h study its structure.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+N_DIGIT_CLASSES = 11   # 'oh', zero..nine
+N_FEATS = 40
+N_SENSORS = 14
+
+
+# ---------------------------------------------------------------------------
+# TIDIGITS-like
+# ---------------------------------------------------------------------------
+
+def _digit_template(digit: Array, t_frac: Array) -> Array:
+    """[.., N_FEATS] formant pattern for a digit at relative time t_frac."""
+    mel = jnp.arange(N_FEATS, dtype=jnp.float32)
+    # two "formants" whose center and slope depend on the digit id
+    c1 = 4.0 + 2.5 * (digit % 4).astype(jnp.float32) + 6.0 * t_frac
+    c2 = 18.0 + 1.7 * (digit % 7).astype(jnp.float32) - 4.0 * t_frac \
+        + 3.0 * jnp.sin(2 * jnp.pi * t_frac * (1 + (digit % 3).astype(jnp.float32)))
+    w1 = (1.5 + 0.3 * (digit % 2).astype(jnp.float32))[..., None]
+    bump = lambda c, w: jnp.exp(-0.5 * jnp.square((mel - c[..., None]) / w))
+    return 2.0 * bump(c1, w1) + 1.5 * bump(c2, 2.0)
+
+
+@partial(jax.jit, static_argnames=("batch", "max_t", "max_l"))
+def digit_batch(key: Array, batch: int = 32, max_t: int = 96, max_l: int = 7):
+    """Returns dict(features [T,B,40], labels [B,L], in_lens, lab_lens)."""
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    lab_lens = jax.random.randint(k1, (batch,), 1, max_l + 1)
+    labels = jax.random.randint(k2, (batch, max_l), 0, N_DIGIT_CLASSES)
+    # digit durations (frames); silence gaps of 2
+    dur = jax.random.randint(k3, (batch, max_l), 8, 13)
+    gap = 2
+    active = jnp.arange(max_l)[None] < lab_lens[:, None]
+    dur = dur * active
+    starts = jnp.cumsum(dur + gap * active, axis=1) - dur
+    in_lens = jnp.clip(jnp.sum(dur + gap * active, axis=1) + 4, 0, max_t)
+
+    tpos = jnp.arange(max_t, dtype=jnp.float32)                # [T]
+
+    def seq_features(lbl, st, du):
+        # [T, L]: relative position of t within each digit segment
+        rel = (tpos[:, None] - st[None]) / jnp.maximum(du[None], 1)
+        inside = (rel >= 0) & (rel < 1) & (du[None] > 0)
+        tpl = _digit_template(lbl[None, :], jnp.clip(rel, 0, 1))  # [T, L, F]
+        return jnp.sum(tpl * inside[..., None], axis=1)           # [T, F]
+
+    feats = jax.vmap(seq_features)(labels, starts, dur)           # [B, T, F]
+    noise = 0.08 * jax.random.normal(k4, feats.shape)
+    # smooth channel-correlated noise floor (room tone)
+    floor = 0.1 * jax.random.normal(k5, (batch, 1, N_FEATS))
+    feats = jnp.moveaxis(feats + noise + floor, 0, 1)             # [T, B, F]
+    labels_ctc = labels + 1                                       # 0 = blank
+    return {"features": feats, "labels": labels_ctc,
+            "in_lens": in_lens.astype(jnp.int32),
+            "lab_lens": lab_lens.astype(jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# SensorsGas-like
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("batch", "t_len"))
+def gas_batch(key: Array, batch: int = 16, t_len: int = 256):
+    """Returns dict(features [T,B,14], targets [T,B,1])."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # latent concentration: OU process, slow (tau ~ 40 steps)
+    eps = jax.random.normal(k1, (t_len, batch))
+
+    def ou(c, e):
+        c = c + 0.025 * (2.0 - c) + 0.15 * e
+        return c, c
+
+    c0 = 2.0 + jax.random.normal(k2, (batch,)) * 0.5
+    _, conc = jax.lax.scan(ou, c0, eps)                  # [T, B]
+    conc = jnp.abs(conc)
+
+    # per-sensor response: r_i = a_i * c^p_i + drift + noise
+    a = 0.5 + jax.random.uniform(k3, (N_SENSORS,))
+    p = 0.4 + 0.5 * jax.random.uniform(jax.random.fold_in(k3, 1), (N_SENSORS,))
+    drift = 0.05 * jnp.cumsum(
+        jax.random.normal(k4, (t_len, batch, N_SENSORS)) * 0.02, axis=0)
+    resp = a * jnp.power(conc[..., None] + 1e-3, p) + drift
+    resp = resp + 0.02 * jax.random.normal(jax.random.fold_in(k4, 1),
+                                           resp.shape)
+    return {"features": resp.astype(jnp.float32),
+            "targets": conc[..., None].astype(jnp.float32)}
+
+
+def batch_stream(gen, key: Array, **kw):
+    """Infinite generator of batches with fresh keys."""
+    i = 0
+    while True:
+        yield gen(jax.random.fold_in(key, i), **kw)
+        i += 1

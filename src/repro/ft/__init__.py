@@ -1,0 +1,3 @@
+"""Fault tolerance: sharded/async/atomic checkpoints with resharding
+restore, heartbeat-based failure detection, straggler mitigation, and
+crash-consistent restart."""

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+- ``delta_spmv``: the paper's column-skipping sparse MxV, adapted to
+  128-wide block skipping with scalar-prefetch DMA remapping.
+- ``deltagru_act``: the fused Fig.-7 activation pipeline.
+- ``rwkv6_scan`` / ``rglru_scan``: recurrent-state scans for the assigned
+  SSM/hybrid architectures (state held in VMEM scratch across grid steps).
+
+Use :mod:`repro.kernels.ops` wrappers; :mod:`repro.kernels.ref` holds the
+pure-jnp oracles.
+"""

@@ -1,0 +1,226 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests sweep against; they are also the
+fallback execution path on backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# delta_spmv: block-column-skipped matvec  y = W @ dx  (+ acc)
+# ---------------------------------------------------------------------------
+
+def delta_spmv_ref(w: Array, dx: Array, acc: Array | None = None,
+                   block_k: int = 128) -> Array:
+    """Oracle for the block-sparse delta matvec.
+
+    ``w: [O, I]``, ``dx: [B, I]`` sparse delta vectors, ``acc: [B, O]``.
+    Semantics: contributions come only from k-blocks in which *any* batch
+    element fired (matching the hardware's block-skip granularity); blocks
+    that are entirely zero contribute nothing either way, so the result
+    equals the dense product whenever block skipping is sound.
+    """
+    out = dx @ w.T
+    return out if acc is None else acc + out
+
+
+def block_fire_mask(dx: Array, block_k: int = 128) -> Array:
+    """[num_blocks] bool: does any element in k-block b (any batch row) fire?"""
+    b, i = dx.shape
+    nb = (i + block_k - 1) // block_k
+    pad = nb * block_k - i
+    d = jnp.pad(dx, ((0, 0), (0, pad)))
+    d = d.reshape(b, nb, block_k)
+    return jnp.any(d != 0, axis=(0, 2))
+
+
+# ---------------------------------------------------------------------------
+# deltagru_act: the fused GRU activation pipeline (paper Fig. 7)
+# ---------------------------------------------------------------------------
+
+def deltagru_act_ref(m_prev: Array, zx: Array, zh: Array, h_prev: Array):
+    """Oracle for the fused pointwise DeltaGRU update.
+
+    Inputs: ``m_prev: [B, 4H]`` delta memories, ``zx: [B, 3H] = W_x dx``,
+    ``zh: [B, 3H] = W_h dh``, ``h_prev: [B, H]``.
+    Returns ``(m_new: [B, 4H], h_new: [B, H])`` per Eq. 3.
+    """
+    h = h_prev.shape[-1]
+    m_r, m_u, m_xc, m_hc = (m_prev[..., :h], m_prev[..., h:2 * h],
+                            m_prev[..., 2 * h:3 * h], m_prev[..., 3 * h:])
+    zxr, zxu, zxc = zx[..., :h], zx[..., h:2 * h], zx[..., 2 * h:]
+    zhr, zhu, zhc = zh[..., :h], zh[..., h:2 * h], zh[..., 2 * h:]
+    m_r = m_r + zxr + zhr
+    m_u = m_u + zxu + zhu
+    m_xc = m_xc + zxc
+    m_hc = m_hc + zhc
+    r = jax.nn.sigmoid(m_r)
+    u = jax.nn.sigmoid(m_u)
+    c = jnp.tanh(m_xc + r * m_hc)
+    h_new = (1.0 - u) * c + u * h_prev
+    m_new = jnp.concatenate([m_r, m_u, m_xc, m_hc], axis=-1)
+    return m_new, h_new
+
+
+# ---------------------------------------------------------------------------
+# rwkv6_scan: WKV6 linear-attention recurrence (data-dependent decay)
+# ---------------------------------------------------------------------------
+
+def rwkv6_scan_ref(r: Array, k: Array, v: Array, w: Array, u: Array,
+                   s0: Array | None = None):
+    """Oracle WKV6 recurrence.
+
+    Shapes (single head): ``r,k,v,w: [T, D]``, ``u: [D]`` (bonus),
+    state ``S: [D, D]`` (key-dim x value-dim). Per step t:
+
+        y_t = (S + u_t) @ ... :  y_t[j] = sum_i r_t[i] * (S[i,j] + u[i]*k_t[i]*v_t[j])
+        S   = diag(w_t) S + k_t^T v_t   (outer product update)
+
+    Returns ``(y: [T, D], S_T)``. ``w`` here is the *decay factor* in (0,1)
+    (callers apply ``exp(-softplus(..))`` upstream).
+    """
+    d = r.shape[-1]
+    s = jnp.zeros((d, d), r.dtype) if s0 is None else s0
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.outer(k_t, v_t)                      # [D, D]
+        y = r_t @ (s + u[:, None] * kv)               # [D]
+        s = w_t[:, None] * s + kv
+        return s, y
+
+    s_final, ys = jax.lax.scan(step, s, (r, k, v, w))
+    return ys, s_final
+
+
+def rwkv6_scan_batched_ref(r, k, v, w, u, s0=None):
+    """Batched/multi-head oracle: ``r,k,v,w: [B, H, T, D]``, ``u: [H, D]``."""
+    def one(rr, kk, vv, ww, uu, ss):
+        return rwkv6_scan_ref(rr, kk, vv, ww, uu, ss)
+    b, h, t, d = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), r.dtype)
+    fn = jax.vmap(jax.vmap(one, in_axes=(0, 0, 0, 0, 0, 0)),
+                  in_axes=(0, 0, 0, 0, None, 0))
+    return fn(r, k, v, w, u, s0)
+
+
+# ---------------------------------------------------------------------------
+# rglru_scan: Real-Gated Linear Recurrent Unit (RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def rglru_scan_ref(x: Array, a: Array, h0: Array | None = None):
+    """Oracle RG-LRU diagonal recurrence.
+
+    ``x: [T, D]`` gated inputs, ``a: [T, D]`` per-step decay in (0, 1).
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t   (Griffin Eq. 4 normalizer)
+    Returns (h: [T, D], h_T).
+    """
+    d = x.shape[-1]
+    h = jnp.zeros((d,), x.dtype) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, a_t = inp
+        h = a_t * h + jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 0.0)) * x_t
+        return h, h
+
+    h_final, hs = jax.lax.scan(step, h, (x, a))
+    return hs, h_final
+
+
+def rglru_scan_batched_ref(x, a, h0=None):
+    """``x, a: [B, T, D]``."""
+    b, t, d = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, d), x.dtype)
+    return jax.vmap(rglru_scan_ref)(x, a, h0)
+
+
+def rwkv6_chunked_ref(r: Array, k: Array, v: Array, w: Array, u: Array,
+                      s0: Array | None = None, chunk: int = 16):
+    """Chunk-parallel WKV6 (beyond-paper §Perf optimization).
+
+    Mathematically identical to :func:`rwkv6_scan_ref` but restructured so
+    the recurrence crosses chunk boundaries only: within a chunk of length
+    ``C`` the contribution becomes a masked ``[C, C]`` score contraction
+    plus two matmuls against the carried state. Arithmetic intensity goes
+    from O(1) ops/byte (per-step scan) to O(C) — the same HBM<->on-chip
+    blocking argument EdgeDRNN makes for its delta memories.
+
+    Let ``La_t = sum_{tau<=t} log w_tau`` (per key dim). All exponentials
+    used are ``exp(La_a - La_b)`` with ``a >= b`` ... <= 0, so no overflow.
+
+    Shapes: ``r,k,v,w: [B, H, T, D]``, ``u: [H, D]``; returns
+    ``(y: [B,H,T,D], s_T: [B,H,D,D])``. T must be a multiple of ``chunk``
+    (callers pad with w=1, k=0).
+    """
+    b, h, t, d = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    assert t % chunk == 0
+    n = t // chunk
+
+    def chunk_shape(x):
+        return x.reshape(b, h, n, chunk, d).astype(jnp.float32)
+
+    rc, kc, vc, wc = map(chunk_shape, (r, k, v, w))
+    la = jnp.cumsum(jnp.log(jnp.maximum(wc, 1e-38)), axis=3)  # [B,H,N,C,D]
+    la_prev = jnp.pad(la, ((0, 0),) * 3 + ((1, 0), (0, 0)))[..., :chunk, :]
+
+    # intra-chunk: scores[t,j] = sum_d r_t k_j exp(La_{t-1} - La_j), j < t
+    expdiff = jnp.exp(la_prev[..., :, None, :] - la[..., None, :, :])
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.einsum("bhntd,bhnjd,bhntjd->bhntj", rc, kc,
+                        jnp.where(mask[None, None, None, ..., None],
+                                  expdiff, 0.0))
+    y_intra = jnp.einsum("bhntj,bhnjd->bhntd", scores, vc)
+    # diagonal bonus: y_t += (r_t . (u * k_t)) v_t
+    y_bonus = jnp.sum(rc * u[None, :, None, None, :] * kc, -1,
+                      keepdims=True) * vc
+
+    # cross-chunk: scan over chunks carrying S
+    r_tilde = rc * jnp.exp(la_prev)                       # [B,H,N,C,D]
+    k_out = kc * jnp.exp(la[..., -1:, :] - la)            # decay to chunk end
+    a_end = jnp.exp(la[..., -1, :])                       # [B,H,N,D]
+
+    def body(s, inp):
+        rt, ko, vcc, ae = inp                             # per-chunk slices
+        y_cross = jnp.einsum("bhtd,bhdv->bhtv", rt, s)
+        s = ae[..., None] * s + jnp.einsum("bhtd,bhtv->bhdv", ko, vcc)
+        return s, y_cross
+
+    s_final, y_cross = jax.lax.scan(
+        body, s0.astype(jnp.float32),
+        (jnp.moveaxis(r_tilde, 2, 0), jnp.moveaxis(k_out, 2, 0),
+         jnp.moveaxis(vc, 2, 0), jnp.moveaxis(a_end, 2, 0)))
+    y = y_intra + y_bonus + jnp.moveaxis(y_cross, 0, 2)
+    return y.reshape(b, h, t, d).astype(r.dtype), s_final
+
+
+def rglru_assoc_ref(x: Array, a: Array, h0: Array | None = None):
+    """RG-LRU via ``associative_scan`` (§Perf hillclimb path).
+
+    The diagonal linear recurrence ``h_t = a_t h_{t-1} + b_t`` is associative
+    under ``(a1,b1)x(a2,b2) = (a1 a2, a2 b1 + b2)``; a log-depth scan makes
+    O(log T) full-tensor passes instead of T per-step state round-trips —
+    the memory-roofline fix for the train/prefill shapes. Decay products
+    stay in (0,1): numerically safe. Exactly equal to rglru_scan_ref.
+    """
+    b_dim, t, d = x.shape
+    bt = jnp.sqrt(jnp.maximum(1.0 - a * a, 0.0)) * x
+    if h0 is not None:
+        # fold h0 in as a virtual step 0 contribution
+        bt = bt.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a, bt), axis=1)
+    return hs, hs[:, -1]

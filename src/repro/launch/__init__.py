@@ -1,0 +1,2 @@
+"""Launch layer: production mesh construction, the multi-pod dry-run
+driver, and the train/serve entry points."""

@@ -1,0 +1,301 @@
+"""Trip-count-aware HLO cost walker.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE — for
+scan-over-layers / scan-over-microbatches models that undercounts FLOPs and
+collective bytes by orders of magnitude. This module parses the optimized
+HLO text into its computation tree, multiplies each while body by its
+``known_trip_count`` annotation, and accumulates:
+
+* dot FLOPs (2 x prod(output) x contracted size, from explicit
+  ``lhs_contracting_dims``),
+* collective wire bytes per op family (conventions: DESIGN.md §10),
+* an HBM-traffic estimate (operand+output bytes of top-level instructions,
+  fusion-internal ops excluded — the same boundary XLA's own bytes-accessed
+  uses).
+
+All numbers are per-device (the module is the SPMD-partitioned program);
+multiply by mesh size for globals. Validated against hand-counted scans in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s([a-z][\w\-]*)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_CALL_RE = re.compile(r"(?:calls|body)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count["\s:{]+n["\s:]+"?(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+# ops whose operands/outputs are views, not HBM traffic
+_NO_TRAFFIC = {"parameter", "get-tuple-element", "tuple", "bitcast",
+               "constant", "iota", "after-all", "partition-id", "replica-id"}
+
+# CPU-backend layout artifacts: on TPU these fold into kernel layouts. The
+# "core" traffic metric excludes them; the raw metric keeps them (bounds).
+_LAYOUT_OPS = {"copy", "transpose", "convert", "broadcast", "reshape"}
+
+# standalone elementwise ops: XLA:TPU fuses these into producer/consumer
+# kernels, XLA:CPU mostly does not. The "core" metric excludes them too, so
+# core ~= the perfect-fusion HBM bound and raw ~= the no-fusion bound; real
+# TPU traffic sits between (much nearer core).
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "logistic", "sqrt", "rsqrt", "negate", "abs", "sign", "select",
+    "compare", "and", "or", "not", "xor", "clamp", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "cosine", "sine", "rem",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "map",
+    "reduce-precision", "is-finite", "atan2", "cbrt", "erf", "expm1",
+    "log1p", "popcnt",
+}
+
+
+def _parse_shapes(type_str: str):
+    """[(dtype, [dims...]), ...] — handles tuple types."""
+    return [(dt, [int(d) for d in dims.split(",") if d])
+            for dt, dims in _SHAPE_RE.findall(type_str)]
+
+
+def _shape_bytes(shapes) -> int:
+    return sum(_DTYPE_BYTES.get(dt, 4) * math.prod(dims)
+               for dt, dims in shapes)
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    shapes: list = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool = False
+    instrs: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # name -> shapes
+    # (child_name, multiplier)
+    calls: list = field(default_factory=list)
+    fusion_children: set = field(default_factory=set)
+
+
+def parse_module(txt: str) -> tuple[dict, str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in txt.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" ") and _HEADER_RE.match(line):
+            m = _HEADER_RE.match(line)
+            cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            comps[cur.name] = cur
+            if cur.is_entry:
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        inst = Instr(name, type_str, op, rest, _parse_shapes(type_str))
+        cur.instrs.append(inst)
+        cur.symbols[name] = inst.shapes
+        # call edges
+        if op == "while":
+            bm = re.search(r"body=%?([\w.\-]+)", line)
+            tm = _TRIP_RE.search(line)
+            trip = int(tm.group(1)) if tm else 1
+            if bm:
+                cur.calls.append((bm.group(1), trip, tm is not None))
+            cm = re.search(r"condition=%?([\w.\-]+)", line)
+            if cm:
+                cur.calls.append((cm.group(1), 1, True))
+        elif op in ("fusion", "call", "custom-call", "map", "reduce",
+                    "reduce-window", "scatter", "select-and-scatter", "sort"):
+            for cname in _CALL_RE.findall(line):
+                cur.calls.append((cname, 1, True))
+                if op == "fusion":
+                    cur.fusion_children.add(cname)
+        elif op == "conditional":
+            bm = _BRANCH_RE.search(line)
+            if bm:
+                for cname in _OPERAND_RE.findall(bm.group(1)):
+                    cur.calls.append((cname, 1, True))
+    return comps, entry
+
+
+def _own_costs(comp: Computation) -> dict:
+    flops = 0.0
+    coll = {op: {"count": 0, "bytes": 0.0} for op in _COLL_OPS}
+    traffic = 0.0
+    traffic_core = 0.0
+    for inst in comp.instrs:
+        out_bytes = _shape_bytes(inst.shapes)
+        if inst.op == "dot":
+            out_elems = sum(math.prod(d) for _, d in inst.shapes)
+            operands = _OPERAND_RE.findall(inst.rest.split(")")[0])
+            k = 1
+            cm = _CONTRACT_RE.search(inst.rest)
+            if operands and cm and operands[0] in comp.symbols:
+                lhs = comp.symbols[operands[0]]
+                if lhs:
+                    dims = lhs[0][1]
+                    for ci in cm.group(1).split(","):
+                        if ci:
+                            k *= dims[int(ci)]
+            flops += 2.0 * out_elems * k
+        base = inst.op[:-6] if inst.op.endswith("-start") else inst.op
+        if base in _COLL_OPS and not inst.op.endswith("-done"):
+            line = inst.rest
+            m = _GROUPS_RE.search(line)
+            if m:
+                g = int(m.group(2))
+            else:
+                m2 = _GROUPS_LIST_RE.search(line)
+                g = len(m2.group(1).split(",")) if m2 else 1
+            if base == "all-reduce":
+                wire = 2.0 * out_bytes * (g - 1) / max(g, 1)
+            elif base == "all-gather":
+                wire = out_bytes * (g - 1) / max(g, 1)
+            elif base == "reduce-scatter":
+                wire = out_bytes * (g - 1)
+            elif base == "all-to-all":
+                wire = out_bytes * (g - 1) / max(g, 1)
+            else:
+                wire = out_bytes
+            coll[base]["count"] += 1
+            coll[base]["bytes"] += wire
+        if inst.op not in _NO_TRAFFIC:
+            operands = [comp.symbols[name]
+                        for name in _OPERAND_RE.findall(
+                            inst.rest.split(")")[0])
+                        if name in comp.symbols]
+            if inst.op in ("dynamic-slice", "gather", "slice"):
+                # reads only the selected window (+ tiny indices), not the
+                # whole operand — charging the operand would bill a T-step
+                # scan for T x the full sequence
+                op_bytes = 2 * out_bytes
+            elif inst.op in ("dynamic-update-slice", "scatter"):
+                # read-modify-write of the update window
+                upd = operands[1:] or operands
+                op_bytes = 2 * sum(_shape_bytes(s) for s in upd)
+            elif base in _COLL_OPS or inst.op.endswith("-done"):
+                op_bytes = 0  # accounted in the collective term
+            else:
+                op_bytes = out_bytes + sum(_shape_bytes(s) for s in operands)
+            traffic += op_bytes
+            if inst.op not in _LAYOUT_OPS and inst.op not in _ELEMENTWISE:
+                traffic_core += op_bytes
+    return {"flops": flops, "coll": coll, "traffic": traffic,
+            "traffic_core": traffic_core}
+
+
+def module_costs(txt: str) -> dict:
+    """Trip-count-aware per-device costs for the whole module."""
+    comps, entry = parse_module(txt)
+    own = {n: _own_costs(c) for n, c in comps.items()}
+    # fusion-internal computations contribute flops but NOT HBM traffic
+    fusion_comps = set()
+    for c in comps.values():
+        fusion_comps |= c.fusion_children
+
+    memo: dict[str, dict] = {}
+    unknown_trips = []
+
+    def total(name: str, stack=()) -> dict:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return {"flops": 0.0, "traffic": 0.0, "traffic_core": 0.0,
+                    "coll": {o: {"count": 0, "bytes": 0.0}
+                             for o in _COLL_OPS}}
+        c = comps[name]
+        acc = {
+            "flops": own[name]["flops"],
+            "traffic": 0.0 if name in fusion_comps else own[name]["traffic"],
+            "traffic_core": (0.0 if name in fusion_comps
+                             else own[name]["traffic_core"]),
+            "coll": {o: dict(v) for o, v in own[name]["coll"].items()},
+        }
+        for child, mult, known in c.calls:
+            if not known:
+                unknown_trips.append(child)
+            sub = total(child, stack + (name,))
+            acc["flops"] += sub["flops"] * mult
+            acc["traffic"] += sub["traffic"] * mult
+            acc["traffic_core"] += sub["traffic_core"] * mult
+            for o in _COLL_OPS:
+                acc["coll"][o]["count"] += sub["coll"][o]["count"] * mult
+                acc["coll"][o]["bytes"] += sub["coll"][o]["bytes"] * mult
+        memo[name] = acc
+        return acc
+
+    result = total(entry)
+    coll_total = sum(v["bytes"] for v in result["coll"].values())
+    return {
+        "flops_per_device": result["flops"],
+        "hbm_traffic_per_device": result["traffic"],
+        "hbm_traffic_core_per_device": result["traffic_core"],
+        "collective_bytes_per_device": coll_total,
+        "collectives": result["coll"],
+        "unknown_trip_whiles": len(unknown_trips),
+    }
+
+
+def cpu_bf16_upcast_bytes(txt: str, min_bytes: int = 1 << 26) -> int:
+    """Bytes of large f32 buffers that exist only because XLA:CPU legalizes
+    bf16 dots by converting operands to f32 (and LICM hoists the conversion
+    of loop-carried operands into persistent copies). A TPU compile feeds
+    bf16 straight to the MXU, so these buffers are CPU-backend phantoms;
+    the dry-run reports them so the HBM-fit check can be read both ways.
+
+    Heuristic: ``f32 convert`` instructions whose operand is a same-shape
+    bf16 ``parameter``/``get-tuple-element`` in the same computation and
+    whose size exceeds ``min_bytes``.
+    """
+    comps, _ = parse_module(txt)
+    total = 0
+    for comp in comps.values():
+        for inst in comp.instrs:
+            if inst.op != "convert" or not inst.shapes:
+                continue
+            dt, dims = inst.shapes[0]
+            if dt != "f32":
+                continue
+            size = 4 * math.prod(dims)
+            if size < min_bytes:
+                continue
+            ops = _OPERAND_RE.findall(inst.rest.split(")")[0])
+            if not ops or ops[0] not in comp.symbols:
+                continue
+            src_shapes = comp.symbols[ops[0]]
+            if src_shapes and src_shapes[0][0] == "bf16" \
+                    and src_shapes[0][1] == dims:
+                total += size
+    return total

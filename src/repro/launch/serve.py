@@ -1,0 +1,55 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Brings up the LmEngine + continuous batcher on the local devices, feeds it
+synthetic requests, and reports per-tick latency / throughput — the serving
+analogue of launch.train.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models.lm import init_lm
+from repro.serve.engine import LmEngine
+from repro.serve.scheduler import ContinuousBatcher
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"[serve] {cfg.name}: {args.slots} slots, max_len {args.max_len}")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    eng = LmEngine(params, cfg, batch=args.slots, max_len=args.max_len)
+    cb = ContinuousBatcher(eng)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(1, cfg.vocab, size=rng.integers(4, 12)).tolist()
+        cb.submit(prompt, max_new_tokens=args.max_new_tokens)
+
+    done, ticks, t0 = [], 0, time.perf_counter()
+    while len(done) < args.requests and ticks < 10_000:
+        done += cb.step()
+        ticks += 1
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    print(f"[serve] {len(done)} requests, {toks} tokens in {wall:.2f}s "
+          f"({toks / max(wall, 1e-9):.1f} tok/s, {ticks} ticks)")
+
+
+if __name__ == "__main__":
+    main()

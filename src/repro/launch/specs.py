@@ -1,0 +1,182 @@
+"""Abstract input construction + sharding specs for the dry-run.
+
+Everything here is allocation-free: model/optimizer/cache structures come
+from ``jax.eval_shape`` (ShapeDtypeStruct pytrees) and shardings are built
+by rule. This is what lets the 16b/32b cells lower and compile on a CPU
+container — no tensor ever materializes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import (AxisRules, enforce_divisibility,
+                                 infer_param_specs)
+from repro.models.attention import KVCache
+from repro.models.blocks import make_schedule
+from repro.models.lm import init_lm, init_lm_caches
+from repro.models.mla import MlaCache
+from repro.models.rglru import RglruState
+from repro.models.rwkv import RwkvState
+from repro.train.optim import init_adam_state
+from repro.train.trainer import TrainState
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Abstract structures (ShapeDtypeStruct pytrees, no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: init_lm(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_train_state(cfg: ModelConfig) -> TrainState:
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(init_adam_state, params)
+    return TrainState(params=params, opt=opt)
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_lm_caches(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the step's *data* inputs.
+
+    train: the global batch dict. prefill: prompt tokens. decode: one token
+    per slot (the KV cache itself comes from :func:`abstract_caches`).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    b = shape.global_batch
+    s = shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.cross_attn_every:
+            out["image_embeds"] = sds(
+                (b, cfg.n_image_tokens, cfg.vision_dim or cfg.d_model), dt)
+        if cfg.encdec:
+            out["audio_frames"] = sds((b, cfg.n_audio_frames,
+                                       cfg.audio_dim or 80), dt)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((b, s), jnp.int32)}
+        if cfg.cross_attn_every:
+            out["image_embeds"] = sds(
+                (b, cfg.n_image_tokens, cfg.vision_dim or cfg.d_model), dt)
+        if cfg.encdec:
+            out["audio_frames"] = sds((b, cfg.n_audio_frames,
+                                       cfg.audio_dim or 80), dt)
+        return out
+    if shape.kind == "decode":
+        return {"token": sds((b, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+def batch_sharding(batch_sds: dict, mesh: Mesh, rules: AxisRules):
+    def one(x):
+        spec = rules.resolve(*(["batch"] + [None] * (x.ndim - 1)), mesh=mesh)
+        spec = enforce_divisibility(spec, x.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(one, batch_sds)
+
+
+def param_sharding(params_sds, mesh: Mesh, rules: AxisRules):
+    specs = infer_param_specs(params_sds, rules=rules, mesh=mesh)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def train_state_sharding(state_sds: TrainState, mesh: Mesh, rules: AxisRules,
+                         opt_rules: AxisRules | None = None):
+    """``opt_rules`` lets the optimizer state shard differently from the
+    parameters (ZeRO-1: params data-replicated, mu/nu data-sharded)."""
+    opt_rules = opt_rules or rules
+    p = param_sharding(state_sds.params, mesh, rules)
+    return TrainState(
+        params=p,
+        opt={"mu": param_sharding(state_sds.opt["mu"], mesh, opt_rules),
+             "nu": param_sharding(state_sds.opt["nu"], mesh, opt_rules),
+             "step": NamedSharding(mesh, P())})
+
+
+def cache_sharding(cfg: ModelConfig, caches_sds, mesh: Mesh,
+                   rules: AxisRules):
+    """Built by construction (mirrors init_caches), not by path rules.
+
+    KV tensors prefer sharding the kv-head dim on the model axis; when the
+    head count doesn't divide (GQA kv=8 on a 16-way axis) they fall back to
+    sharding head_dim — without this, a 32k decode cache replicates over
+    the model axis and blows per-device HBM. Every spec then passes the
+    divisibility filter (batch=1 cells drop the data axis, etc.).
+    """
+    r = functools.partial(rules.resolve, mesh=mesh)
+    model_extent = 1
+    for a in (rules.rules.get("kv_heads") or ()):
+        model_extent *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+
+    def kv_spec(c: KVCache):
+        kv_heads = c.k.shape[3]
+        if model_extent > 1 and kv_heads % model_extent == 0:
+            kspec = r(None, "batch", None, "kv_heads", None)
+        else:
+            kspec = r(None, "batch", None, None, "kv_heads")  # shard head_dim
+        return KVCache(k=kspec, v=kspec,
+                       positions=r(None, "batch", None),
+                       index=r(None, "batch"))
+
+    def spec_for(kind: str, cache):
+        if cache is None:
+            return None
+        if kind in ("attn", "local_attn"):
+            if cfg.use_mla:
+                return MlaCache(c_kv=r(None, "batch", None, "kv_lora"),
+                                k_rope=r(None, "batch", None, None),
+                                index=r(None, "batch"))
+            return kv_spec(cache)
+        if kind == "cross":
+            return {"self": kv_spec(cache["self"]),
+                    "ck": r(None, "batch", None, None, "kv_heads"),
+                    "cv": r(None, "batch", None, None, "kv_heads")}
+        if kind == "rwkv":
+            return RwkvState(tm_shift=r(None, "batch", None),
+                             cm_shift=r(None, "batch", None),
+                             wkv=r(None, "batch", "heads", None, None))
+        if kind == "rglru":
+            return RglruState(h=r(None, "batch", "ff"),
+                              conv=r(None, "batch", None, "ff"))
+        raise ValueError(kind)
+
+    schedule = make_schedule(cfg)
+    out = []
+    for (pattern, _), entry in zip(schedule, caches_sds):
+        specs_e = {}
+        for j, kind in enumerate(pattern):
+            cache = entry[f"sub{j}"]
+            sp = spec_for(kind, cache)
+            if sp is not None:
+                sp = jax.tree_util.tree_map(
+                    lambda s, c: enforce_divisibility(s, c.shape, mesh),
+                    sp, cache, is_leaf=lambda x: isinstance(x, P))
+            specs_e[f"sub{j}"] = sp
+        out.append(specs_e)
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), out,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def logits_sharding(mesh: Mesh, rules: AxisRules, batch: int = 0,
+                    vocab: int = 0):
+    spec = rules.resolve("batch", None, "vocab", mesh=mesh)
+    if batch and vocab:
+        spec = enforce_divisibility(spec, (batch, 1, vocab), mesh)
+    return NamedSharding(mesh, spec)

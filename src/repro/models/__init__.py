@@ -1,0 +1,3 @@
+"""Composable model substrate: norms/rope/embeddings, GQA/MQA/local/cross
+attention, MLA, dense & MoE FFNs, RG-LRU and RWKV6 recurrent blocks, block
+schedules with scan-over-layers, and the CausalLM / EncDec / VLM wrappers."""

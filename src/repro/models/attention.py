@@ -1,0 +1,252 @@
+"""Attention: GQA/MQA, causal, local-window, cross; chunked (flash-style)
+prefill; KV-cache decode. Pure functions over plain param dicts.
+
+Memory discipline: the 32k-prefill cells would materialize O(S^2) score
+buffers with naive attention; :func:`chunked_attention` scans over query
+chunks so the live buffer is ``[B, H, q_chunk, S_kv]`` — this is what makes
+``prefill_32k`` fit the per-device HBM budget in the dry-run.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.common import apply_rope, dense_init
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def init_attention(key: Array, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype=jnp.float32, qkv_bias: bool = False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "w_k": dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "w_v": dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "w_o": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["b_q"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["b_k"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["b_v"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def _proj(x, w, b=None):
+    y = x @ w
+    return y if b is None else y + b
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None):
+    """[..., Sq, Sk] additive mask bias."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    valid = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if causal:
+        valid &= kp <= qp
+    if window is not None:
+        valid &= kp > qp - window
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def sdpa(q: Array, k: Array, v: Array, mask_bias: Array | None = None) -> Array:
+    """Scaled dot-product attention with GQA head grouping.
+
+    ``q: [B, Sq, Hq, D]``, ``k/v: [B, Sk, Hkv, D]``; Hq % Hkv == 0.
+    ``mask_bias: [B?, Sq, Sk]`` additive (broadcast over heads).
+    """
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    dv = v.shape[-1]           # may differ from d (MLA: qk-dim != v-dim)
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, hkv, g, d)
+    # keep operands in storage dtype and accumulate in f32 on the MXU —
+    # explicit .astype(f32) on k/v gets loop-hoisted by XLA into a full-
+    # cache f32 copy (16 GB for a 32k decode cache).
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = shard(scores, "batch", "kv_heads", None, None, None)
+    if mask_bias is not None:
+        scores = scores + mask_bias[:, None, None] if mask_bias.ndim == 3 \
+            else scores + mask_bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      window: int | None = None, q_chunk: int = 512,
+                      q_offset: int = 0) -> Array:
+    """Flash-style attention: scan over query chunks to bound live memory.
+
+    Positions are ``q_offset + arange(Sq)`` for queries, ``arange(Sk)`` for
+    keys (contiguous prefill convention).
+    """
+    b, sq, hq, d = q.shape
+    sk = k.shape[1]
+    if sq <= q_chunk:
+        qb = _mask_bias(jnp.arange(sq) + q_offset, jnp.arange(sk),
+                        causal, window)
+        return sdpa(q, k, v, qb[None])
+    n = sq // q_chunk
+    rem = sq - n * q_chunk
+    qs = jnp.moveaxis(q[:, :n * q_chunk].reshape(b, n, q_chunk, hq, d), 1, 0)
+    k_pos = jnp.arange(sk)
+
+    # remat: without this, scan saves each chunk's [B,H,qc,Sk] probs for the
+    # backward pass — i.e. the full O(S^2) attention matrix in f32. With it,
+    # the backward recomputes probs chunk-by-chunk (flash-attention style).
+    @jax.checkpoint
+    def body(_, qc_i):
+        qc, i = qc_i
+        q_pos = q_offset + i * q_chunk + jnp.arange(q_chunk)
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        return None, sdpa(qc, k, v, bias[None])
+
+    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n)))
+    dv = outs.shape[-1]  # == v head dim (MLA: v_dim != qk dim)
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, n * q_chunk, hq, dv)
+    if rem:
+        q_pos = q_offset + n * q_chunk + jnp.arange(rem)
+        bias = _mask_bias(q_pos, k_pos, causal, window)
+        tail = sdpa(q[:, n * q_chunk:], k, v, bias[None])
+        out = jnp.concatenate([out, tail], axis=1)
+    return out
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache with per-slot lengths (continuous batching).
+
+    ``k/v: [B, W, Hkv, D]`` where ``W`` is the ring capacity (== max_len for
+    full attention, == window for local attention). ``positions: [B, W]``
+    holds the absolute position stored in each ring slot (-1 = empty);
+    ``index: [B]`` is the next absolute position per slot. Keys are stored
+    with RoPE already applied at their absolute position.
+    """
+
+    k: Array
+    v: Array
+    positions: Array  # [B, W] int32, -1 = empty
+    index: Array      # [B] int32 next position
+
+    @classmethod
+    def zeros(cls, batch: int, max_len: int, n_kv: int, head_dim: int, dtype):
+        z = jnp.zeros((batch, max_len, n_kv, head_dim), dtype)
+        return cls(k=z, v=z,
+                   positions=jnp.full((batch, max_len), -1, jnp.int32),
+                   index=jnp.zeros((batch,), jnp.int32))
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def attention_apply(params, x: Array, *, n_heads: int, n_kv_heads: int,
+                    head_dim: int, causal: bool = True,
+                    window: int | None = None, rope_theta: float | None = 10000.0,
+                    q_chunk: int = 512, positions: Array | None = None,
+                    kv_x: Array | None = None) -> Array:
+    """Full-sequence attention (train / prefill compute). ``kv_x`` switches to
+    cross-attention (keys/values from the other stream, no causal mask)."""
+    b, s, _ = x.shape
+    src = x if kv_x is None else kv_x
+    sk = src.shape[1]
+    q = _proj(x, params["w_q"], params.get("b_q")).reshape(b, s, n_heads, head_dim)
+    k = _proj(src, params["w_k"], params.get("b_k")).reshape(b, sk, n_kv_heads, head_dim)
+    v = _proj(src, params["w_v"], params.get("b_v")).reshape(b, sk, n_kv_heads, head_dim)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if rope_theta is not None and kv_x is None:
+        pos = positions if positions is not None else jnp.arange(s)[None]
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    if kv_x is None:
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                q_chunk=q_chunk)
+    else:
+        # cross-attention: no mask, but still q-chunked — a 32k-query dense
+        # cross score is O(Sq x Skv) and must not materialize whole
+        out = chunked_attention(q, k, v, causal=False, window=None,
+                                q_chunk=q_chunk)
+    out = out.reshape(b, s, n_heads * head_dim)
+    return shard(out @ params["w_o"], "batch", "seq", "embed")
+
+
+def cache_write_prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
+    """Write a length-``s`` prefill into the ring (keeps the last ``W``)."""
+    b, s = k.shape[:2]
+    w = cache.capacity
+    m = min(s, w)
+    pos = s - m + jnp.arange(m)                    # absolute positions kept
+    slots = pos % w
+    bi = jnp.arange(b)[:, None]
+    new_k = cache.k.at[bi, slots[None]].set(k[:, s - m:].astype(cache.k.dtype))
+    new_v = cache.v.at[bi, slots[None]].set(v[:, s - m:].astype(cache.v.dtype))
+    positions = cache.positions.at[bi, slots[None]].set(pos[None])
+    return KVCache(k=new_k, v=new_v, positions=positions,
+                   index=jnp.full((b,), s, jnp.int32))
+
+
+def cache_write_decode(cache: KVCache, k: Array, v: Array) -> KVCache:
+    """Write one token per slot at each slot's own position (ragged)."""
+    b = k.shape[0]
+    w = cache.capacity
+    bi = jnp.arange(b)
+    slots = cache.index % w
+    new_k = cache.k.at[bi, slots].set(k[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[bi, slots].set(v[:, 0].astype(cache.v.dtype))
+    positions = cache.positions.at[bi, slots].set(cache.index)
+    return KVCache(k=new_k, v=new_v, positions=positions,
+                   index=cache.index + 1)
+
+
+def attention_prefill(params, x: Array, cache: KVCache, *, n_heads: int,
+                      n_kv_heads: int, head_dim: int, window: int | None = None,
+                      rope_theta: float | None = 10000.0, q_chunk: int = 512):
+    """Prefill: causal attention + write K/V into the cache."""
+    b, s, _ = x.shape
+    q = _proj(x, params["w_q"], params.get("b_q")).reshape(b, s, n_heads, head_dim)
+    k = _proj(x, params["w_k"], params.get("b_k")).reshape(b, s, n_kv_heads, head_dim)
+    v = _proj(x, params["w_v"], params.get("b_v")).reshape(b, s, n_kv_heads, head_dim)
+    if rope_theta is not None:
+        pos = jnp.arange(s)[None]
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    out = chunked_attention(q, k, v, causal=True, window=window, q_chunk=q_chunk)
+    new_cache = cache_write_prefill(cache, k, v)
+    out = out.reshape(b, s, n_heads * head_dim)
+    return shard(out @ params["w_o"], "batch", "seq", "embed"), new_cache
+
+
+def attention_decode(params, x: Array, cache: KVCache, *, n_heads: int,
+                     n_kv_heads: int, head_dim: int, window: int | None = None,
+                     rope_theta: float | None = 10000.0):
+    """One-token decode against the ring cache. ``x: [B, 1, D]``."""
+    b, s, _ = x.shape
+    assert s == 1
+    idx = cache.index                                   # [B]
+    q = _proj(x, params["w_q"], params.get("b_q")).reshape(b, 1, n_heads, head_dim)
+    k = _proj(x, params["w_k"], params.get("b_k")).reshape(b, 1, n_kv_heads, head_dim)
+    v = _proj(x, params["w_v"], params.get("b_v")).reshape(b, 1, n_kv_heads, head_dim)
+    if rope_theta is not None:
+        pos = idx[:, None]                              # [B, 1]
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    cache = cache_write_decode(cache, k, v)
+    kpos = cache.positions                              # [B, W]
+    valid = (kpos >= 0) & (kpos <= idx[:, None])
+    if window is not None:
+        valid &= kpos > (idx[:, None] - window)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)[:, None, :]
+    out = sdpa(q, cache.k.astype(q.dtype), cache.v.astype(q.dtype), bias)
+    out = out.reshape(b, 1, n_heads * head_dim)
+    y = shard(out @ params["w_o"], "batch", "seq", "embed")
+    return y, cache

@@ -1,0 +1,330 @@
+"""Block assembly: per-kind init/apply + schedule-driven scan over layers.
+
+Heterogeneous layer patterns (RecurrentGemma's rec-rec-attn, the VLM's
+cross-attention interleave) are handled by grouping layers into repeated
+*periods*; each period is structurally uniform, so a single ``lax.scan``
+covers ``count`` periods with stacked parameters — keeping the HLO size
+O(period) instead of O(layers) even for the 64-layer cells.
+
+Block kinds
+    attn        pre-norm self-attention (+ FFN or MoE)
+    local_attn  windowed self-attention (+ FFN)
+    cross       self-attention + cross-attention (+ FFN)  [VLM / decoder]
+    enc         bidirectional self-attention (+ FFN)      [audio encoder]
+    rglru       RG-LRU recurrent block (+ FFN)
+    rwkv        RWKV6 time-mix + channel-mix
+
+Modes: ``train`` (full seq, no cache), ``prefill`` (full seq, write cache),
+``decode`` (one token against the cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models.attention import KVCache
+from repro.models.common import init_norm, apply_norm, dense_init
+from repro.models.ffn import ffn_apply, init_ffn
+from repro.models.mla import MlaCache
+from repro.models.moe import init_moe, moe_apply_auto
+from repro.models.rglru import (RglruState, init_rglru_block,
+                                init_rglru_state, rglru_block_apply,
+                                rglru_block_decode)
+from repro.models.rwkv import (RwkvState, init_rwkv_channel_mix,
+                               init_rwkv_state, init_rwkv_time_mix,
+                               rwkv_channel_mix, rwkv_time_mix)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def make_schedule(cfg: ModelConfig) -> list[tuple[tuple[str, ...], int]]:
+    """[(pattern, count), ...] — each entry is one scan over `count` periods."""
+    if cfg.cross_attn_every:
+        period = ("attn",) * (cfg.cross_attn_every - 1) + ("cross",)
+        n, rem = divmod(cfg.n_layers, cfg.cross_attn_every)
+        sched = [(period, n)]
+        if rem:
+            sched.append((("attn",) * rem, 1))
+        return sched
+    if cfg.block_pattern != ("attn",):
+        p = tuple(cfg.block_pattern)
+        n, rem = divmod(cfg.n_layers, len(p))
+        sched = [(p, n)] if n else []
+        if rem:
+            sched.append((p[:rem], 1))
+        return sched
+    return [(("attn",), cfg.n_layers)]
+
+
+def _uses_moe(cfg: ModelConfig, kind: str) -> bool:
+    return cfg.n_experts > 0 and kind in ("attn", "local_attn")
+
+
+# ---------------------------------------------------------------------------
+# Per-kind init
+# ---------------------------------------------------------------------------
+
+def init_block(kind: str, key: Array, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": init_norm(cfg.norm, d, dtype)}
+    if kind == "rwkv":
+        p["time_mix"] = init_rwkv_time_mix(ks[0], d, dtype)
+        p["norm2"] = init_norm(cfg.norm, d, dtype)
+        p["channel_mix"] = init_rwkv_channel_mix(ks[1], d, cfg.d_ff, dtype)
+        return p
+    if kind == "rglru":
+        p["rglru"] = init_rglru_block(ks[0], d, d, dtype)
+    elif kind in ("attn", "local_attn", "enc"):
+        if cfg.use_mla:
+            p["attn"] = mla_mod.init_mla(
+                ks[0], d, cfg.n_heads, kv_lora=cfg.kv_lora,
+                qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope,
+                v_dim=cfg.v_head_dim, dtype=dtype)
+        else:
+            p["attn"] = attn_mod.init_attention(
+                ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                dtype=dtype, qkv_bias=cfg.qkv_bias)
+    elif kind == "cross":
+        p["attn"] = attn_mod.init_attention(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            dtype=dtype, qkv_bias=cfg.qkv_bias)
+        p["norm_x"] = init_norm(cfg.norm, d, dtype)
+        p["xattn"] = attn_mod.init_attention(
+            ks[1], d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dtype=dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    p["norm2"] = init_norm(cfg.norm, d, dtype)
+    if _uses_moe(cfg, kind):
+        p["moe"] = init_moe(ks[2], d, cfg.expert_d_ff, cfg.n_experts,
+                            n_shared=cfg.n_shared_experts, dtype=dtype)
+    else:
+        p["ffn"] = init_ffn(ks[2], d, cfg.d_ff, gated=True, dtype=dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Per-kind caches
+# ---------------------------------------------------------------------------
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype):
+    if kind == "rwkv":
+        return init_rwkv_state(batch, cfg.d_model, dtype)
+    if kind == "rglru":
+        return init_rglru_state(batch, cfg.d_model, dtype)
+    if kind in ("attn", "local_attn"):
+        if cfg.use_mla:
+            return MlaCache.zeros(batch, max_len, cfg.kv_lora, cfg.qk_rope, dtype)
+        cache_len = min(max_len, cfg.attn_window) if (
+            kind == "local_attn" and cfg.attn_window) else max_len
+        return KVCache.zeros(batch, cache_len, cfg.n_kv_heads, cfg.head_dim,
+                             dtype)
+    if kind == "cross":
+        n_cross = cfg.n_image_tokens or cfg.n_audio_frames
+        z = jnp.zeros((batch, n_cross, cfg.n_kv_heads, cfg.head_dim), dtype)
+        return {"self": KVCache.zeros(batch, max_len, cfg.n_kv_heads,
+                                      cfg.head_dim, dtype),
+                "ck": z, "cv": z}
+    if kind == "enc":
+        return None
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Per-kind apply
+# ---------------------------------------------------------------------------
+
+def _ffn_or_moe(params, x, cfg, kind):
+    if _uses_moe(cfg, kind):
+        y, aux = moe_apply_auto(params["moe"], x, top_k=cfg.top_k,
+                                capacity_factor=cfg.capacity_factor,
+                                activation=cfg.activation)
+        return y, aux
+    return ffn_apply(params["ffn"], x, activation=cfg.activation), 0.0
+
+
+def _self_attn(params, h, cfg, kind, mode, cache):
+    window = cfg.attn_window if kind == "local_attn" else None
+    kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+              head_dim=cfg.head_dim, window=window,
+              rope_theta=cfg.rope_theta)
+    mla_kw = dict(n_heads=cfg.n_heads, kv_lora=cfg.kv_lora,
+                  qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope,
+                  v_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta)
+    if mode == "train":
+        if cfg.use_mla and kind != "cross":
+            return mla_mod.mla_apply(params["attn"], h, **mla_kw), cache
+        return attn_mod.attention_apply(
+            params["attn"], h, causal=(kind != "enc"), **kw), cache
+    if mode == "prefill":
+        if cfg.use_mla and kind != "cross":
+            return mla_mod.mla_prefill(params["attn"], h, cache, **mla_kw)
+        return attn_mod.attention_prefill(params["attn"], h, cache, **{
+            k: v for k, v in kw.items() if k != "window"}, window=window)
+    if mode == "decode":
+        if cfg.use_mla and kind != "cross":
+            return mla_mod.mla_decode(params["attn"], h, cache, **mla_kw)
+        return attn_mod.attention_decode(params["attn"], h, cache, **kw)
+    raise ValueError(mode)
+
+
+def apply_block(kind: str, params, x: Array, cfg: ModelConfig, mode: str,
+                cache, cross_kv: Array | None = None):
+    """Returns (x, new_cache, aux_loss)."""
+    if kind == "rwkv":
+        st: RwkvState = cache if cache is not None else init_rwkv_state(
+            x.shape[0], cfg.d_model, x.dtype)
+        h = apply_norm(cfg.norm, params["norm1"], x)
+        y, tm_shift, wkv = rwkv_time_mix(params["time_mix"], h, st)
+        x = x + y
+        h = apply_norm(cfg.norm, params["norm2"], x)
+        y, cm_shift = rwkv_channel_mix(params["channel_mix"], h, st.cm_shift)
+        x = x + y
+        new_cache = RwkvState(tm_shift=tm_shift, cm_shift=cm_shift, wkv=wkv)
+        return x, (new_cache if cache is not None else None), 0.0
+
+    if kind == "rglru":
+        h = apply_norm(cfg.norm, params["norm1"], x)
+        if mode == "decode":
+            y, new_state = rglru_block_decode(params["rglru"], h, cache)
+        else:
+            y, new_state = rglru_block_apply(params["rglru"], h, cache)
+        x = x + y
+        h = apply_norm(cfg.norm, params["norm2"], x)
+        y, aux = _ffn_or_moe(params, h, cfg, kind)
+        return x + y, (None if mode == "train" else new_state), aux
+
+    if kind == "cross":
+        h = apply_norm(cfg.norm, params["norm1"], x)
+        sa_cache = cache["self"] if cache is not None else None
+        y, sa_cache = _self_attn(params, h, cfg, "attn", mode, sa_cache)
+        x = x + y
+        h = apply_norm(cfg.norm, params["norm_x"], x)
+        if mode == "decode":
+            # use cached cross K/V
+            q = (h @ params["xattn"]["w_q"]).reshape(
+                x.shape[0], x.shape[1], cfg.n_heads, cfg.head_dim)
+            out = attn_mod.sdpa(q, cache["ck"].astype(q.dtype),
+                                cache["cv"].astype(q.dtype))
+            y = out.reshape(*x.shape[:2], -1) @ params["xattn"]["w_o"]
+            new_cache = {"self": sa_cache, "ck": cache["ck"], "cv": cache["cv"]}
+        else:
+            y = attn_mod.attention_apply(
+                params["xattn"], h, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                rope_theta=None, kv_x=cross_kv)
+            if cache is not None:
+                b, n = cross_kv.shape[0], cross_kv.shape[1]
+                ck = (cross_kv @ params["xattn"]["w_k"]).reshape(
+                    b, n, cfg.n_kv_heads, cfg.head_dim)
+                cv = (cross_kv @ params["xattn"]["w_v"]).reshape(
+                    b, n, cfg.n_kv_heads, cfg.head_dim)
+                new_cache = {"self": sa_cache, "ck": ck.astype(cache["ck"].dtype),
+                             "cv": cv.astype(cache["cv"].dtype)}
+            else:
+                new_cache = None
+        x = x + y
+        h = apply_norm(cfg.norm, params["norm2"], x)
+        y, aux = _ffn_or_moe(params, h, cfg, kind)
+        return x + y, new_cache, aux
+
+    # attn / local_attn / enc
+    h = apply_norm(cfg.norm, params["norm1"], x)
+    y, new_cache = _self_attn(params, h, cfg, kind, mode, cache)
+    x = x + y
+    h = apply_norm(cfg.norm, params["norm2"], x)
+    y, aux = _ffn_or_moe(params, h, cfg, kind)
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked schedule init / apply
+# ---------------------------------------------------------------------------
+
+def init_blocks(key: Array, cfg: ModelConfig, dtype,
+                schedule=None) -> list:
+    """Per schedule entry: {"sub<j>": params stacked over count}."""
+    schedule = schedule or make_schedule(cfg)
+    entries = []
+    for e, (pattern, count) in enumerate(schedule):
+        ks = jax.random.split(jax.random.fold_in(key, e), count)
+        per_period = [
+            {f"sub{j}": init_block(kind, jax.random.fold_in(k, j), cfg, dtype)
+             for j, kind in enumerate(pattern)}
+            for k in ks
+        ]
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_period)
+        entries.append(stacked)
+    return entries
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                schedule=None) -> list:
+    schedule = schedule or make_schedule(cfg)
+    caches = []
+    for pattern, count in schedule:
+        entry = {}
+        for j, kind in enumerate(pattern):
+            c = init_block_cache(kind, cfg, batch, max_len, dtype)
+            if c is not None:
+                c = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), c)
+            entry[f"sub{j}"] = c
+        caches.append(entry)
+    return caches
+
+
+def apply_blocks(entries: list, x: Array, cfg: ModelConfig, mode: str,
+                 caches: list | None = None, cross_kv: Array | None = None,
+                 schedule=None):
+    """Run the whole schedule. Returns (x, new_caches, total_aux)."""
+    schedule = schedule or make_schedule(cfg)
+    new_caches = []
+    total_aux = 0.0
+
+    for (pattern, count), params_stacked, cache_stacked in zip(
+            schedule, entries,
+            caches if caches is not None else [None] * len(schedule)):
+
+        def body(carry, xs):
+            xc, aux = carry
+            p, c = xs
+            new_c = {}
+            for j, kind in enumerate(pattern):
+                sub_c = c.get(f"sub{j}") if c is not None else None
+                xc, nc, a = apply_block(kind, p[f"sub{j}"], xc, cfg, mode,
+                                        sub_c, cross_kv)
+                new_c[f"sub{j}"] = nc
+                aux = aux + a
+            return (xc, aux), new_c
+
+        if mode == "train" and cfg.remat == "full":
+            body = jax.checkpoint(body)
+
+        xs = (params_stacked, cache_stacked)
+        if cache_stacked is None:
+            xs = (params_stacked,
+                  {f"sub{j}": None for j in range(len(pattern))})
+            # scan requires concrete xs leaves; replace None cache with dummy
+            (x, total_aux), _ = jax.lax.scan(
+                lambda carry, p: (body(carry, (p, None))[0], 0.0),
+                (x, total_aux), params_stacked)
+            new_caches.append(None)
+        else:
+            (x, total_aux), new_c = jax.lax.scan(body, (x, total_aux),
+                                                 (params_stacked, cache_stacked))
+            new_caches.append(new_c)
+
+    return x, new_caches, total_aux

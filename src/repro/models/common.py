@@ -1,0 +1,118 @@
+"""Shared model components: norms, RoPE, embeddings, initializers.
+
+Everything is functional: ``init_*`` builds parameter pytrees (plain dicts of
+arrays), ``apply``-style functions are pure. Compute dtype is configurable;
+norm statistics and softmax always run in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: Array, in_dim: int, out_dim: int, dtype=jnp.float32,
+               scale: float | None = None) -> Array:
+    """Truncated-normal fan-in init (LM standard)."""
+    std = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim),
+                                        jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: Array, vocab: int, dim: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32, elementwise: bool = True):
+    if not elementwise:  # OLMo's non-parametric LayerNorm
+        return {}
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    if "scale" in params:
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def init_norm(kind: str, dim: int, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return init_rmsnorm(dim, dtype)
+    if kind == "layernorm":
+        return init_layernorm(dim, dtype)
+    if kind == "layernorm_np":  # non-parametric (OLMo)
+        return init_layernorm(dim, dtype, elementwise=False)
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def apply_norm(kind: str, params, x: Array) -> Array:
+    if kind == "rmsnorm":
+        return rmsnorm(params, x)
+    return layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """Rotate ``x: [..., S, H, D]`` by ``positions: [..., S]`` (int)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # [D/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    angles = angles[..., :, None, :]                          # [..., S, 1, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+    "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+    "tanh": jnp.tanh,
+}
+
+
+def count_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,33 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain MLPs, with an optional
+delta-linear decode mode (the paper's technique applied to transformer decode
+streams — see DESIGN.md §4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.common import ACTIVATIONS, dense_init
+
+Array = jax.Array
+
+
+def init_ffn(key: Array, d_model: int, d_ff: int, *, gated: bool = True,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def ffn_apply(params, x: Array, *, activation: str = "silu") -> Array:
+    act = ACTIVATIONS[activation]
+    up = shard(x @ params["w_up"], "batch", "seq", "ff")
+    if "w_gate" in params:
+        gate = shard(x @ params["w_gate"], "batch", "seq", "ff")
+        h = act(gate) * up
+    else:
+        h = act(up)
+    return shard(h @ params["w_down"], "batch", "seq", "embed")

@@ -1,0 +1,79 @@
+"""The paper's own networks: multi-layer (Delta)GRU stacks with a CTC
+classifier head (TIDIGITS) or a regression head (SensorsGas), with the QAT
+policy wired through (paper Sec. IV-A).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.deltagru import (deltagru_sequence, gru_sequence,
+                                 init_gru_stack)
+from repro.models.common import dense_init
+from repro.quant.qat import FP32, QatPolicy
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class GruTaskConfig:
+    input_size: int
+    hidden_size: int
+    num_layers: int
+    output_size: int          # CTC classes (incl. blank) or regression dims
+    task: str = "ctc"         # ctc | regression
+    theta_x: float = 0.0
+    theta_h: float = 0.0
+
+
+# Paper network sizes (Table II) on TIDIGITS features (40-d log filter bank).
+PAPER_NETWORKS = {
+    "1L-256H": GruTaskConfig(40, 256, 1, 12),
+    "2L-256H": GruTaskConfig(40, 256, 2, 12),
+    "1L-512H": GruTaskConfig(40, 512, 1, 12),
+    "2L-512H": GruTaskConfig(40, 512, 2, 12),
+    "1L-768H": GruTaskConfig(40, 768, 1, 12),
+    "2L-768H": GruTaskConfig(40, 768, 2, 12),
+    # SensorsGas regression (14 sensors -> 1 concentration)
+    "2L-256H-GAS": GruTaskConfig(14, 256, 2, 1, task="regression"),
+    # AMPRO prosthetic control network (Fig. 15)
+    "2L-128H-AMPRO": GruTaskConfig(8, 128, 2, 4, task="regression"),
+}
+
+
+def init_gru_model(key: Array, cfg: GruTaskConfig, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "gru": init_gru_stack(k1, cfg.input_size, cfg.hidden_size,
+                              cfg.num_layers, dtype),
+        "head": dense_init(k2, cfg.hidden_size, cfg.output_size, dtype),
+        "head_b": jnp.zeros((cfg.output_size,), dtype),
+    }
+
+
+def gru_model_forward(params, cfg: GruTaskConfig, xs: Array, *,
+                      use_delta: bool = True, qat: QatPolicy = FP32,
+                      collect_sparsity: bool = False):
+    """``xs: [T, B, I]`` -> (outputs ``[T, B, O]``, sparsity stats dict).
+
+    ``use_delta=False`` runs the plain-GRU oracle (the paper's pretrain /
+    cuDNN-equivalent baseline)."""
+    if qat.enabled:
+        gru_params = [p._replace(w_x=qat.quantize_params(p.w_x),
+                                 w_h=qat.quantize_params(p.w_h),
+                                 b=qat.quantize_params(p.b))
+                      for p in params["gru"]]
+    else:
+        gru_params = params["gru"]
+    sigmoid, tanh = qat.act_fns()
+    stats = {}
+    if use_delta:
+        ys, _, stats = deltagru_sequence(
+            gru_params, xs, cfg.theta_x, cfg.theta_h,
+            collect_sparsity=collect_sparsity, sigmoid=sigmoid, tanh=tanh)
+    else:
+        ys = gru_sequence(gru_params, xs, sigmoid=sigmoid, tanh=tanh)
+    out = ys @ params["head"] + params["head_b"]
+    return out, stats

@@ -1,0 +1,146 @@
+"""Top-level models: CausalLM (all decoder-only archs), EncDec (seamless
+audio), and the VLM cross-attention wrapper. One init + three entry points
+(train forward / prefill / decode) per model family, all pure functions.
+
+Modality frontends are STUBS per the assignment: ``audio``/``vision``
+embeddings arrive precomputed (see launch.dryrun.input_specs) and pass
+through a learned projection into the backbone width.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.blocks import (apply_blocks, init_blocks, init_caches,
+                                 make_schedule)
+from repro.models.common import (apply_norm, dense_init, embed_init,
+                                 init_norm)
+
+Array = jax.Array
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_lm(key: Array, cfg: ModelConfig):
+    """Parameters for any decoder-only arch (dense/moe/hybrid/ssm/vlm)."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    params = {
+        "embedding": embed_init(ks[0], cfg.vocab, cfg.d_model, dt),
+        "blocks": init_blocks(ks[1], cfg, dt),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab, dt)
+    if cfg.cross_attn_every:
+        vdim = cfg.vision_dim or cfg.d_model
+        params["img_proj"] = dense_init(ks[3], vdim, cfg.d_model, dt)
+    if cfg.encdec:
+        adim = cfg.audio_dim or 80
+        params["audio_proj"] = dense_init(ks[3], adim, cfg.d_model, dt)
+        enc_cfg = dataclasses.replace(
+            cfg, block_pattern=("enc",), cross_attn_every=0,
+            n_experts=0, use_mla=False)
+        params["encoder"] = {
+            "blocks": init_blocks(ks[4], enc_cfg, dt,
+                                  schedule=[(("enc",), cfg.n_encoder_layers)]),
+            "final_norm": init_norm(cfg.norm, cfg.d_model, dt),
+        }
+    return params
+
+
+def _logits(params, cfg: ModelConfig, x: Array) -> Array:
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x @ params["embedding"].T
+    else:
+        logits = x @ params["lm_head"]
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def _embed(params, tokens: Array, mode: str = "train") -> Array:
+    """Embedding lookup, sharding-aware.
+
+    Training with a vocab-sharded table uses a one-hot contraction: a gather
+    would make GSPMD replicate the table ("involuntary full
+    rematerialization") and its transpose (the embedding gradient) would be
+    a scatter. When the vocab doesn't divide the model axis (table stored
+    vocab-replicated) or in no-grad modes (prefill/decode), a plain gather
+    is cheaper and safe.
+    """
+    from repro.dist.sharding import current_mesh, current_rules
+    emb = params["embedding"]
+    v = emb.shape[0]
+    mesh = current_mesh()
+    vocab_sharded = False
+    if mesh is not None:
+        axes = current_rules().resolve("vocab", mesh=mesh)[0]
+        names = ((axes,) if isinstance(axes, str) else tuple(axes or ()))
+        ext = 1
+        for a in names:
+            ext *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+        vocab_sharded = ext > 1 and v % ext == 0
+    if mode == "train" and vocab_sharded:
+        onehot = jax.nn.one_hot(tokens, v, dtype=emb.dtype)
+        onehot = shard(onehot, "batch", "seq", "vocab")
+        return shard(onehot @ emb, "batch", "seq", "embed")
+    return shard(jnp.take(emb, tokens, axis=0), "batch", "seq", "embed")
+
+
+def _cross_stream(params, cfg: ModelConfig, image_embeds, audio_frames,
+                  mode: str):
+    """Project the stub modality stream into the backbone width (or encode)."""
+    if cfg.cross_attn_every and image_embeds is not None:
+        return image_embeds @ params["img_proj"]
+    if cfg.encdec and audio_frames is not None:
+        h = audio_frames @ params["audio_proj"]
+        enc_cfg = dataclasses.replace(cfg, n_experts=0, use_mla=False)
+        h, _, _ = apply_blocks(params["encoder"]["blocks"], h, enc_cfg,
+                               "train", schedule=[(("enc",), cfg.n_encoder_layers)])
+        return apply_norm(cfg.norm, params["encoder"]["final_norm"], h)
+    return None
+
+
+def lm_forward(params, cfg: ModelConfig, tokens: Array, *,
+               image_embeds: Array | None = None,
+               audio_frames: Array | None = None):
+    """Teacher-forced training forward. Returns (logits, aux_loss).
+
+    For enc-dec archs the decoder self-attention is causal and every
+    ``cross`` block attends to the encoder output; for the VLM the cross
+    blocks attend to projected image embeddings.
+    """
+    x = _embed(params, tokens, "train")
+    cross_kv = _cross_stream(params, cfg, image_embeds, audio_frames, "train")
+    x, _, aux = apply_blocks(params["blocks"], x, cfg, "train",
+                             cross_kv=cross_kv)
+    return _logits(params, cfg, x), aux
+
+
+def init_lm_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return init_caches(cfg, batch, max_len, _dtype(cfg))
+
+
+def lm_prefill(params, cfg: ModelConfig, tokens: Array, caches, *,
+               image_embeds: Array | None = None,
+               audio_frames: Array | None = None):
+    """Prefill: process the prompt, fill caches, return last-token logits."""
+    x = _embed(params, tokens, "prefill")
+    cross_kv = _cross_stream(params, cfg, image_embeds, audio_frames, "prefill")
+    x, caches, _ = apply_blocks(params["blocks"], x, cfg, "prefill",
+                                caches=caches, cross_kv=cross_kv)
+    return _logits(params, cfg, x[:, -1:]), caches
+
+
+def lm_decode(params, cfg: ModelConfig, token: Array, caches):
+    """One decode step. ``token: [B, 1]`` -> (logits ``[B, 1, V]``, caches)."""
+    x = _embed(params, token, "decode")
+    x, caches, _ = apply_blocks(params["blocks"], x, cfg, "decode",
+                                caches=caches)
+    return _logits(params, cfg, x), caches

@@ -1,0 +1,147 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — compressed-KV attention.
+
+Train/prefill use the uncompressed formulation; decode uses the *absorbed*
+formulation (w_kv_b folded into the query / output projections) so the KV
+cache stores only ``c_kv: [B, S, kv_lora]`` + ``k_rope: [B, S, rope_dim]``
+per layer — the 93 % cache shrink that makes deepseek's ``decode_32k`` cell
+tractable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.common import apply_rope, dense_init, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def init_mla(key: Array, d_model: int, n_heads: int, *, kv_lora: int = 512,
+             qk_nope: int = 128, qk_rope: int = 64, v_dim: int = 128,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "w_q": dense_init(ks[0], d_model, n_heads * (qk_nope + qk_rope), dtype),
+        "kv_a": dense_init(ks[1], d_model, kv_lora + qk_rope, dtype),
+        "kv_a_norm": init_rmsnorm(kv_lora, dtype),
+        "kv_b": dense_init(ks[2], kv_lora, n_heads * (qk_nope + v_dim), dtype),
+        "w_o": dense_init(ks[3], n_heads * v_dim, d_model, dtype),
+    }
+
+
+class MlaCache(NamedTuple):
+    c_kv: Array    # [B, S_max, kv_lora]
+    k_rope: Array  # [B, S_max, qk_rope]
+    index: Array   # [B] per-slot lengths
+
+    @classmethod
+    def zeros(cls, batch: int, max_len: int, kv_lora: int, qk_rope: int, dtype):
+        return cls(c_kv=jnp.zeros((batch, max_len, kv_lora), dtype),
+                   k_rope=jnp.zeros((batch, max_len, qk_rope), dtype),
+                   index=jnp.zeros((batch,), jnp.int32))
+
+
+def _project(params, x, n_heads, kv_lora, qk_nope, qk_rope, v_dim, rope_theta,
+             positions):
+    b, s, _ = x.shape
+    q = (x @ params["w_q"]).reshape(b, s, n_heads, qk_nope + qk_rope)
+    q_nope, q_rope = q[..., :qk_nope], q[..., qk_nope:]
+    kv = x @ params["kv_a"]
+    c_kv, k_rope = kv[..., :kv_lora], kv[..., kv_lora:]
+    c_kv = rmsnorm(params["kv_a_norm"], c_kv)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(params, x: Array, *, n_heads: int, kv_lora: int = 512,
+              qk_nope: int = 128, qk_rope: int = 64, v_dim: int = 128,
+              rope_theta: float = 10000.0, q_chunk: int = 512) -> Array:
+    """Full-sequence causal MLA (training path, uncompressed formulation)."""
+    b, s, _ = x.shape
+    pos = jnp.arange(s)[None]
+    q_nope, q_rope, c_kv, k_rope = _project(
+        params, x, n_heads, kv_lora, qk_nope, qk_rope, v_dim, rope_theta, pos)
+    kv = (c_kv @ params["kv_b"]).reshape(b, s, n_heads, qk_nope + v_dim)
+    k_nope, v = kv[..., :qk_nope], kv[..., qk_nope:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, n_heads, qk_rope))],
+        axis=-1)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "heads", None)
+    from repro.models.attention import chunked_attention  # local import (cycle)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk)
+    out = out.reshape(b, s, n_heads * v_dim)
+    return shard(out @ params["w_o"], "batch", "seq", "embed")
+
+
+def mla_prefill(params, x: Array, cache: MlaCache, *, n_heads: int,
+                kv_lora: int = 512, qk_nope: int = 128, qk_rope: int = 64,
+                v_dim: int = 128, rope_theta: float = 10000.0,
+                q_chunk: int = 512):
+    b, s, _ = x.shape
+    pos = jnp.arange(s)[None]
+    q_nope, q_rope, c_kv, k_rope = _project(
+        params, x, n_heads, kv_lora, qk_nope, qk_rope, v_dim, rope_theta, pos)
+    kv = (c_kv @ params["kv_b"]).reshape(b, s, n_heads, qk_nope + v_dim)
+    k_nope, v = kv[..., :qk_nope], kv[..., qk_nope:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, n_heads, qk_rope))],
+        axis=-1)
+    from repro.models.attention import chunked_attention
+    out = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk)
+    out = out.reshape(b, s, n_heads * v_dim)
+    new_cache = MlaCache(
+        c_kv=jax.lax.dynamic_update_slice(cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, 0, 0)),
+        k_rope=jax.lax.dynamic_update_slice(cache.k_rope, k_rope.astype(cache.k_rope.dtype), (0, 0, 0)),
+        index=jnp.full((b,), s, jnp.int32))
+    return shard(out @ params["w_o"], "batch", "seq", "embed"), new_cache
+
+
+def mla_decode(params, x: Array, cache: MlaCache, *, n_heads: int,
+               kv_lora: int = 512, qk_nope: int = 128, qk_rope: int = 64,
+               v_dim: int = 128, rope_theta: float = 10000.0):
+    """Absorbed-formulation decode: attention runs in the compressed space."""
+    b, s, _ = x.shape
+    assert s == 1
+    idx = cache.index                                   # [B]
+    pos = idx[:, None]
+    q_nope, q_rope, c_kv_new, k_rope_new = _project(
+        params, x, n_heads, kv_lora, qk_nope, qk_rope, v_dim, rope_theta, pos)
+
+    bi = jnp.arange(b)
+    c_kv = cache.c_kv.at[bi, idx].set(c_kv_new[:, 0].astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[bi, idx].set(
+        k_rope_new[:, 0].astype(cache.k_rope.dtype))
+
+    kv_b = params["kv_b"].reshape(kv_lora, n_heads, qk_nope + v_dim)
+    w_k = kv_b[..., :qk_nope]                        # [lora, H, nope]
+    w_v = kv_b[..., qk_nope:]                        # [lora, H, v]
+    # absorb: q_eff[b,h,lora] = sum_d q_nope[b,h,d] * w_k[lora,h,d].
+    # Operands stay in storage dtype with f32 accumulation — an explicit
+    # f32 cast of c_kv would loop-hoist into a full-cache f32 copy.
+    q_eff = jnp.einsum("bshd,lhd->bshl", q_nope, w_k,
+                       preferred_element_type=jnp.float32)  # [B,1,H,lora]
+    scale = (qk_nope + qk_rope) ** -0.5
+    scores = (jnp.einsum("bshl,btl->bhst", q_eff.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshr,btr->bhst", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    s_max = cache.c_kv.shape[1]
+    valid = jnp.arange(s_max)[None] <= idx[:, None]           # [B, S]
+    scores = scores + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_c = jnp.einsum("bhst,btl->bshl", probs.astype(c_kv.dtype), c_kv,
+                       preferred_element_type=jnp.float32)
+    out = jnp.einsum("bshl,lhv->bshv", out_c.astype(w_v.dtype), w_v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, n_heads * v_dim).astype(x.dtype)
+    y = shard(out @ params["w_o"], "batch", "seq", "embed")
+    return y, MlaCache(c_kv=c_kv, k_rope=k_rope, index=idx + 1)

@@ -1,0 +1,185 @@
+"""Mixture-of-Experts: softmax top-k router + two dispatch engines.
+
+``moe_apply`` (default) — *sorted* dispatch: token-expert assignments are
+sorted by expert, scattered into per-expert capacity buffers ``[E, C, D]``,
+run through batched expert matmuls, and gathered back. All data movement is
+sort/gather/scatter (differentiable, no giant one-hots); this is the
+at-scale path (the 1M-token train_4k cells). Under expert-parallel sharding
+the scatter/gather lower to all-to-alls, which the roofline harness counts.
+
+``moe_apply_onehot`` — reference einsum dispatch (Switch-style). O(T*E*C)
+memory: fine for unit tests, used to cross-validate the sorted engine.
+
+Both drop overflow tokens beyond per-expert capacity (standard Switch
+semantics; the combine weight is simply 0) and return the load-balancing
+aux loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.common import ACTIVATIONS, dense_init
+
+Array = jax.Array
+
+
+def init_moe(key: Array, d_model: int, expert_d_ff: int, n_experts: int,
+             *, n_shared: int = 0, shared_d_ff: int | None = None,
+             dtype=jnp.float32, pad_to: int = 16):
+    """``pad_to``: physical expert count is padded to a multiple (EP axis
+    divisibility — e.g. granite's 40 experts pad to 48 on a 16-way axis).
+    The router stays ``n_experts`` wide, so padding experts never receive
+    tokens; their (empty) capacity buffers cost bounded, documented waste."""
+    ks = jax.random.split(key, 5)
+    e_phys = ((n_experts + pad_to - 1) // pad_to) * pad_to
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "experts_gate": (jax.random.normal(ks[1], (e_phys, d_model, expert_d_ff), jnp.float32)
+                         * d_model ** -0.5).astype(dtype),
+        "experts_up": (jax.random.normal(ks[2], (e_phys, d_model, expert_d_ff), jnp.float32)
+                       * d_model ** -0.5).astype(dtype),
+        "experts_down": (jax.random.normal(ks[3], (e_phys, expert_d_ff, d_model), jnp.float32)
+                         * expert_d_ff ** -0.5).astype(dtype),
+    }
+    if n_shared:
+        sdff = shared_d_ff or n_shared * expert_d_ff
+        from repro.models.ffn import init_ffn
+        p["shared"] = init_ffn(ks[4], d_model, sdff, gated=True, dtype=dtype)
+    return p
+
+
+def _route(params, xt: Array, top_k: int):
+    """Router: returns (gate_vals [T,K], gate_idx [T,K], aux_loss)."""
+    e = params["router"].shape[-1]
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+    # Switch load-balance loss: E * sum_e mean(router prob) * mean(assigned)
+    me = jnp.mean(probs, axis=0)
+    assigned = jnp.zeros((xt.shape[0], e), jnp.float32)
+    assigned = assigned.at[jnp.arange(xt.shape[0])[:, None], gate_idx].set(1.0)
+    ce = jnp.mean(assigned, axis=0)
+    aux = e * jnp.sum(me * ce) / top_k
+    return gate_vals, gate_idx, aux
+
+
+def _expert_ffn(params, xe: Array, activation: str) -> Array:
+    """Batched per-expert GLU: ``xe: [E, C, D] -> [E, C, D]``."""
+    act = ACTIVATIONS[activation]
+    xe = shard(xe, "experts", None, "embed")
+    h = act(jnp.einsum("ecd,edf->ecf", xe, params["experts_gate"])) * \
+        jnp.einsum("ecd,edf->ecf", xe, params["experts_up"])
+    h = shard(h, "experts", None, "ff")
+    return jnp.einsum("ecf,efd->ecd", h, params["experts_down"])
+
+
+def moe_apply_auto(params, x: Array, *, top_k: int,
+                   capacity_factor: float = 1.25, activation: str = "silu"):
+    """Dispatch-engine selection: expert-parallel shard_map when a mesh with
+    a usable ``experts`` axis is active, single-device sorted path otherwise."""
+    from repro.dist.sharding import current_mesh, current_rules
+    mesh = current_mesh()
+    e = params["router"].shape[-1]
+    e_phys = params["experts_gate"].shape[0]
+    if mesh is not None:
+        from repro.models.moe_ep import _axis_extent, moe_apply_ep
+        rules = current_rules()
+        ep = _axis_extent(mesh, rules.resolve("experts", mesh=mesh)[0])
+        dp = _axis_extent(mesh, rules.resolve("batch", mesh=mesh)[0])
+        if ep > 1 and e_phys % ep == 0 and x.shape[0] % max(dp, 1) == 0:
+            y, aux = moe_apply_ep(params, x, top_k=top_k,
+                                  capacity_factor=capacity_factor,
+                                  activation=activation)
+            if "shared" in params:
+                from repro.models.ffn import ffn_apply
+                y = y + ffn_apply(params["shared"], x, activation=activation)
+            return y, aux
+    return moe_apply(params, x, top_k=top_k,
+                     capacity_factor=capacity_factor, activation=activation)
+
+
+def moe_apply(params, x: Array, *, top_k: int, capacity_factor: float = 1.25,
+              activation: str = "silu", router_dtype=jnp.float32):
+    """Sorted-dispatch MoE. ``x: [B, S, D]`` -> (y, aux_loss)."""
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+    xt = x.reshape(t, d)
+    gate_vals, gate_idx, aux = _route(params, xt, top_k)
+
+    tk = t * top_k
+    capacity = int(max(top_k, round(t * top_k * capacity_factor / e)))
+
+    flat_expert = gate_idx.reshape(tk)                 # [T*K]
+    flat_token = jnp.repeat(jnp.arange(t), top_k)      # [T*K]
+    flat_gate = gate_vals.reshape(tk)
+
+    order = jnp.argsort(flat_expert)                   # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+
+    counts = jnp.bincount(flat_expert, length=e)       # [E]
+    offsets = jnp.cumsum(counts) - counts              # start of each expert
+    rank = jnp.arange(tk) - offsets[sorted_expert]     # rank within expert
+    keep = rank < capacity
+    dest = sorted_expert * capacity + jnp.clip(rank, 0, capacity - 1)
+
+    # scatter tokens into [E*C, D] expert buffers (dropped rows stay 0).
+    # The [T*K, D] staging rows are sharded over the data axis — without the
+    # constraints GSPMD replicates them (GBs per device at 1M tokens).
+    buf = jnp.zeros((e * capacity, d), x.dtype)
+    src = jnp.where(keep[:, None], xt[sorted_token], 0.0)
+    src = shard(src, "batch", None)
+    buf = buf.at[jnp.where(keep, dest, e * capacity)].set(src, mode="drop")
+
+    sliced = {k: (params[k][:e] if k.startswith("experts_") else params[k])
+              for k in params}
+    ye = _expert_ffn(sliced, buf.reshape(e, capacity, d), activation)
+    ye = shard(ye, "experts", None, "embed").reshape(e * capacity, d)
+
+    # gather outputs back to (token, k) rows; weight by gate; scatter-add
+    rows = jnp.where(keep[:, None], ye[dest], 0.0)
+    contrib = shard(rows * sorted_gate[:, None].astype(rows.dtype),
+                    "batch", None)
+    y = jnp.zeros((t, d), x.dtype)
+    y = y.at[sorted_token].add(contrib.astype(x.dtype))
+    y = shard(y.reshape(b, s, d), "batch", "seq", "embed")
+
+    if "shared" in params:
+        from repro.models.ffn import ffn_apply
+        y = y + ffn_apply(params["shared"], x, activation=activation)
+    return y, aux
+
+
+def moe_apply_onehot(params, x: Array, *, top_k: int,
+                     capacity_factor: float = 1.25, activation: str = "silu"):
+    """Reference einsum dispatch (small inputs only)."""
+    b, s, d = x.shape
+    e = params["router"].shape[-1]
+    t = b * s
+    xt = x.reshape(t, d)
+    gate_vals, gate_idx, aux = _route(params, xt, top_k)
+    capacity = int(max(top_k, round(t * top_k * capacity_factor / e)))
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)         # [T, K, E]
+    flat = onehot.reshape(t * top_k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(t, top_k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)                # [T, K]
+    keep = pos < capacity
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=x.dtype) * keep[..., None]
+    disp = jnp.einsum("tke,tkc->tec", onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("tke,tkc,tk->tec", onehot.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32), gate_vals).astype(x.dtype)
+    xe = jnp.einsum("tec,td->ecd", disp, xt)
+    sliced = {k: (params[k][:e] if k.startswith("experts_") else params[k])
+              for k in params}
+    ye = _expert_ffn(sliced, xe, activation)
+    y = jnp.einsum("tec,ecd->td", comb, ye).reshape(b, s, d)
+    if "shared" in params:
+        from repro.models.ffn import ffn_apply
+        y = y + ffn_apply(params["shared"], x, activation=activation)
+    return y, aux

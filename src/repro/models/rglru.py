@@ -1,0 +1,109 @@
+"""RecurrentGemma / Griffin recurrent block: temporal conv1d(4) + RG-LRU.
+
+The RG-LRU state stream is a natural delta-network target (DESIGN.md §5):
+its hidden state is the same kind of slowly-varying vector the paper
+thresholds. The scan itself runs on the :mod:`repro.kernels.rglru_scan`
+Pallas kernel (ref fallback elsewhere).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.kernels import ops as kops
+from repro.models.common import dense_init
+
+Array = jax.Array
+
+_C = 8.0  # Griffin's fixed exponent scale
+CONV_WIDTH = 4
+
+
+def init_rglru_block(key: Array, d_model: int, lru_width: int | None = None,
+                     dtype=jnp.float32):
+    w = lru_width or d_model
+    ks = jax.random.split(key, 7)
+    # Lambda init: a in [0.9, 0.999] => lambda = softplus^-1(-log a / c)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))
+    return {
+        "w_in": dense_init(ks[1], d_model, w, dtype),       # recurrent branch
+        "w_in_gate": dense_init(ks[2], d_model, w, dtype),  # gelu gate branch
+        "conv_w": (jax.random.normal(ks[3], (CONV_WIDTH, w), jnp.float32)
+                   * CONV_WIDTH ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_rg": dense_init(ks[4], w, w, dtype),   # recurrence gate
+        "w_ig": dense_init(ks[5], w, w, dtype),   # input gate
+        "b_rg": jnp.zeros((w,), dtype),
+        "b_ig": jnp.zeros((w,), dtype),
+        "lambda": lam,                             # [w] f32
+        "w_out": dense_init(ks[6], w, d_model, dtype),
+    }
+
+
+class RglruState(NamedTuple):
+    h: Array      # [B, W] recurrent state
+    conv: Array   # [B, CONV_WIDTH-1, W] trailing inputs for the conv
+
+
+def init_rglru_state(batch: int, width: int, dtype=jnp.float32) -> RglruState:
+    return RglruState(h=jnp.zeros((batch, width), jnp.float32),
+                      conv=jnp.zeros((batch, CONV_WIDTH - 1, width), dtype))
+
+
+def _causal_conv(x: Array, w: Array, b: Array, history: Array | None = None):
+    """Causal depthwise conv1d over ``x: [B, T, W]`` (kernel width 4)."""
+    if history is None:
+        history = jnp.zeros((x.shape[0], CONV_WIDTH - 1, x.shape[-1]), x.dtype)
+    xh = jnp.concatenate([history, x], axis=1)
+    out = sum(xh[:, i:i + x.shape[1]] * w[i] for i in range(CONV_WIDTH))
+    return out + b, xh[:, -(CONV_WIDTH - 1):]
+
+
+def _gates(params, u: Array):
+    """RG-LRU gating: decay factor ``a`` and gated input from ``u: [..., W]``."""
+    r = jax.nn.sigmoid(u @ params["w_rg"] + params["b_rg"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ params["w_ig"] + params["b_ig"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r   # [..., W] (< 0)
+    a = jnp.exp(log_a)
+    return a, i * u.astype(jnp.float32)
+
+
+def rglru_block_apply(params, x: Array, state: RglruState | None = None,
+                      use_kernel: bool = False):
+    """Full-sequence recurrent block. ``x: [B, T, D]`` -> ``([B, T, D], state)``."""
+    b, t, _ = x.shape
+    gate = jax.nn.gelu(x @ params["w_in_gate"])
+    u = x @ params["w_in"]
+    u = shard(u, "batch", "seq", "ff")
+    hist = state.conv if state is not None else None
+    u, new_hist = _causal_conv(u, params["conv_w"], params["conv_b"], hist)
+    a, gated = _gates(params, u)
+    h0 = state.h if state is not None else None
+    import os
+    if x.shape[1] > 1 and os.environ.get("REPRO_RGLRU_ASSOC", "0") == "1":
+        # §Perf hillclimb: log-depth associative scan (exact)
+        from repro.kernels import ref as kref
+        hs, h_t = kref.rglru_assoc_ref(gated, a, h0)
+    else:
+        hs, h_t = kops.rglru_scan(gated, a, h0, use_ref=not use_kernel)
+    y = (hs.astype(x.dtype) * gate) @ params["w_out"]
+    y = shard(y, "batch", "seq", "embed")
+    return y, RglruState(h=h_t, conv=new_hist)
+
+
+def rglru_block_decode(params, x: Array, state: RglruState):
+    """Single-step decode. ``x: [B, 1, D]``."""
+    b = x.shape[0]
+    gate = jax.nn.gelu(x @ params["w_in_gate"])
+    u = x @ params["w_in"]
+    xh = jnp.concatenate([state.conv, u], axis=1)       # [B, 4, W]
+    u1 = sum(xh[:, i] * params["conv_w"][i] for i in range(CONV_WIDTH))
+    u1 = (u1 + params["conv_b"])[:, None]               # [B, 1, W]
+    a, gated = _gates(params, u1)
+    h = a[:, 0] * state.h + jnp.sqrt(jnp.maximum(1.0 - a[:, 0] ** 2, 0.0)) * gated[:, 0]
+    y = (h[:, None].astype(x.dtype) * gate) @ params["w_out"]
+    return y, RglruState(h=h, conv=xh[:, 1:])

@@ -1,0 +1,139 @@
+"""RWKV-6 ("Finch") blocks: time-mix with data-dependent decay + channel-mix.
+
+RWKV is attention-free; decode carries O(D^2/head) state instead of a KV
+cache, which is why the ``long_500k`` cell runs here. The token-shift and
+channel-mix streams are delta-network targets (temporally smooth), and the
+WKV recurrence runs on the :mod:`repro.kernels.rwkv6_scan` Pallas kernel.
+
+Faithful-to-config simplifications vs the released checkpoints: the
+data-dependent token-shift interpolation uses a single fused LoRA per
+projection set (dims below), and decay LoRA dims follow the 1.6b config.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.kernels import ops as kops
+from repro.models.common import dense_init
+
+Array = jax.Array
+
+HEAD_DIM = 64
+TSHIFT_LORA = 32
+DECAY_LORA = 64
+
+
+def init_rwkv_time_mix(key: Array, d_model: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 12)
+    h = d_model // HEAD_DIM
+    return {
+        "mu_base": jnp.zeros((d_model,), dtype),
+        "mu": jnp.zeros((5, d_model), dtype),          # r,k,v,w,g offsets
+        "tsh_w1": dense_init(ks[0], d_model, 5 * TSHIFT_LORA, dtype),
+        "tsh_w2": (jax.random.normal(ks[1], (5, TSHIFT_LORA, d_model), jnp.float32)
+                   * TSHIFT_LORA ** -0.5).astype(dtype),
+        "w_r": dense_init(ks[2], d_model, d_model, dtype),
+        "w_k": dense_init(ks[3], d_model, d_model, dtype),
+        "w_v": dense_init(ks[4], d_model, d_model, dtype),
+        "w_g": dense_init(ks[5], d_model, d_model, dtype),
+        "w_o": dense_init(ks[6], d_model, d_model, dtype),
+        "decay_base": jnp.zeros((d_model,), jnp.float32) - 6.0,
+        "decay_w1": dense_init(ks[7], d_model, DECAY_LORA, dtype),
+        "decay_w2": dense_init(ks[8], DECAY_LORA, d_model, dtype),
+        "bonus_u": (jax.random.normal(ks[9], (h, HEAD_DIM), jnp.float32) * 0.1),
+        "ln_scale": jnp.ones((d_model,), dtype),       # per-head group norm
+    }
+
+
+def init_rwkv_channel_mix(key: Array, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d_model,), dtype),
+        "mu_r": jnp.zeros((d_model,), dtype),
+        "w_k": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_v": dense_init(ks[1], d_ff, d_model, dtype),
+        "w_r": dense_init(ks[2], d_model, d_model, dtype),
+    }
+
+
+class RwkvState(NamedTuple):
+    tm_shift: Array   # [B, D] last input to time-mix
+    cm_shift: Array   # [B, D] last input to channel-mix
+    wkv: Array        # [B, H, HEAD_DIM, HEAD_DIM]
+
+
+def init_rwkv_state(batch: int, d_model: int, dtype=jnp.float32) -> RwkvState:
+    h = d_model // HEAD_DIM
+    return RwkvState(tm_shift=jnp.zeros((batch, d_model), dtype),
+                     cm_shift=jnp.zeros((batch, d_model), dtype),
+                     wkv=jnp.zeros((batch, h, HEAD_DIM, HEAD_DIM), jnp.float32))
+
+
+def _token_shift(x: Array, last: Array):
+    """``shift(x)_t = x_{t-1}`` with ``last`` filling t=0. Returns (xx, new_last)."""
+    prev = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return prev - x, x[:, -1]
+
+
+def _group_norm_heads(y: Array, scale: Array, eps: float = 1e-5):
+    """Per-head layer norm over [B, T, H, D] -> scaled, flattened."""
+    b, t, h, d = y.shape
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    return (yn.reshape(b, t, h * d) * scale).astype(y.dtype)
+
+
+def rwkv_time_mix(params, x: Array, state: RwkvState, use_kernel: bool = False):
+    """``x: [B, T, D]`` -> (y, new_tm_shift, new_wkv_state)."""
+    b, t, d = x.shape
+    h = d // HEAD_DIM
+    xx, new_last = _token_shift(x, state.tm_shift)
+
+    # data-dependent lerp (fused 5-way LoRA)
+    x_base = x + xx * params["mu_base"]
+    lora = jnp.tanh(x_base @ params["tsh_w1"]).reshape(b, t, 5, TSHIFT_LORA)
+    adj = jnp.einsum("btfl,fld->fbtd", lora, params["tsh_w2"])      # [5,B,T,D]
+    mixed = x[None] + xx[None] * (params["mu"][:, None, None] + adj)
+    x_r, x_k, x_v, x_w, x_g = mixed
+
+    r = (x_r @ params["w_r"]).reshape(b, t, h, HEAD_DIM)
+    k = (x_k @ params["w_k"]).reshape(b, t, h, HEAD_DIM)
+    v = (x_v @ params["w_v"]).reshape(b, t, h, HEAD_DIM)
+    g = jax.nn.silu(x_g @ params["w_g"])
+    r = shard(r, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "heads", None)
+    v = shard(v, "batch", "seq", "heads", None)
+
+    decay_log = params["decay_base"] + jnp.tanh(x_w @ params["decay_w1"]) @ params["decay_w2"]
+    w = jnp.exp(-jnp.exp(decay_log.astype(jnp.float32)))            # (0,1)
+    w = w.reshape(b, t, h, HEAD_DIM)
+
+    tr = lambda z: jnp.moveaxis(z, 2, 1)   # [B, T, H, D] -> [B, H, T, D]
+    import os
+    if t > 1 and os.environ.get("REPRO_RWKV_CHUNKED", "0") == "1":
+        # §Perf hillclimb: chunk-parallel WKV (matmul-form, exact)
+        y, wkv_t = kops.rwkv6_chunked(tr(r), tr(k), tr(v), tr(w),
+                                      params["bonus_u"], state.wkv)
+    else:
+        y, wkv_t = kops.rwkv6_scan(tr(r), tr(k), tr(v), tr(w),
+                                   params["bonus_u"], state.wkv,
+                                   use_ref=not use_kernel)
+    y = jnp.moveaxis(y, 1, 2)                                       # [B,T,H,D]
+    y = _group_norm_heads(y.astype(jnp.float32), params["ln_scale"].astype(jnp.float32))
+    y = (y.astype(x.dtype) * g) @ params["w_o"]
+    return shard(y, "batch", "seq", "embed"), new_last, wkv_t
+
+
+def rwkv_channel_mix(params, x: Array, last: Array):
+    xx, new_last = _token_shift(x, last)
+    x_k = x + xx * params["mu_k"]
+    x_r = x + xx * params["mu_r"]
+    k = jnp.square(jax.nn.relu(x_k @ params["w_k"]))
+    k = shard(k, "batch", "seq", "ff")
+    r = jax.nn.sigmoid(x_r @ params["w_r"])
+    return shard(r * (k @ params["w_v"]), "batch", "seq", "embed"), new_last

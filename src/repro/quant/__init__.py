@@ -1,0 +1,5 @@
+from repro.quant.fake_quant import QFormat, fake_quant, quantize, dequantize
+from repro.quant.lut import LutNonlinearity, lut_sigmoid, lut_tanh
+
+__all__ = ["QFormat", "fake_quant", "quantize", "dequantize",
+           "LutNonlinearity", "lut_sigmoid", "lut_tanh"]

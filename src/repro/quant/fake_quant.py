@@ -1,0 +1,81 @@
+"""Fixed-point quantization-aware-training primitives (paper Sec. IV-A).
+
+EdgeDRNN uses Qm.n fixed point: INT16 (Q8.8) activations, INT8 (Q1.7-ish)
+weights, trained with dual-copy rounding (a straight-through estimator over
+a quantized forward pass). We implement the general Qm.n grid + STE.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class QFormat:
+    """Signed fixed-point format Qm.n: m integer bits, n fraction bits.
+
+    Total width = 1 (sign) + m + n. Range [-2^m, 2^m - 2^-n], step 2^-n.
+    """
+
+    int_bits: int
+    frac_bits: int
+
+    @property
+    def bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def min_val(self) -> float:
+        return -float(2 ** self.int_bits)
+
+    @property
+    def max_val(self) -> float:
+        return float(2 ** self.int_bits) - 1.0 / self.scale
+
+
+# Paper's operating formats.
+ACT_Q88 = QFormat(8, 8)      # INT16 activations
+WGT_Q17 = QFormat(0, 7)      # INT8 weights, |w| < 1
+LUT_Q14 = QFormat(1, 4)      # 5-bit LUT output (best RMSE in the paper)
+
+
+def quantize(x: Array, fmt: QFormat) -> Array:
+    """Round-to-nearest onto the Qm.n grid (returns float carrying the grid)."""
+    q = jnp.round(x * fmt.scale) / fmt.scale
+    return jnp.clip(q, fmt.min_val, fmt.max_val)
+
+
+def dequantize(q_int: Array, fmt: QFormat) -> Array:
+    """Integer codes -> float values."""
+    return q_int.astype(jnp.float32) / fmt.scale
+
+
+def to_int(x: Array, fmt: QFormat) -> Array:
+    """Float -> integer codes (for storage-size accounting / export)."""
+    q = jnp.clip(jnp.round(x * fmt.scale), fmt.min_val * fmt.scale,
+                 fmt.max_val * fmt.scale)
+    bits = fmt.bits
+    dt = jnp.int8 if bits <= 8 else (jnp.int16 if bits <= 16 else jnp.int32)
+    return q.astype(dt)
+
+
+def fake_quant(x: Array, fmt: QFormat) -> Array:
+    """STE fake-quant: forward = quantize, backward = identity.
+
+    This is the dual-copy-rounding recipe: the optimizer sees full-precision
+    gradients while the forward pass runs on the fixed-point grid.
+    """
+    return x + jax.lax.stop_gradient(quantize(x, fmt) - x)
+
+
+def quant_params(params, fmt: QFormat = WGT_Q17):
+    """Fake-quantize every leaf of a parameter pytree."""
+    return jax.tree_util.tree_map(lambda p: fake_quant(p, fmt), params)

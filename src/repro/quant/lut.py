@@ -1,0 +1,53 @@
+"""LUT-based nonlinearities (paper Sec. III-C / IV-A).
+
+EdgeDRNN's PEs evaluate sigmoid/tanh with look-up tables: 16-bit (Q8.8)
+input, 5..9-bit (Q1.4..Q1.8) output. Training uses the LUT forward and the
+true-function gradient backward (paper: "the gradient ... is calculated
+using the original nonlinear functions in FP32").
+
+We model the LUT as output-grid rounding of the exact function — which is
+numerically identical to an input-indexed table whose entries are the
+rounded function values, because sigmoid/tanh are 1-Lipschitz monotone and
+the Q8.8 input step (1/256) is finer than the coarsest output step (1/16):
+adjacent input codes can never skip an output level by more than rounding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.fake_quant import QFormat, quantize
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class LutNonlinearity:
+    """A quantized nonlinearity with STE-to-exact-gradient training behaviour."""
+
+    fn: Callable[[Array], Array]
+    out_fmt: QFormat
+
+    def __call__(self, x: Array) -> Array:
+        exact = self.fn(x)
+        lut = quantize(exact, self.out_fmt)
+        # forward: LUT output; backward: exact function's gradient.
+        return exact + jax.lax.stop_gradient(lut - exact)
+
+    def table(self, in_fmt: QFormat = QFormat(8, 8)) -> Array:
+        """Materialize the hardware table over the full input grid (export)."""
+        n = 2 ** in_fmt.bits
+        codes = jnp.arange(-(n // 2), n // 2, dtype=jnp.float32) / in_fmt.scale
+        return quantize(self.fn(codes), self.out_fmt)
+
+
+def lut_sigmoid(frac_bits: int = 4) -> LutNonlinearity:
+    """Q1.n sigmoid LUT (paper default n=4)."""
+    return LutNonlinearity(jax.nn.sigmoid, QFormat(1, frac_bits))
+
+
+def lut_tanh(frac_bits: int = 4) -> LutNonlinearity:
+    return LutNonlinearity(jnp.tanh, QFormat(1, frac_bits))

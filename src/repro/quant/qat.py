@@ -1,0 +1,44 @@
+"""QAT policy: wire fixed-point fake-quant + LUT nonlinearities into cells.
+
+The paper's recipe (Sec. IV-A): quantize weights and activations during
+training with STE, use LUT-precision nonlinearities in the forward pass and
+FP32 gradients backward. :func:`qat_act_fns` returns drop-in ``(sigmoid,
+tanh)`` callables for :func:`repro.core.deltagru.deltagru_step` et al.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+
+from repro.quant.fake_quant import ACT_Q88, WGT_Q17, QFormat, fake_quant
+from repro.quant.lut import lut_sigmoid, lut_tanh
+
+
+@dataclass(frozen=True)
+class QatPolicy:
+    weight_fmt: QFormat = WGT_Q17
+    act_fmt: QFormat = ACT_Q88
+    lut_frac_bits: int = 4
+    enabled: bool = True
+
+    def quantize_params(self, params):
+        if not self.enabled:
+            return params
+        return jax.tree_util.tree_map(lambda p: fake_quant(p, self.weight_fmt),
+                                      params)
+
+    def quantize_act(self, x):
+        if not self.enabled:
+            return x
+        return fake_quant(x, self.act_fmt)
+
+    def act_fns(self):
+        """(sigmoid, tanh) honouring the LUT output precision."""
+        if not self.enabled:
+            return jax.nn.sigmoid, jax.numpy.tanh
+        return lut_sigmoid(self.lut_frac_bits), lut_tanh(self.lut_frac_bits)
+
+
+FP32 = QatPolicy(enabled=False)
+EDGEDRNN_QAT = QatPolicy()  # INT8 weights / INT16 acts / Q1.4 LUT

@@ -1,0 +1,2 @@
+"""Serving substrate: batched LM engine (prefill/decode), the paper's
+batch-1 streaming DeltaGRU engine, and a continuous-batching scheduler."""

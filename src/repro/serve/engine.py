@@ -1,0 +1,151 @@
+"""Serving engines.
+
+``LmEngine`` — batched prefill + decode for any registry arch (jitted steps,
+ring caches with per-slot lengths for continuous batching).
+
+``GruStreamEngine`` — the paper's deployment mode: batch-1 streaming
+DeltaGRU inference with live temporal-sparsity accounting and the Eq. 7
+latency model, i.e. a software EdgeDRNN. Supports the dual thresholds and
+the dynamic-threshold controller (paper Sec. VI future work).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.deltagru import (DeltaGruStackState, deltagru_stack_step,
+                                 init_deltagru_stack_state)
+from repro.core.perf_model import EDGEDRNN, AcceleratorSpec, estimate_stack
+from repro.core.sparsity import GruDims
+from repro.core.thresholds import ThresholdPolicy, dynamic_threshold
+from repro.models.gru_rnn import GruTaskConfig
+from repro.models.lm import init_lm_caches, lm_decode, lm_prefill
+
+Array = jax.Array
+
+
+class LmEngine:
+    """Prefill/decode engine over a fixed slot count (the decode batch)."""
+
+    def __init__(self, params, cfg: ModelConfig, batch: int, max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.caches = init_lm_caches(cfg, batch, max_len)
+        self._prefill = jax.jit(
+            lambda p, t, c, kw: lm_prefill(p, cfg, t, c, **kw))
+        self._decode = jax.jit(lambda p, t, c: lm_decode(p, cfg, t, c))
+
+    def prefill(self, tokens: Array, **modality) -> Array:
+        """Prefill all slots with (padded) prompts; returns last logits."""
+        logits, self.caches = self._prefill(self.params, tokens, self.caches,
+                                            dict(modality))
+        return logits
+
+    def decode_step(self, tokens: Array) -> Array:
+        """One decode step for every slot. ``tokens: [B, 1]``."""
+        logits, self.caches = self._decode(self.params, tokens, self.caches)
+        return logits
+
+    def generate_greedy(self, tokens: Array, steps: int, **modality):
+        """Greedy generation; returns ``[B, steps]`` new tokens."""
+        logits = self.prefill(tokens, **modality)
+        out = []
+        cur = jnp.argmax(logits[:, -1:], axis=-1)
+        for _ in range(steps):
+            out.append(cur)
+            logits = self.decode_step(cur)
+            cur = jnp.argmax(logits[:, -1:], axis=-1)
+        return jnp.concatenate(out, axis=1)
+
+
+@dataclass
+class StreamStats:
+    steps: int = 0
+    fired_x: float = 0.0
+    fired_h: float = 0.0
+    est_latency_s: float = 0.0
+
+    @property
+    def gamma_dx(self) -> float:
+        return 1.0 - self.fired_x / max(self.steps, 1)
+
+    @property
+    def gamma_dh(self) -> float:
+        return 1.0 - self.fired_h / max(self.steps, 1)
+
+
+class GruStreamEngine:
+    """Batch-1 streaming DeltaGRU inference (the EdgeDRNN deployment mode)."""
+
+    def __init__(self, params, task: GruTaskConfig,
+                 thresholds: ThresholdPolicy | None = None,
+                 accel: AcceleratorSpec = EDGEDRNN,
+                 dynamic_target_fired: float | None = None):
+        self.params = params["gru"]
+        self.head = (params["head"], params["head_b"])
+        self.task = task
+        self.accel = accel
+        self.thresholds = thresholds or ThresholdPolicy(task.theta_x,
+                                                        task.theta_h)
+        self.theta_x = self.thresholds.theta_x
+        self.theta_h = self.thresholds.theta_h
+        self.dynamic_target = dynamic_target_fired
+        self.state: DeltaGruStackState = init_deltagru_stack_state(
+            self.params, batch_shape=(1,))
+        self.stats = StreamStats()
+        self.dims = GruDims(task.input_size, task.hidden_size, task.num_layers)
+
+        @jax.jit
+        def _step(state, x, tx, th):
+            y, new_state, deltas = deltagru_stack_step(
+                self.params, state, x, tx, th)
+            out = y @ self.head[0] + self.head[1]
+            fx = jnp.mean(jnp.stack(
+                [jnp.mean((dx != 0).astype(jnp.float32)) for dx, _ in deltas]))
+            fh = jnp.mean(jnp.stack(
+                [jnp.mean((dh != 0).astype(jnp.float32)) for _, dh in deltas]))
+            return out, new_state, fx, fh
+
+        self._step = _step
+
+    def step(self, x: np.ndarray | Array):
+        """Process one timestep ``x: [I]``; returns the model output [O]."""
+        x = jnp.asarray(x, jnp.float32).reshape(1, -1)
+        out, self.state, fx, fh = self._step(self.state, x, self.theta_x,
+                                             self.theta_h)
+        fx, fh = float(fx), float(fh)
+        self.stats.steps += 1
+        self.stats.fired_x += fx
+        self.stats.fired_h += fh
+        # Eq. 7 latency for this step's actual firing fractions
+        est = estimate_stack(self.dims, 1.0 - fx, 1.0 - fh, self.accel)
+        self.stats.est_latency_s += est.latency_s
+        if self.dynamic_target is not None:
+            self.theta_h = float(dynamic_threshold(
+                jnp.asarray(self.theta_h), fh, self.dynamic_target))
+        return np.asarray(out[0])
+
+    def reset(self):
+        self.state = init_deltagru_stack_state(self.params, batch_shape=(1,))
+        self.stats = StreamStats()
+
+    def report(self) -> dict:
+        s = self.stats
+        est = estimate_stack(self.dims, s.gamma_dx, s.gamma_dh, self.accel)
+        return {
+            "steps": s.steps,
+            "gamma_dx": s.gamma_dx,
+            "gamma_dh": s.gamma_dh,
+            "mean_est_latency_us": 1e6 * s.est_latency_s / max(s.steps, 1),
+            "effective_throughput_gops": est.throughput_ops / 1e9,
+            "theta_x": self.theta_x,
+            "theta_h": self.theta_h,
+        }

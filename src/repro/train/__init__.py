@@ -1,0 +1,2 @@
+"""Training substrate: optimizers, schedules, losses (CE / CTC / RMSE),
+train-step factory with mixed precision, remat, and gradient compression."""

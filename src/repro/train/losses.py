@@ -1,0 +1,67 @@
+"""Loss functions: LM cross-entropy (with z-loss), regression, CTC wrapper."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.ctc import ctc_loss
+
+Array = jax.Array
+
+
+def softmax_cross_entropy(logits: Array, labels: Array,
+                          mask: Array | None = None,
+                          z_loss: float = 0.0):
+    """Token-level CE. ``logits: [..., V]``, ``labels: [...]`` int.
+
+    Returns (mean loss, metrics). ``z_loss`` regularizes the partition
+    function (stabilizes large-vocab training).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # label pick via iota-compare (partitionable on a vocab-sharded axis;
+    # take_along_axis would force GSPMD to replicate the logits)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    picked = jnp.where(vocab_iota == labels[..., None], logits, 0.0)
+    ll = jnp.sum(picked, axis=-1)
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(loss)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    mean = jnp.sum(loss * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+    return mean, {"ce": mean, "accuracy": acc, "tokens": denom}
+
+
+def lm_loss(logits: Array, tokens: Array, mask: Array | None = None,
+            z_loss: float = 1e-4):
+    """Next-token prediction: logits[:, :-1] vs tokens[:, 1:]."""
+    m = None if mask is None else mask[:, 1:]
+    return softmax_cross_entropy(logits[:, :-1], tokens[:, 1:], m, z_loss)
+
+
+def mse_loss(pred: Array, target: Array):
+    err = (pred.astype(jnp.float32) - target.astype(jnp.float32))
+    mse = jnp.mean(jnp.square(err))
+    return mse, {"mse": mse, "rmse": jnp.sqrt(mse)}
+
+
+def r_squared(pred: Array, target: Array) -> Array:
+    """Coefficient of determination (paper's regression metric)."""
+    target = target.astype(jnp.float32)
+    ss_res = jnp.sum(jnp.square(pred.astype(jnp.float32) - target))
+    ss_tot = jnp.sum(jnp.square(target - jnp.mean(target)))
+    return 1.0 - ss_res / (ss_tot + 1e-9)
+
+
+def ctc_loss_mean(logits: Array, labels: Array, input_lengths: Array,
+                  label_lengths: Array):
+    """``logits: [T, B, C]`` raw (pre-softmax)."""
+    log_probs = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = ctc_loss(log_probs, labels, input_lengths, label_lengths)
+    mean = jnp.mean(nll / jnp.maximum(label_lengths, 1))
+    return mean, {"ctc": mean}

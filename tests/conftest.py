@@ -1,0 +1,11 @@
+"""Test-session device setup.
+
+The dist/ft tests need a handful of local devices; 8 is the conventional
+unit-test topology. This is deliberately NOT the dry-run's 512 (that env is
+confined to launch/dryrun.py, which must never be imported from tests), and
+benchmarks/run.py is a separate process that still sees the real device
+count.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")

@@ -1,0 +1,106 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train step + prefill/decode consistency on CPU. (Full configs are only
+exercised via the dry-run — ShapeDtypeStruct, no allocation.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.data.lm_data import lm_batch
+from repro.models.lm import (init_lm, init_lm_caches, lm_decode, lm_forward,
+                             lm_prefill)
+from repro.train.optim import AdamConfig, constant_schedule
+from repro.train.trainer import init_train_state, make_lm_train_step
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = get_config(request.param).reduced()
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    batch = lm_batch(jax.random.PRNGKey(1), cfg, batch=2, seq=16)
+    return request.param, cfg, params, batch
+
+
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch_setup):
+        arch, cfg, params, batch = arch_setup
+        logits, aux = lm_forward(params, cfg, batch["tokens"],
+                                 image_embeds=batch.get("image_embeds"),
+                                 audio_frames=batch.get("audio_frames"))
+        assert logits.shape == (2, 16, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        assert np.isfinite(float(aux))
+
+    def test_train_step_decreases_or_finite(self, arch_setup):
+        arch, cfg, params, batch = arch_setup
+        step = make_lm_train_step(
+            cfg, AdamConfig(schedule=constant_schedule(1e-3)), donate=False)
+        state = init_train_state(params)
+        state, m1 = step(state, batch)
+        state, m2 = step(state, batch)
+        assert np.isfinite(m2["loss"])
+        # two steps on the same batch should not increase loss much
+        assert float(m2["loss"]) < float(m1["loss"]) + 0.5
+
+    def test_decode_consistency_with_forward(self, arch_setup):
+        """decode(prefill(x)) logits == teacher-forced forward logits."""
+        arch, cfg, params, batch = arch_setup
+        tokens = batch["tokens"]
+        kw = {k: v for k, v in batch.items() if k != "tokens"}
+        caches = init_lm_caches(cfg, 2, 32)
+        lg_p, caches = lm_prefill(params, cfg, tokens, caches, **kw)
+        lg_d, caches = lm_decode(params, cfg, tokens[:, :1], caches)
+        ext = jnp.concatenate([tokens, tokens[:, :1]], axis=1)
+        full, _ = lm_forward(params, cfg, ext, **kw)
+        np.testing.assert_allclose(np.asarray(lg_p[:, 0]),
+                                   np.asarray(full[:, 15]),
+                                   atol=5e-4, rtol=5e-4)
+        np.testing.assert_allclose(np.asarray(lg_d[:, 0]),
+                                   np.asarray(full[:, 16]),
+                                   atol=5e-4, rtol=5e-4)
+
+    def test_multi_step_decode_finite(self, arch_setup):
+        arch, cfg, params, batch = arch_setup
+        tokens = batch["tokens"]
+        kw = {k: v for k, v in batch.items() if k != "tokens"}
+        caches = init_lm_caches(cfg, 2, 32)
+        lg, caches = lm_prefill(params, cfg, tokens, caches, **kw)
+        cur = jnp.argmax(lg, axis=-1)
+        for _ in range(4):
+            lg, caches = lm_decode(params, cfg, cur, caches)
+            cur = jnp.argmax(lg[:, -1:], axis=-1)
+            assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+class TestRegistry:
+    def test_all_archs_present(self):
+        assert len(ARCH_IDS) == 10
+
+    def test_grid_is_40_cells(self):
+        from repro.configs.registry import grid
+        cells = grid()
+        assert len(cells) == 40
+        skips = [c for c in cells if c[2]]
+        # long_500k skipped for the 8 full-attention archs only
+        assert len(skips) == 8
+        assert all(c[1].name == "long_500k" for c in skips)
+
+    def test_sub_quadratic_flags(self):
+        assert get_config("rwkv6-1.6b").sub_quadratic
+        assert get_config("recurrentgemma-9b").sub_quadratic
+        assert not get_config("qwen2.5-32b").sub_quadratic
+        assert not get_config("seamless-m4t-large-v2").sub_quadratic
+
+    def test_exact_assigned_dimensions(self):
+        c = get_config("qwen2.5-32b")
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab) == (64, 5120, 40, 8, 27648, 152064)
+        c = get_config("deepseek-v2-lite-16b")
+        assert (c.n_layers, c.d_model, c.n_experts, c.top_k,
+                c.kv_lora) == (27, 2048, 64, 6, 512)
+        c = get_config("recurrentgemma-9b")
+        assert c.block_pattern == ("rglru", "rglru", "local_attn")
+        assert (c.n_layers, c.attn_window) == (38, 2048)
+        c = get_config("rwkv6-1.6b")
+        assert (c.n_layers, c.d_model, c.vocab) == (24, 2048, 65536)

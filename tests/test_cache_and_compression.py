@@ -1,0 +1,154 @@
+"""Ring-cache wraparound correctness + delta-compressed training parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (KVCache, attention_apply,
+                                    attention_decode, attention_prefill,
+                                    init_attention)
+
+
+class TestRingCacheWraparound:
+    """Local attention with a window-sized ring must equal full attention
+    restricted to the window — including after the ring wraps."""
+
+    def _setup(self, window=8, d_model=32, heads=2, kv=1):
+        key = jax.random.PRNGKey(0)
+        params = init_attention(key, d_model, heads, kv, d_model // heads)
+        kw = dict(n_heads=heads, n_kv_heads=kv, head_dim=d_model // heads,
+                  window=window)
+        return params, kw, d_model
+
+    def test_decode_past_window_matches_full_sequence(self):
+        window = 8
+        params, kw, d = self._setup(window)
+        b, s_total = 2, 24                       # 3x the window => wraps twice
+        key = jax.random.PRNGKey(1)
+        xs = jax.random.normal(key, (b, s_total, d)) * 0.5
+
+        # reference: full-sequence local attention (no cache)
+        want = attention_apply(params, xs, causal=True, **kw)
+
+        # prefill 4 tokens (< window), then decode one-by-one through wraps
+        cache = KVCache.zeros(b, window, kw["n_kv_heads"], kw["head_dim"],
+                              jnp.float32)
+        out_p, cache = attention_prefill(params, xs[:, :4], cache, **kw)
+        outs = [out_p]
+        for t in range(4, s_total):
+            y, cache = attention_decode(params, xs[:, t:t + 1], cache, **kw)
+            outs.append(y)
+        got = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+
+    def test_ring_slots_hold_window_positions(self):
+        window = 4
+        params, kw, d = self._setup(window)
+        cache = KVCache.zeros(1, window, 1, d // 2, jnp.float32)
+        xs = jax.random.normal(jax.random.PRNGKey(2), (1, 11, d))
+        _, cache = attention_prefill(params, xs[:, :3], cache, **kw)
+        for t in range(3, 11):
+            _, cache = attention_decode(params, xs[:, t:t + 1], cache, **kw)
+        pos = np.sort(np.asarray(cache.positions[0]))
+        np.testing.assert_array_equal(pos, [7, 8, 9, 10])  # last `window`
+
+    def test_ragged_slots_decode_independently(self):
+        """Two slots at different positions (continuous batching) stay
+        consistent with their own single-slot runs."""
+        params, kw, d = self._setup(window=None or 16)
+        kw["window"] = None
+        key = jax.random.PRNGKey(3)
+        xa = jax.random.normal(key, (1, 6, d)) * 0.5
+        xb = jax.random.normal(jax.random.fold_in(key, 1), (1, 3, d)) * 0.5
+
+        def run_single(x, steps):
+            cache = KVCache.zeros(1, 16, kw["n_kv_heads"], kw["head_dim"],
+                                  jnp.float32)
+            _, cache = attention_prefill(params, x, cache, **kw)
+            ys = []
+            for t in range(steps):
+                y, cache = attention_decode(params, x[:, -1:], cache, **kw)
+                ys.append(y)
+            return jnp.concatenate(ys, 1)
+
+        ya = run_single(xa, 3)
+        yb = run_single(xb, 3)
+
+        # batched: slot 0 has 6 tokens, slot 1 has 3 (ragged indices)
+        cache = KVCache.zeros(2, 16, kw["n_kv_heads"], kw["head_dim"],
+                              jnp.float32)
+        xpad = jnp.concatenate(
+            [xa, jnp.concatenate([xb, jnp.zeros((1, 3, d))], 1)], 0)
+        _, cache = attention_prefill(params, xpad, cache, **kw)
+        # fix slot 1's index to its true length (scheduler's job)
+        cache = cache._replace(index=jnp.array([6, 3], jnp.int32))
+        x_steps = jnp.concatenate([xa[:, -1:], xb[:, -1:]], 0)
+        ys = []
+        for t in range(3):
+            y, cache = attention_decode(params, x_steps, cache, **kw)
+            ys.append(y)
+        got = jnp.concatenate(ys, 1)
+        np.testing.assert_allclose(np.asarray(got[0]), np.asarray(ya[0]),
+                                   atol=2e-4)
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(yb[0]),
+                                   atol=2e-4)
+
+
+class TestCompressedTraining:
+    """Delta gradient compression wired into the real train step: loss
+    trajectory stays close to dense sync while the wire payload shrinks."""
+
+    def test_compressed_training_parity(self):
+        from repro.data.synthetic import batch_stream, gas_batch
+        from repro.dist.grad_compress import (CompressionConfig, compress,
+                                              init_residual)
+        from repro.models.gru_rnn import GruTaskConfig, init_gru_model
+        from repro.train.optim import AdamConfig, constant_schedule
+        from repro.train.trainer import init_train_state, make_gru_train_step
+
+        task = GruTaskConfig(14, 24, 1, 1, task="regression")
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        opt = AdamConfig(schedule=constant_schedule(3e-3))
+
+        def run(theta):
+            cfg = CompressionConfig(theta=theta, enabled=theta > 0)
+            residual = {"r": init_residual(params)}
+            fired = []
+
+            base_step = make_gru_train_step(task, opt)
+
+            # emulate the DP hook: compress grads before the update by
+            # wrapping the step with an explicit grad pipeline
+            from repro.train.trainer import TrainState
+            from repro.train.losses import mse_loss
+            from repro.models.gru_rnn import gru_model_forward
+            from repro.train.optim import adam_update
+
+            def loss_fn(p, batch):
+                out, _ = gru_model_forward(p, task, batch["features"])
+                return mse_loss(out, batch["targets"])[0]
+
+            @jax.jit
+            def step(state, res, batch):
+                grads = jax.grad(loss_fn)(state.params, batch)
+                sent, res, stats = compress(grads, res, cfg)
+                p, o, _ = adam_update(sent, state.opt, state.params, opt)
+                return TrainState(p, o), res, stats
+
+            state = init_train_state(params)
+            losses = []
+            for i in range(30):
+                batch = gas_batch(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                                  batch=8, t_len=48)
+                state, residual["r"], stats = step(state, residual["r"], batch)
+                fired.append(float(stats["fired_fraction"]))
+                losses.append(float(loss_fn(state.params, batch)))
+            return losses, float(np.mean(fired))
+
+        dense_losses, _ = run(0.0)
+        comp_losses, fired_frac = run(2e-4)
+        assert fired_frac < 0.9            # real wire savings
+        # error feedback keeps training on track
+        assert comp_losses[-1] < dense_losses[0]
+        assert comp_losses[-1] < dense_losses[-1] * 2.5 + 0.1

@@ -1,0 +1,135 @@
+"""Unit + property tests for the delta-network core (Eq. 2/3/4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.delta import (delta_encode, delta_encode_sequence,
+                              init_delta_state, reconstruct_from_deltas)
+from repro.core.delta_dense import delta_linear_reference
+from repro.core.deltagru import (deltagru_sequence, gru_sequence,
+                                 init_gru_stack)
+from repro.core.deltalstm import (deltalstm_sequence, init_lstm_stack,
+                                  lstm_sequence)
+from repro.core.sparsity import GruDims, effective_sparsity
+
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+class TestDeltaEncode:
+    def test_zero_threshold_is_exact_differencing(self):
+        xs = jax.random.normal(jax.random.PRNGKey(0), (11, 7))
+        deltas, fired, _ = delta_encode_sequence(xs, 0.0)
+        recon = reconstruct_from_deltas(deltas)
+        np.testing.assert_allclose(recon, xs, atol=1e-6)
+
+    def test_fired_iff_above_threshold(self):
+        state = init_delta_state((5,))
+        x = jnp.array([0.0, 0.05, 0.1, 0.2, -0.3])
+        out = delta_encode(x, state, 0.1)
+        np.testing.assert_array_equal(
+            np.asarray(out.fired), [False, False, True, True, True])
+        # non-fired elements leave memory untouched (zeros)
+        np.testing.assert_allclose(out.state.memory[:2], [0.0, 0.0])
+
+    @settings(max_examples=25, deadline=None)
+    @given(SEEDS, st.floats(0.0, 0.5))
+    def test_memory_tracks_thresholded_signal(self, seed, theta):
+        xs = jax.random.normal(jax.random.PRNGKey(seed), (8, 4))
+        deltas, fired, final = delta_encode_sequence(xs, theta)
+        # reconstruction == state-memory trajectory; error bounded by theta
+        recon = reconstruct_from_deltas(deltas)
+        err = np.abs(np.asarray(recon[-1] - xs[-1]))
+        assert (err <= theta + 1e-6).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(SEEDS)
+    def test_sparsity_monotone_in_theta(self, seed):
+        xs = jax.random.normal(jax.random.PRNGKey(seed), (16, 8)) * 0.3
+        frac = []
+        for theta in (0.0, 0.05, 0.2, 0.8):
+            _, fired, _ = delta_encode_sequence(xs, theta)
+            frac.append(float(jnp.mean(fired.astype(jnp.float32))))
+        assert all(a >= b - 1e-9 for a, b in zip(frac, frac[1:]))
+
+
+class TestDeltaGru:
+    @settings(max_examples=10, deadline=None)
+    @given(SEEDS)
+    def test_equals_gru_at_zero_threshold(self, seed):
+        k = jax.random.PRNGKey(seed)
+        params = init_gru_stack(k, 12, 24, 2)
+        xs = jax.random.normal(jax.random.fold_in(k, 1), (15, 3, 12))
+        ys_ref = gru_sequence(params, xs)
+        ys, _, _ = deltagru_sequence(params, xs, 0.0, 0.0)
+        np.testing.assert_allclose(ys, ys_ref, atol=2e-5)
+
+    def test_bounded_divergence_small_theta(self):
+        k = jax.random.PRNGKey(3)
+        params = init_gru_stack(k, 8, 16, 1)
+        xs = jax.random.normal(jax.random.fold_in(k, 1), (20, 2, 8))
+        ys_ref = gru_sequence(params, xs)
+        ys, _, stats = deltagru_sequence(params, xs, 0.05, 0.05)
+        assert float(jnp.max(jnp.abs(ys - ys_ref))) < 0.5
+        assert 0.0 < float(stats["gamma_dh"]) < 1.0
+
+    def test_sparsity_stats_increase_with_theta(self):
+        k = jax.random.PRNGKey(4)
+        params = init_gru_stack(k, 8, 16, 2)
+        xs = jax.random.normal(jax.random.fold_in(k, 1), (30, 2, 8)) * 0.5
+        _, _, lo = deltagru_sequence(params, xs, 0.01, 0.01)
+        _, _, hi = deltagru_sequence(params, xs, 0.3, 0.3)
+        assert float(hi["gamma_dh"]) > float(lo["gamma_dh"])
+        assert float(hi["gamma_dx"]) > float(lo["gamma_dx"])
+
+    def test_gradients_flow(self):
+        k = jax.random.PRNGKey(5)
+        params = init_gru_stack(k, 6, 8, 1)
+        xs = jax.random.normal(jax.random.fold_in(k, 1), (10, 2, 6))
+
+        def loss(p):
+            ys, _, _ = deltagru_sequence(p, xs, 0.05, 0.05,
+                                         collect_sparsity=False)
+            return jnp.sum(ys ** 2)
+
+        grads = jax.grad(loss)(params)
+        gn = sum(float(jnp.sum(jnp.abs(g)))
+                 for g in jax.tree_util.tree_leaves(grads))
+        assert np.isfinite(gn) and gn > 0
+
+
+class TestDeltaLstm:
+    def test_equals_lstm_at_zero_threshold(self):
+        k = jax.random.PRNGKey(0)
+        params = init_lstm_stack(k, 10, 20, 2)
+        xs = jax.random.normal(jax.random.fold_in(k, 1), (12, 2, 10))
+        ys_ref = lstm_sequence(params, xs)
+        ys, _ = deltalstm_sequence(params, xs, 0.0, 0.0)
+        np.testing.assert_allclose(ys, ys_ref, atol=2e-5)
+
+
+class TestDeltaLinear:
+    @settings(max_examples=15, deadline=None)
+    @given(SEEDS)
+    def test_exact_at_zero_theta(self, seed):
+        k = jax.random.PRNGKey(seed)
+        w = jax.random.normal(k, (9, 6))
+        xs = jax.random.normal(jax.random.fold_in(k, 1), (14, 2, 6))
+        ys = delta_linear_reference(w, xs, 0.0)
+        np.testing.assert_allclose(ys, jnp.einsum("tbi,oi->tbo", xs, w),
+                                   atol=1e-4)
+
+
+class TestSparsityMetrics:
+    def test_effective_sparsity_table6_value(self):
+        # paper Table VI: 2L-768H at Θ=64 has Γ_eff = 90.0 %
+        dims = GruDims(40, 768, 2)
+        assert abs(effective_sparsity(dims, 0.870, 0.916) - 0.900) < 2e-3
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(0, 1), st.floats(0, 1))
+    def test_effective_sparsity_bounds(self, gx, gh):
+        dims = GruDims(40, 256, 2)
+        g = effective_sparsity(dims, gx, gh)
+        assert min(gx, gh) - 1e-9 <= g <= max(gx, gh) + 1e-9

@@ -1,0 +1,187 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+TOL = {jnp.float32: dict(atol=5e-5, rtol=5e-5),
+       jnp.bfloat16: dict(atol=5e-2, rtol=5e-2)}
+
+
+def _tol(dtype):
+    return TOL[jnp.bfloat16] if dtype == jnp.bfloat16 else TOL[jnp.float32]
+
+
+class TestDeltaSpmv:
+    @pytest.mark.parametrize("o,i,b", [(128, 128, 1), (256, 384, 2),
+                                       (300, 200, 4), (64, 513, 1),
+                                       (1000, 999, 3)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, o, i, b, dtype):
+        k = jax.random.PRNGKey(o * 7 + i)
+        w = jax.random.normal(k, (o, i), dtype)
+        dx = jax.random.normal(jax.random.fold_in(k, 1), (b, i), dtype)
+        mask = jax.random.bernoulli(jax.random.fold_in(k, 2), 0.3, (b, i))
+        dx = dx * mask
+        acc = jax.random.normal(jax.random.fold_in(k, 3), (b, o), dtype)
+        got = ops.delta_spmv(w, dx, acc, interpret=True)
+        want = ref.delta_spmv_ref(w, dx, acc)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    def test_all_zero_delta_returns_acc(self):
+        w = jnp.ones((128, 128))
+        dx = jnp.zeros((1, 128))
+        acc = jnp.arange(128, dtype=jnp.float32)[None]
+        got = ops.delta_spmv(w, dx, acc, interpret=True)
+        np.testing.assert_allclose(got, acc)
+
+    def test_hbm_bytes_model_scales_with_sparsity(self):
+        dx_dense = jnp.ones((1, 512))
+        dx_sparse = jnp.zeros((1, 512)).at[0, :128].set(1.0)
+        dense = float(ops.delta_spmv_hbm_bytes((256, 512), dx_dense))
+        sparse = float(ops.delta_spmv_hbm_bytes((256, 512), dx_sparse))
+        assert sparse == dense / 4  # 1 of 4 k-blocks fired
+
+
+class TestDeltaGruAct:
+    @pytest.mark.parametrize("b,h", [(1, 128), (2, 200), (4, 768)])
+    def test_matches_ref(self, b, h):
+        k = jax.random.PRNGKey(b * 31 + h)
+        m = jax.random.normal(k, (b, 4 * h))
+        zx = jax.random.normal(jax.random.fold_in(k, 1), (b, 3 * h))
+        zh = jax.random.normal(jax.random.fold_in(k, 2), (b, 3 * h))
+        hp = jax.random.normal(jax.random.fold_in(k, 3), (b, h))
+        m1, h1 = ops.deltagru_act(m, zx, zh, hp, interpret=True)
+        m2, h2 = ref.deltagru_act_ref(m, zx, zh, hp)
+        np.testing.assert_allclose(m1, m2, atol=1e-5)
+        np.testing.assert_allclose(h1, h2, atol=1e-5)
+
+    def test_fused_cell_equals_deltagru_step(self):
+        """kernel composition == core.deltagru.deltagru_step semantics."""
+        from repro.core.delta import delta_encode, init_delta_state
+        from repro.core.deltagru import (deltagru_step, init_deltagru_state,
+                                         init_gru_layer)
+        k = jax.random.PRNGKey(0)
+        p = init_gru_layer(k, 16, 32)
+        st = init_deltagru_state(p, (1,))
+        x = jax.random.normal(jax.random.fold_in(k, 1), (1, 16))
+        want = deltagru_step(p, st, x, 0.05, 0.05)
+        dx = delta_encode(x, st.x_mem, 0.05).delta
+        dh = delta_encode(st.h, st.h_mem, 0.05).delta
+        m_new, h_new = ops.deltagru_cell_fused(p.w_x, p.w_h, st.m, st.h,
+                                               dx, dh, interpret=True)
+        np.testing.assert_allclose(h_new, want.h, atol=1e-5)
+        np.testing.assert_allclose(m_new, want.state.m, atol=1e-5)
+
+
+class TestRwkv6Scan:
+    @pytest.mark.parametrize("b,h,t,d", [(1, 1, 16, 64), (2, 3, 37, 64),
+                                         (1, 2, 128, 64)])
+    @pytest.mark.parametrize("chunk", [16, 64])
+    def test_matches_ref(self, b, h, t, d, chunk):
+        k = jax.random.PRNGKey(t)
+        mk = lambda i: jax.random.normal(jax.random.fold_in(k, i),
+                                         (b, h, t, d)) * 0.1
+        r, kk, v = mk(0), mk(1), mk(2)
+        w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(k, 3),
+                                             (b, h, t, d)))
+        u = jax.random.normal(jax.random.fold_in(k, 4), (h, d)) * 0.1
+        y1, s1 = ops.rwkv6_scan(r, kk, v, w, u, chunk=chunk, interpret=True)
+        y2, s2 = ref.rwkv6_scan_batched_ref(r, kk, v, w, u)
+        np.testing.assert_allclose(y1, y2, atol=1e-5)
+        np.testing.assert_allclose(s1, s2, atol=1e-5)
+
+    def test_state_carry_across_calls(self):
+        """Split sequence == single call (decode-chunk streaming)."""
+        k = jax.random.PRNGKey(9)
+        b, h, t, d = 1, 2, 32, 64
+        mk = lambda i: jax.random.normal(jax.random.fold_in(k, i),
+                                         (b, h, t, d)) * 0.1
+        r, kk, v = mk(0), mk(1), mk(2)
+        w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(k, 3),
+                                             (b, h, t, d)))
+        u = jax.random.normal(jax.random.fold_in(k, 4), (h, d)) * 0.1
+        y_full, s_full = ops.rwkv6_scan(r, kk, v, w, u, chunk=16,
+                                        interpret=True)
+        half = t // 2
+        y1, s1 = ops.rwkv6_scan(r[:, :, :half], kk[:, :, :half],
+                                v[:, :, :half], w[:, :, :half], u,
+                                chunk=16, interpret=True)
+        y2, s2 = ops.rwkv6_scan(r[:, :, half:], kk[:, :, half:],
+                                v[:, :, half:], w[:, :, half:], u, s1,
+                                chunk=16, interpret=True)
+        np.testing.assert_allclose(jnp.concatenate([y1, y2], 2), y_full,
+                                   atol=1e-5)
+        np.testing.assert_allclose(s2, s_full, atol=1e-5)
+
+
+class TestRglruScan:
+    @pytest.mark.parametrize("b,t,d", [(1, 16, 128), (2, 50, 200),
+                                       (3, 33, 64)])
+    @pytest.mark.parametrize("chunk", [16, 128])
+    def test_matches_ref(self, b, t, d, chunk):
+        k = jax.random.PRNGKey(d)
+        x = jax.random.normal(k, (b, t, d))
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(k, 1),
+                                             (b, t, d)))
+        y1, h1 = ops.rglru_scan(x, a, chunk=chunk, interpret=True)
+        y2, h2 = ref.rglru_scan_batched_ref(x, a)
+        np.testing.assert_allclose(y1, y2, atol=1e-5)
+        np.testing.assert_allclose(h1, h2, atol=1e-5)
+
+    def test_decay_one_freezes_state(self):
+        x = jnp.ones((1, 8, 16))
+        a = jnp.ones((1, 8, 16))           # a=1 -> h frozen at h0
+        h0 = jnp.full((1, 16), 3.0)
+        y, hT = ops.rglru_scan(x, a, h0, chunk=8, interpret=True)
+        np.testing.assert_allclose(hT, h0, atol=1e-6)
+
+
+class TestChunkedRecurrences:
+    """§Perf hillclimb paths must stay exactly equal to the oracles."""
+
+    @pytest.mark.parametrize("t,chunk", [(64, 16), (100, 16), (37, 8)])
+    def test_rwkv6_chunked_matches_scan(self, t, chunk):
+        k = jax.random.PRNGKey(t)
+        B, H, D = 2, 2, 64
+        mk = lambda i: jax.random.normal(jax.random.fold_in(k, i),
+                                         (B, H, t, D)) * 0.2
+        r, kk, v = mk(0), mk(1), mk(2)
+        w = jnp.exp(-jnp.exp(
+            jax.random.normal(jax.random.fold_in(k, 3), (B, H, t, D)) - 2))
+        u = jax.random.normal(jax.random.fold_in(k, 4), (H, D)) * 0.1
+        s0 = jax.random.normal(jax.random.fold_in(k, 5), (B, H, D, D)) * 0.1
+        y1, s1 = ref.rwkv6_scan_batched_ref(r, kk, v, w, u, s0)
+        y2, s2 = ops.rwkv6_chunked(r, kk, v, w, u, s0, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-5)
+
+    def test_rwkv6_chunked_differentiable(self):
+        k = jax.random.PRNGKey(0)
+        B, H, T, D = 1, 1, 32, 64
+        r = jax.random.normal(k, (B, H, T, D)) * 0.2
+        kk = jax.random.normal(jax.random.fold_in(k, 1), (B, H, T, D)) * 0.2
+        v = jax.random.normal(jax.random.fold_in(k, 2), (B, H, T, D)) * 0.2
+        w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(k, 3),
+                                             (B, H, T, D)))
+        u = jnp.zeros((H, D))
+        g = jax.grad(lambda r: float(0) + jnp.sum(
+            ops.rwkv6_chunked(r, kk, v, w, u)[0] ** 2))(r)
+        assert bool(jnp.all(jnp.isfinite(g)))
+
+    @pytest.mark.parametrize("t", [16, 100, 257])
+    def test_rglru_assoc_matches_scan(self, t):
+        k = jax.random.PRNGKey(t)
+        B, D = 3, 32
+        x = jax.random.normal(k, (B, t, D))
+        a = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(k, 1),
+                                             (B, t, D)))
+        h0 = jax.random.normal(jax.random.fold_in(k, 2), (B, D))
+        y1, hT1 = ref.rglru_scan_batched_ref(x, a, h0)
+        y2, hT2 = ref.rglru_assoc_ref(x, a, h0)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(hT1), np.asarray(hT2),
+                                   atol=2e-5)

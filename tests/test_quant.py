@@ -1,0 +1,73 @@
+"""Quantization substrate tests (paper Sec. IV-A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.fake_quant import (ACT_Q88, LUT_Q14, WGT_Q17, QFormat,
+                                    fake_quant, quantize, to_int)
+from repro.quant.lut import lut_sigmoid, lut_tanh
+from repro.quant.qat import EDGEDRNN_QAT
+
+
+class TestQFormat:
+    def test_q88_grid(self):
+        assert ACT_Q88.bits == 17  # sign + 8 + 8 (paper stores as INT16+grid)
+        assert ACT_Q88.scale == 256.0
+        q = quantize(jnp.array([0.12345]), ACT_Q88)
+        np.testing.assert_allclose(q, jnp.round(jnp.array([0.12345]) * 256) / 256)
+
+    def test_clipping(self):
+        q = quantize(jnp.array([5.0, -5.0]), QFormat(1, 4))
+        np.testing.assert_allclose(q, [2.0 - 1 / 16, -2.0])
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.floats(-0.99, 0.99))
+    def test_int8_weight_roundtrip(self, w):
+        q = quantize(jnp.array([w]), WGT_Q17)
+        i = to_int(jnp.array([w]), WGT_Q17)
+        assert i.dtype == jnp.int8
+        np.testing.assert_allclose(i.astype(jnp.float32) / WGT_Q17.scale, q,
+                                   atol=1e-6)
+
+    def test_ste_gradient_is_identity(self):
+        g = jax.grad(lambda x: jnp.sum(fake_quant(x, WGT_Q17) * 3.0))(
+            jnp.array([0.3, -0.5]))
+        np.testing.assert_allclose(g, [3.0, 3.0])
+
+
+class TestLut:
+    def test_lut_output_on_grid(self):
+        lut = lut_sigmoid(4)  # Q1.4: steps of 1/16
+        y = lut(jnp.linspace(-4, 4, 33))
+        scaled = np.asarray(y) * 16
+        np.testing.assert_allclose(scaled, np.round(scaled), atol=1e-5)
+
+    def test_lut_gradient_is_exact_function(self):
+        lut = lut_tanh(4)
+        x = jnp.array([0.3])
+        g = jax.grad(lambda z: jnp.sum(lut(z)))(x)
+        np.testing.assert_allclose(g, 1 - jnp.tanh(x) ** 2, atol=1e-6)
+
+    def test_table_export_size(self):
+        tbl = lut_sigmoid(4).table(QFormat(3, 4))  # 8-bit input grid
+        assert tbl.shape == (256,)
+
+    def test_monotone(self):
+        lut = lut_sigmoid(4)
+        y = np.asarray(lut(jnp.linspace(-8, 8, 1001)))
+        assert (np.diff(y) >= -1e-6).all()
+
+
+class TestQatPolicy:
+    def test_qat_deltagru_close_to_fp32(self):
+        """Paper: Q1.4 LUT 'did not lead to accuracy loss' — outputs of the
+        quantized net stay close to FP32 on smooth inputs."""
+        from repro.models.gru_rnn import GruTaskConfig, gru_model_forward, \
+            init_gru_model
+        task = GruTaskConfig(8, 16, 1, 2, theta_x=0.0, theta_h=0.0)
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        xs = 0.5 * jnp.sin(jnp.arange(20.0))[:, None, None] * jnp.ones((20, 2, 8))
+        y_fp, _ = gru_model_forward(params, task, xs)
+        y_q, _ = gru_model_forward(params, task, xs, qat=EDGEDRNN_QAT)
+        assert float(jnp.max(jnp.abs(y_fp - y_q))) < 0.25

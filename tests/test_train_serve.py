@@ -1,0 +1,178 @@
+"""Training loop, CTC, losses, serving engine + scheduler integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_config
+from repro.data.synthetic import batch_stream, digit_batch, gas_batch
+from repro.models.gru_rnn import GruTaskConfig, init_gru_model
+from repro.models.lm import init_lm
+from repro.serve.engine import GruStreamEngine, LmEngine
+from repro.serve.scheduler import ContinuousBatcher
+from repro.train.ctc import ctc_greedy_decode, ctc_loss, edit_distance
+from repro.train.losses import lm_loss, mse_loss, r_squared, softmax_cross_entropy
+from repro.train.optim import (AdamConfig, adam_update, constant_schedule,
+                               global_norm, init_adam_state,
+                               warmup_cosine_schedule)
+from repro.train.trainer import (init_train_state, make_gru_train_step,
+                                 train_loop)
+
+
+class TestOptim:
+    def test_adam_reduces_quadratic(self):
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = init_adam_state(params)
+        cfg = AdamConfig(schedule=constant_schedule(0.1))
+        for _ in range(120):
+            grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+            params, state, _ = adam_update(grads, state, params, cfg)
+        assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+    def test_warmup_cosine_shape(self):
+        sched = warmup_cosine_schedule(1e-3, 10, 100)
+        assert float(sched(0)) == 0.0
+        assert abs(float(sched(10)) - 1e-3) < 1e-9
+        assert float(sched(100)) < float(sched(50)) < float(sched(10))
+
+    def test_clip_norm_applied(self):
+        cfg = AdamConfig(schedule=constant_schedule(0.0), clip_norm=1.0)
+        params = {"w": jnp.zeros(4)}
+        state = init_adam_state(params)
+        _, _, m = adam_update({"w": jnp.full(4, 100.0)}, state, params, cfg)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+class TestCtc:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1000))
+    def test_matches_bruteforce(self, seed):
+        import itertools
+        t, c, l = 5, 3, 2
+        lp = jax.nn.log_softmax(
+            jax.random.normal(jax.random.PRNGKey(seed), (t, 1, c)), -1)
+        labels = jnp.array([[1, 2]])
+        got = float(ctc_loss(lp, labels, jnp.array([t]), jnp.array([l]))[0])
+        tot = 0.0
+        for path in itertools.product(range(c), repeat=t):
+            out, prev = [], None
+            for s in path:
+                if s != 0 and s != prev:
+                    out.append(s)
+                prev = s
+            if out == [1, 2]:
+                tot += float(jnp.exp(sum(lp[i, 0, path[i]] for i in range(t))))
+        assert got == pytest.approx(-np.log(tot), rel=1e-4)
+
+    def test_variable_lengths(self):
+        t, b, c = 8, 2, 4
+        lp = jax.nn.log_softmax(
+            jax.random.normal(jax.random.PRNGKey(0), (t, b, c)), -1)
+        labels = jnp.array([[1, 2], [3, 0]])
+        loss = ctc_loss(lp, labels, jnp.array([8, 5]), jnp.array([2, 1]))
+        assert np.isfinite(np.asarray(loss)).all()
+
+    def test_greedy_and_edit_distance(self):
+        assert edit_distance([1, 2, 3], [1, 3]) == 1
+        assert edit_distance([], [1, 2]) == 2
+        assert edit_distance([1, 2], [1, 2]) == 0
+
+
+class TestLosses:
+    def test_ce_uniform(self):
+        logits = jnp.zeros((2, 3, 7))
+        labels = jnp.zeros((2, 3), jnp.int32)
+        loss, m = softmax_cross_entropy(logits, labels, z_loss=0.0)
+        assert float(loss) == pytest.approx(np.log(7), rel=1e-5)
+
+    def test_lm_loss_shifts(self):
+        # perfect next-token predictor => ~0 loss
+        tokens = jnp.array([[1, 2, 3, 1]])
+        logits = jax.nn.one_hot(jnp.array([[2, 3, 1, 0]]), 5) * 100.0
+        loss, _ = lm_loss(logits, tokens, z_loss=0.0)
+        assert float(loss) < 1e-3
+
+    def test_r_squared_perfect(self):
+        y = jnp.arange(10.0)
+        assert float(r_squared(y, y)) == pytest.approx(1.0)
+
+
+class TestGruTraining:
+    def test_gas_regression_converges(self):
+        task = GruTaskConfig(14, 32, 2, 1, task="regression",
+                             theta_x=0.05, theta_h=0.05)
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        step = make_gru_train_step(
+            task, AdamConfig(schedule=constant_schedule(3e-3)))
+        state = init_train_state(params)
+        stream = batch_stream(gas_batch, jax.random.PRNGKey(1), batch=8,
+                              t_len=64)
+        state, hist = train_loop(step, state, stream, 25)
+        assert hist[-1]["loss"] < hist[0]["loss"] * 0.3
+
+    def test_delta_vs_dense_training_parity(self):
+        """Paper claim: training WITH the delta op (theta small) reaches a
+        loss close to the dense GRU baseline."""
+        mk = lambda tx, th, use_delta: None
+        losses = {}
+        for name, (tx, th, ud) in {"dense": (0, 0, False),
+                                   "delta": (0.05, 0.05, True)}.items():
+            task = GruTaskConfig(14, 24, 1, 1, task="regression",
+                                 theta_x=tx, theta_h=th)
+            params = init_gru_model(jax.random.PRNGKey(0), task)
+            step = make_gru_train_step(
+                task, AdamConfig(schedule=constant_schedule(3e-3)),
+                use_delta=ud)
+            state = init_train_state(params)
+            stream = batch_stream(gas_batch, jax.random.PRNGKey(1), batch=8,
+                                  t_len=48)
+            state, hist = train_loop(step, state, stream, 25)
+            losses[name] = hist[-1]["loss"]
+        assert losses["delta"] < losses["dense"] * 2.0 + 0.2
+
+
+class TestServing:
+    def test_lm_engine_greedy_deterministic(self):
+        cfg = get_config("olmo-1b").reduced()
+        eng = LmEngine(init_lm(jax.random.PRNGKey(0), cfg), cfg,
+                       batch=2, max_len=48)
+        toks = jnp.array([[1, 2, 3, 4], [5, 6, 7, 8]])
+        out1 = eng.generate_greedy(toks, steps=4)
+        eng2 = LmEngine(init_lm(jax.random.PRNGKey(0), cfg), cfg,
+                        batch=2, max_len=48)
+        out2 = eng2.generate_greedy(toks, steps=4)
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+    def test_continuous_batcher_drains(self):
+        cfg = get_config("llama3.2-1b").reduced()
+        eng = LmEngine(init_lm(jax.random.PRNGKey(0), cfg), cfg,
+                       batch=3, max_len=64)
+        cb = ContinuousBatcher(eng)
+        uids = [cb.submit([1, 2, 3], max_new_tokens=4) for _ in range(7)]
+        done = cb.run_until_drained()
+        assert sorted(r.uid for r in done) == sorted(uids)
+        assert all(len(r.output) == 4 for r in done)
+
+    def test_stream_engine_sparsity_and_latency_model(self):
+        task = GruTaskConfig(14, 32, 2, 1, task="regression",
+                             theta_x=0.1, theta_h=0.1)
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        eng = GruStreamEngine(params, task)
+        for t in range(30):
+            eng.step(np.sin(np.arange(14) * 0.3 + t * 0.02))
+        rep = eng.report()
+        assert 0.2 < rep["gamma_dh"] < 1.0
+        assert rep["mean_est_latency_us"] > 0
+
+    def test_dynamic_threshold_controller_converges(self):
+        """Paper Sec. VI future work: closed-loop Θ tracking a firing target."""
+        task = GruTaskConfig(14, 32, 1, 1, task="regression",
+                             theta_x=0.02, theta_h=0.02)
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        eng = GruStreamEngine(params, task, dynamic_target_fired=0.2)
+        for t in range(60):
+            eng.step(np.sin(np.arange(14) * 0.5 + t * 0.3) * 2.0)
+        rep = eng.report()
+        fired_h = 1 - rep["gamma_dh"]
+        assert rep["theta_h"] != 0.02  # controller actually moved
