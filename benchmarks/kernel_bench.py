@@ -1,14 +1,23 @@
-"""Kernel-level benchmark: delta_spmv block-skip efficiency.
+"""Kernel-level benchmark: delta_spmv block-skip efficiency + the
+sequence-level backend shootout.
 
-Reports the modeled HBM weight traffic of the Pallas block-sparse matvec
-across sparsity levels (the Eq. 8 law at 128-wide block granularity) and
-wall-time of the interpret-mode kernel as a correctness smoke. Structured
-(burst) sparsity keeps block skipping near the element-level ideal;
-unstructured sparsity shows the block-granularity gap — exactly the
-trade-off DESIGN.md §2 documents for the TPU adaptation.
+Part 1 reports the modeled HBM weight traffic of the Pallas block-sparse
+matvec across sparsity levels (the Eq. 8 law at 128-wide block granularity)
+and wall-time of the interpret-mode kernel as a correctness smoke.
+Structured (burst) sparsity keeps block skipping near the element-level
+ideal; unstructured sparsity shows the block-granularity gap.
+
+Part 2 (``run_seq``) times whole-sequence DeltaGRU execution per backend —
+the seed's per-step Python dispatch loop (one jit call + host sync per
+timestep, what ``GruStreamEngine.step`` used to do) against the scanned
+``dense`` / ``blocksparse`` / ``fused`` paths — at several temporal
+sparsity levels, and writes a ``BENCH_deltagru_seq.json`` record so the
+perf trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -18,6 +27,9 @@ import numpy as np
 from repro.kernels import ops
 
 O, I = 2048, 2048
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__),
+                          "BENCH_deltagru_seq.json")
 
 
 def _traffic(dx):
@@ -54,6 +66,85 @@ def run() -> list[str]:
     us = (time.perf_counter() - t0) / 3 * 1e6
     lines.append(f"kernel.delta_spmv_interpret_512,{us:.0f},"
                  "interpret-mode (CPU correctness path)")
+    lines.extend(run_seq())
+    return lines
+
+
+def _walk_inputs(key, t, b, i, scale=0.08):
+    """Slowly-varying random walk: the temporally-sparse input regime the
+    delta network exploits (speech features between phoneme boundaries)."""
+    steps = jax.random.normal(key, (t, b, i)) * scale
+    return jnp.cumsum(steps, axis=0)
+
+
+def _time_call(fn, reps=3):
+    jax.block_until_ready(fn())  # warmup / compile, fully drained
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run_seq(t=64, i=128, h=256, layers=2,
+            thetas=(0.0, 0.05, 0.2)) -> list[str]:
+    """Sequence-level wall time: seed dispatch loop vs scanned backends."""
+    from repro.core.deltagru import (deltagru_sequence, deltagru_stack_step,
+                                     init_deltagru_stack_state,
+                                     init_gru_stack)
+    key = jax.random.PRNGKey(0)
+    params = init_gru_stack(key, i, h, layers)
+    xs = _walk_inputs(jax.random.fold_in(key, 1), t, 1, i)
+    lines, rows = [], []
+
+    for theta in thetas:
+        # measured gamma at this theta (from the dense reference run)
+        _, _, st = deltagru_sequence(params, xs, theta, theta)
+        gdx, gdh = float(st["gamma_dx"]), float(st["gamma_dh"])
+
+        # seed path: one jitted step per timestep + a host sync per step
+        step = jax.jit(lambda s, x: deltagru_stack_step(
+            params, s, x, theta, theta))
+
+        def per_step_loop():
+            s = init_deltagru_stack_state(params, (1,))
+            y = None
+            for x in xs:
+                y, s, deltas = step(s, x)
+                float(jnp.mean(deltas[0][0]))   # the seed's per-step sync
+            return y
+
+        times = {"per_step_dispatch": _time_call(per_step_loop)}
+        for be in ("dense", "blocksparse", "fused"):
+            seq = jax.jit(lambda xs, _be=be: deltagru_sequence(
+                params, xs, theta, theta, collect_sparsity=False,
+                backend=_be)[0])
+            times[be] = _time_call(lambda: seq(xs))
+
+        for name, wall in times.items():
+            us = wall / t * 1e6
+            rows.append({"theta": theta, "gamma_dx": round(gdx, 4),
+                         "gamma_dh": round(gdh, 4), "backend": name,
+                         "us_per_step": round(us, 2),
+                         "steps_per_s": round(t / wall, 1)})
+            lines.append(
+                f"kernel.seq_{name}_th{theta},{us:.1f},"
+                f"gamma_dh={gdh:.3f} steps/s={t / wall:.0f}")
+
+    record = {
+        "bench": "deltagru_seq_backends",
+        "unit": "us_per_step",
+        "config": {"t": t, "input": i, "hidden": h, "layers": layers,
+                   "batch": 1,
+                   # off-TPU the kernel backends auto-route per kernels/ops
+                   # conventions (fused -> jnp ref, blocksparse -> interpret)
+                   "device": jax.default_backend()},
+        "created_unix": int(time.time()),
+        "rows": rows,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    lines.append(f"kernel.seq_bench_json,0,wrote {os.path.basename(BENCH_JSON)}")
     return lines
 
 

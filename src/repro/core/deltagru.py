@@ -13,6 +13,22 @@ At ``theta_x == theta_h == 0`` a DeltaGRU is bit-for-bit a standard GRU
 Gate ordering throughout: ``r`` (reset), ``u`` (update), ``c`` (candidate);
 concatenated weights are ``W_x: [3H, I]`` and ``W_h: [3H, H]`` in that order,
 matching the paper's concatenated-column DRAM layout (Fig. 6).
+
+Execution backends (``backend=`` on every step/sequence entry point):
+
+* ``"dense"`` — plain XLA matmuls; the oracle. Zeros in the deltas are
+  multiplied, not skipped.
+* ``"blocksparse"`` — two :func:`repro.kernels.ops.delta_spmv` calls per
+  step (input + recurrent gate blocks): fired-k-block-only weight fetch,
+  separate compaction per matvec (the seed's kernel path, now wired in).
+* ``"fused"`` — :mod:`repro.kernels.deltagru_seq`: ONE pallas_call per
+  layer step over the concatenated ``[3H, I+H]`` Fig. 6 layout with a
+  single compaction, activation pipeline included; sequences run under
+  ``lax.scan`` with zero per-step Python dispatch.
+
+All three are numerically equivalent to the Eq. 3 recurrence (exactly at
+block granularity; the equivalence suite pins fused == blocksparse ==
+dense == the Eq. 1 oracle at ``theta == 0``).
 """
 from __future__ import annotations
 
@@ -24,6 +40,12 @@ import jax.numpy as jnp
 from repro.core.delta import DeltaState, delta_encode, init_delta_state
 
 Array = jax.Array
+
+BACKENDS = ("dense", "blocksparse", "fused")
+
+
+def _default_acts(sigmoid: Callable, tanh: Callable) -> bool:
+    return sigmoid is jax.nn.sigmoid and tanh is jnp.tanh
 
 
 class GruLayerParams(NamedTuple):
@@ -121,23 +143,112 @@ class DeltaGruStepOut(NamedTuple):
     delta_h: Array   # the (sparse) encoded hidden delta actually used
 
 
+def _blocksparse_matvec(params: "GruLayerParams", packed=None,
+                        interpret: bool | None = None,
+                        block_o: int = 128, block_k: int = 128) -> Callable:
+    """``matvec(w, v)`` over arbitrary batch dims via the Pallas delta-spmv.
+
+    ``packed``, when given, is ``(w_x_packed, w_h_packed)`` from
+    :func:`repro.kernels.delta_spmv.pack_spmv_weights`; the pre-padded
+    weight is selected by identity against ``params`` (the only two weights
+    this closure is ever called with), which keeps the per-call ``jnp.pad``
+    out of the hot loop.
+    """
+    from repro.kernels import ops
+
+    def mv(w, v):
+        lead = v.shape[:-1]
+        v2 = v.reshape(-1, v.shape[-1])
+        if packed is not None:
+            wp = packed[0] if w is params.w_x else packed[1]
+            out = ops.delta_spmv(wp, v2, block_o=block_o, block_k=block_k,
+                                 interpret=interpret, packed=True,
+                                 out_dim=w.shape[0])
+        else:
+            out = ops.delta_spmv(w, v2, block_o=block_o, block_k=block_k,
+                                 interpret=interpret)
+        return out.reshape(*lead, w.shape[0]).astype(v.dtype)
+
+    return mv
+
+
+def _fused_layer_step(params: GruLayerParams, state: DeltaGruLayerState,
+                      dx_out, dh_out, layout=None,
+                      interpret: bool | None = None):
+    """Eq. 3 via the single-pallas_call fused kernel (flattens batch dims).
+
+    Mode resolution follows :mod:`repro.kernels.ops`: compiled Pallas on
+    TPU; on other backends the pure-jnp oracle of the same fused math
+    (interpret-mode emulation is a correctness tool, not a perf path —
+    request it explicitly with ``interpret=True``).
+    """
+    from repro.kernels import deltagru_seq as _seq
+    from repro.kernels import ops as _ops
+    if layout is None:
+        layout = _seq.pack_gru_layer(params.w_x, params.w_h)
+    use_ref = _ops._FORCE_REF or (interpret is None
+                                  and _ops._interpret_default())
+    h_dim, i_dim = params.hidden_size, params.input_size
+    lead = state.h.shape[:-1]
+    args = (layout, state.m.reshape(-1, 4 * h_dim),
+            state.h.reshape(-1, h_dim), dx_out.delta.reshape(-1, i_dim),
+            dh_out.delta.reshape(-1, h_dim))
+    if use_ref:
+        m_new, h_new = _seq.deltagru_seq_step_ref(*args)
+    else:
+        m_new, h_new = _seq.deltagru_seq_step(*args,
+                                              interpret=bool(interpret))
+    h_new = h_new.reshape(*lead, h_dim)
+    new_state = DeltaGruLayerState(
+        h=h_new, x_mem=dx_out.state, h_mem=dh_out.state,
+        m=m_new.reshape(*lead, 4 * h_dim))
+    return DeltaGruStepOut(h=h_new, state=new_state,
+                           delta_x=dx_out.delta, delta_h=dh_out.delta)
+
+
 def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
                   theta_x, theta_h,
                   sigmoid: Callable = jax.nn.sigmoid,
                   tanh: Callable = jnp.tanh,
-                  matvec: Callable | None = None) -> DeltaGruStepOut:
+                  matvec: Callable | None = None,
+                  backend: str = "dense",
+                  layout=None,
+                  packed=None,
+                  interpret: bool | None = None) -> DeltaGruStepOut:
     """One DeltaGRU timestep (Eq. 3).
 
     Args:
-      matvec: optional override ``matvec(w, delta) -> product`` used by the
-        Pallas block-sparse kernel path; defaults to a dense matmul (XLA will
-        not exploit the zeros, but semantics are identical).
+      matvec: optional override ``matvec(w, delta) -> product``; takes
+        precedence over ``backend``.
+      backend: ``"dense" | "blocksparse" | "fused"`` (see module docstring).
+      layout: optional pre-packed :class:`FusedGruLayout` for the fused
+        backend (packed on the fly otherwise — sequence entry points pack
+        once and thread it here).
+      packed: optional ``(w_x_packed, w_h_packed)`` pair for the
+        blocksparse backend (see :func:`pack_spmv_weights`).
+      interpret: Pallas mode for the kernel backends. ``None`` (default)
+        auto-selects: compiled kernels on TPU, the pure-jnp references
+        elsewhere (fused) / interpret (blocksparse). ``True`` forces
+        interpret-mode emulation — the kernel-correctness path.
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     h_dim = params.hidden_size
     dx_out = delta_encode(x, state.x_mem, theta_x)
     dh_out = delta_encode(state.h, state.h_mem, theta_h)
     dx, dh = dx_out.delta, dh_out.delta
 
+    if backend == "fused" and matvec is None:
+        if not _default_acts(sigmoid, tanh):
+            raise ValueError("fused backend hard-codes the Fig. 7 activation "
+                             "pipeline; pass backend='dense' (or matvec=) "
+                             "for custom/QAT activations")
+        return _fused_layer_step(params, state, dx_out, dh_out,
+                                 layout=layout, interpret=interpret)
+
+    if matvec is None and backend == "blocksparse":
+        matvec = _blocksparse_matvec(params, packed=packed,
+                                     interpret=interpret)
     mv = matvec if matvec is not None else (lambda w, v: v @ w.T)
     zx = mv(params.w_x, dx)                     # [..., 3H] = W_x @ dx
     zh = mv(params.w_h, dh)                     # [..., 3H] = W_h @ dh
@@ -180,36 +291,73 @@ def init_deltagru_stack_state(params: Sequence[GruLayerParams], batch_shape=(),
 
 def deltagru_stack_step(params: Sequence[GruLayerParams],
                         state: DeltaGruStackState, x: Array,
-                        theta_x, theta_h, **kw):
+                        theta_x, theta_h, layouts=None, packs=None, **kw):
     """One timestep through all layers. Per paper Sec. II-C the *input*
     threshold of layers >= 2 is ``theta_x`` applied to the previous layer's
-    output stream (those deltas count toward Gamma_dx in Eq. 4)."""
+    output stream (those deltas count toward Gamma_dx in Eq. 4).
+
+    ``layouts`` / ``packs`` are optional per-layer pre-packed weights for
+    the fused / blocksparse backends (see :func:`pack_stack`).
+    """
     new_layers = []
     deltas = []
     inp = x
-    for p, st in zip(params, state.layers):
-        out = deltagru_step(p, st, inp, theta_x, theta_h, **kw)
+    for li, (p, st) in enumerate(zip(params, state.layers)):
+        out = deltagru_step(
+            p, st, inp, theta_x, theta_h,
+            layout=layouts[li] if layouts is not None else None,
+            packed=packs[li] if packs is not None else None, **kw)
         new_layers.append(out.state)
         deltas.append((out.delta_x, out.delta_h))
         inp = out.h
     return inp, DeltaGruStackState(tuple(new_layers)), deltas
 
 
+def pack_stack(params: Sequence[GruLayerParams], backend: str,
+               block: int = 128):
+    """Pre-pack every layer's weights for a kernel backend, once.
+
+    Returns ``(layouts, packs)`` — per-layer fused layouts for
+    ``backend == "fused"``, per-layer ``(w_x_packed, w_h_packed)`` pairs
+    for ``"blocksparse"``, ``(None, None)`` for ``"dense"``. This hoists
+    the per-call ``jnp.pad`` out of the scan body: inside a sequence the
+    pads would otherwise re-run every timestep.
+    """
+    if backend == "fused":
+        from repro.kernels.deltagru_seq import pack_gru_layer
+        return [pack_gru_layer(p.w_x, p.w_h, block_h=block, block_k=block)
+                for p in params], None
+    if backend == "blocksparse":
+        from repro.kernels.delta_spmv import pack_spmv_weights
+        return None, [(pack_spmv_weights(p.w_x, block, block),
+                       pack_spmv_weights(p.w_h, block, block))
+                      for p in params]
+    return None, None
+
+
 def deltagru_sequence(params: Sequence[GruLayerParams], xs: Array,
                       theta_x, theta_h,
                       init_state: DeltaGruStackState | None = None,
-                      collect_sparsity: bool = True, **kw):
+                      collect_sparsity: bool = True,
+                      backend: str = "dense", **kw):
     """Run a DeltaGRU stack over ``xs: [T, B, I]`` with ``lax.scan``.
+
+    ``backend`` selects the per-step execution path (see module docstring);
+    kernel backends get their weights packed ONCE here, outside the scan.
 
     Returns (ys ``[T, B, H]``, final_state, stats) where stats holds measured
     per-layer firing fractions for Eq. 4 if ``collect_sparsity``.
     """
     if init_state is None:
         init_state = init_deltagru_stack_state(params, xs.shape[1:-1], xs.dtype)
+    layouts, packs = pack_stack(params, backend)
 
     def step(state, x):
         y, new_state, deltas = deltagru_stack_step(params, state, x,
-                                                   theta_x, theta_h, **kw)
+                                                   theta_x, theta_h,
+                                                   backend=backend,
+                                                   layouts=layouts,
+                                                   packs=packs, **kw)
         if collect_sparsity:
             stats = tuple((jnp.mean((dx == 0).astype(jnp.float32)),
                            jnp.mean((dh == 0).astype(jnp.float32)))

@@ -70,6 +70,25 @@ class StackEstimate:
     gamma_eff: float
 
 
+def stack_effective_macs(dims: GruDims, gamma_dx, gamma_dh):
+    """Eq. 7 numerator: MACs that survive delta skipping.
+
+    Pure arithmetic (no branching), so it is traced-safe — the streaming
+    engine accumulates it on-device inside its jitted step.
+    """
+    i, h, l = dims.input_size, dims.hidden_size, dims.num_layers
+    in_block = 3 * h * i + 3 * h * h * (l - 1)   # gated by delta-x
+    rec_block = 3 * h * h * l                    # gated by delta-h
+    return in_block * (1.0 - gamma_dx) + rec_block * (1.0 - gamma_dh)
+
+
+def stack_latency_s(dims: GruDims, gamma_dx, gamma_dh,
+                    spec: AcceleratorSpec = EDGEDRNN):
+    """Eq. 7 latency: surviving MACs at ``K`` MACs/cycle. Traced-safe."""
+    return stack_effective_macs(dims, gamma_dx, gamma_dh) / (
+        spec.k_pes * spec.f_pl_hz)
+
+
 def estimate_stack(dims: GruDims, gamma_dx: float, gamma_dh: float,
                    spec: AcceleratorSpec = EDGEDRNN) -> StackEstimate:
     """Eq. 7: estimated latency / mean effective throughput of a DeltaGRU stack.
@@ -78,19 +97,17 @@ def estimate_stack(dims: GruDims, gamma_dx: float, gamma_dh: float,
     ``(3HI + 3H^2(L-1)) * (1-Gamma_dx) + 3H^2*L * (1-Gamma_dh)`` MACs; with
     ``K`` MACs retired per cycle the latency is ``macs / (K * f_pl)``.
     ``tau_a`` (activation pipeline) is amortized/overlapped and dropped, as in
-    the paper's approximation.
+    the paper's approximation. A fully-silent stack (both Γ = 1) has zero
+    latency and is reported as infinite throughput rather than crashing.
     """
-    i, h, l = dims.input_size, dims.hidden_size, dims.num_layers
-    in_block = 3 * h * i + 3 * h * h * (l - 1)   # gated by delta-x
-    rec_block = 3 * h * h * l                    # gated by delta-h
-    macs = in_block * (1.0 - gamma_dx) + rec_block * (1.0 - gamma_dh)
-    latency = macs / (spec.k_pes * spec.f_pl_hz)
+    macs = stack_effective_macs(dims, gamma_dx, gamma_dh)
+    latency = stack_latency_s(dims, gamma_dx, gamma_dh, spec)
     ops = dims.params_per_timestep_ops
     return StackEstimate(
         ops_per_timestep=ops,
         effective_macs=macs,
         latency_s=latency,
-        throughput_ops=ops / latency,
+        throughput_ops=ops / latency if latency > 0 else float("inf"),
         gamma_eff=effective_sparsity(dims, gamma_dx, gamma_dh),
     )
 

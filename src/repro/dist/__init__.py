@@ -1,0 +1,7 @@
+"""Distribution substrate: sharding rules, elastic meshes, delta gradient
+compression, and pipeline parallelism.
+
+Everything is mesh-optional: with no active mesh the sharding helpers are
+no-ops, so single-device code paths (the DeltaGRU streaming engine, unit
+tests) never pay for the machinery.
+"""

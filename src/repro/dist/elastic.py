@@ -1,0 +1,39 @@
+"""Elastic mesh construction: pick the best (data, model) factorization for
+however many devices are currently healthy, and plan remesh events when the
+fleet grows or shrinks mid-run."""
+from __future__ import annotations
+
+import jax
+
+
+def _factorize(n_devices: int, model_parallel: int) -> tuple[int, int]:
+    """Largest model-parallel degree <= requested that divides the fleet."""
+    mp = max(1, min(model_parallel, n_devices))
+    while n_devices % mp:
+        mp -= 1
+    return n_devices // mp, mp
+
+
+def best_mesh(n_devices: int | None = None, model_parallel: int = 1):
+    """A ``("data", "model")`` mesh over ``n_devices`` (default: all local).
+
+    The requested model-parallel degree is clamped to a divisor of the
+    device count, so an elastic scale-down never produces a ragged mesh.
+    """
+    avail = len(jax.devices())
+    n = min(n_devices or avail, avail)
+    data, mp = _factorize(n, model_parallel)
+    return jax.make_mesh((data, mp), ("data", "model"))
+
+
+def scale_event(old_mesh, new_n_devices: int, model_parallel: int = 1) -> dict:
+    """Plan a remesh after an elastic resize; consumed by the restart policy
+    (checkpoint -> rebuild mesh -> reshard-restore)."""
+    data, mp = _factorize(new_n_devices, model_parallel)
+    old_shape = dict(old_mesh.shape)
+    new_shape = {"data": data, "model": mp}
+    return {
+        "old_shape": old_shape,
+        "new_shape": new_shape,
+        "requires_resharding": old_shape != new_shape,
+    }

@@ -1,0 +1,55 @@
+"""Delta gradient compression with error feedback.
+
+The same thresholding law the DeltaGRU applies to activations (Eq. 2),
+applied to the data-parallel gradient exchange: an element is sent only if
+the accumulated update ``grad + residual`` moved by at least ``theta``;
+unsent mass stays in a residual and telescopes into later steps, so no
+gradient mass is ever lost (sum(sent) + residual == sum(grads) exactly).
+
+``quantile`` mode picks the threshold per step from the global |grad|
+distribution — a fixed wire budget instead of a fixed threshold, the
+gradient-side analogue of the dynamic-Θ controller.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    theta: float = 0.0
+    quantile: float | None = None   # if set, overrides theta each step
+    enabled: bool = True
+
+
+def init_residual(grads):
+    """Zero error-feedback residual, matching the grads pytree (f32)."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress(grads, residual, cfg: CompressionConfig):
+    """Threshold ``grads + residual``; returns (sent, new_residual, stats).
+
+    Pure jnp so it can sit inside a jitted train step between the grad
+    computation and the optimizer update (the DP hook position).
+    """
+    if not cfg.enabled:
+        return grads, residual, {"fired_fraction": jnp.float32(1.0),
+                                 "threshold": jnp.float32(0.0)}
+    total = jax.tree_util.tree_map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    leaves = jax.tree_util.tree_leaves(total)
+    abs_all = jnp.concatenate([jnp.abs(l).ravel() for l in leaves])
+    if cfg.quantile is not None:
+        theta = jnp.quantile(abs_all, cfg.quantile)
+    else:
+        theta = jnp.float32(cfg.theta)
+    sent = jax.tree_util.tree_map(
+        lambda t: jnp.where(jnp.abs(t) >= theta, t, 0.0), total)
+    new_residual = jax.tree_util.tree_map(lambda t, s: t - s, total, sent)
+    fired = jnp.mean((abs_all >= theta).astype(jnp.float32))
+    return sent, new_residual, {"fired_fraction": fired, "threshold": theta}

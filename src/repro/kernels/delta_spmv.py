@@ -47,32 +47,55 @@ def _kernel(n_active_ref, active_ids_ref, dx_ref, w_ref, acc_ref, out_ref):
             preferred_element_type=out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_o", "block_k", "interpret"))
+def pack_spmv_weights(w: Array, block_o: int = 128,
+                      block_k: int = 128) -> Array:
+    """Zero-pad ``w: [O, I]`` to block multiples once, at init time.
+
+    :func:`delta_spmv` re-pads its weight operand on every invocation; on a
+    hot path (one call per gate block per timestep) that pad lives inside
+    the jitted graph and costs an HBM copy per step. Callers that own the
+    weights (the DeltaGRU backends, the streaming engine) pack once and
+    pass ``packed=True`` with the true ``out_dim``.
+    """
+    o_dim, i_dim = w.shape
+    return jnp.pad(w, ((0, (-o_dim) % block_o), (0, (-i_dim) % block_k)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_o", "block_k",
+                                             "interpret", "packed", "out_dim"))
 def delta_spmv(w: Array, dx: Array, acc: Array | None = None, *,
                block_o: int = 128, block_k: int = 128,
-               interpret: bool = True) -> Array:
+               interpret: bool = True, packed: bool = False,
+               out_dim: int | None = None) -> Array:
     """``acc + dx @ w.T`` with fired-block-only weight fetch.
 
     Args:
-      w: ``[O, I]`` weights.
+      w: ``[O, I]`` weights, or the :func:`pack_spmv_weights` layout when
+        ``packed=True``.
       dx: ``[B, I]`` delta vectors (zeros = not fired).
       acc: ``[B, O]`` accumulator (delta memory M); zeros if None.
       block_o/block_k: VMEM tile sizes (128-aligned for MXU).
       interpret: run the Pallas body in Python (CPU container); False on TPU.
+      packed: weights are already block-padded (skips the per-call pad).
+      out_dim: true output dim O when ``packed`` (defaults to ``w.shape[0]``).
 
     Returns ``[B, O]``.
     """
     b, i_dim = dx.shape
-    o_dim = w.shape[0]
+    o_dim = out_dim if (packed and out_dim is not None) else w.shape[0]
     if acc is None:
         acc = jnp.zeros((b, o_dim), w.dtype)
 
     # Pad to block multiples (zero-padding is exact for matmul-accumulate).
     o_pad = (-o_dim) % block_o
     k_pad = (-i_dim) % block_k
-    w_p = jnp.pad(w, ((0, o_pad), (0, k_pad)))
+    w_p = w if packed else jnp.pad(w, ((0, o_pad), (0, k_pad)))
     dx_p = jnp.pad(dx, ((0, 0), (0, k_pad)))
     acc_p = jnp.pad(acc, ((0, 0), (0, o_pad)))
+    if packed and w_p.shape[1] != dx_p.shape[1]:
+        raise ValueError(
+            f"packed weights k-dim {w_p.shape[1]} != padded delta k-dim "
+            f"{dx_p.shape[1]}; pack with the same block_k")
     nbo = w_p.shape[0] // block_o
     nbk = w_p.shape[1] // block_k
 

@@ -43,13 +43,23 @@ def _interpret_default() -> bool:
 
 def delta_spmv(w: Array, dx: Array, acc: Array | None = None, *,
                block_o: int = 128, block_k: int = 128,
-               use_ref: bool = False, interpret: bool | None = None) -> Array:
-    """Block-column-skipping ``acc + dx @ w.T`` (paper's sparse MxV)."""
+               use_ref: bool = False, interpret: bool | None = None,
+               packed: bool = False, out_dim: int | None = None) -> Array:
+    """Block-column-skipping ``acc + dx @ w.T`` (paper's sparse MxV).
+
+    ``packed=True`` means ``w`` is already the
+    :func:`~repro.kernels.delta_spmv.pack_spmv_weights` block-padded layout
+    (skips the per-call pad); ``out_dim`` is then the true output dim.
+    """
     if use_ref or _FORCE_REF:
+        if packed:
+            w = w[:out_dim if out_dim is not None else w.shape[0],
+                  :dx.shape[-1]]
         return _ref.delta_spmv_ref(w, dx, acc, block_k=block_k)
     interpret = _interpret_default() if interpret is None else interpret
     return _delta_spmv_pallas(w, dx, acc, block_o=block_o, block_k=block_k,
-                              interpret=interpret)
+                              interpret=interpret, packed=packed,
+                              out_dim=out_dim)
 
 
 def deltagru_act(m_prev: Array, zx: Array, zh: Array, h_prev: Array, *,

@@ -55,11 +55,15 @@ def init_gru_model(key: Array, cfg: GruTaskConfig, dtype=jnp.float32):
 
 def gru_model_forward(params, cfg: GruTaskConfig, xs: Array, *,
                       use_delta: bool = True, qat: QatPolicy = FP32,
-                      collect_sparsity: bool = False):
+                      collect_sparsity: bool = False,
+                      backend: str = "dense"):
     """``xs: [T, B, I]`` -> (outputs ``[T, B, O]``, sparsity stats dict).
 
     ``use_delta=False`` runs the plain-GRU oracle (the paper's pretrain /
-    cuDNN-equivalent baseline)."""
+    cuDNN-equivalent baseline). ``backend`` picks the DeltaGRU execution
+    path (``dense | blocksparse | fused``, see :mod:`repro.core.deltagru`);
+    the fused kernel hard-codes the Fig. 7 activation pipeline, so QAT
+    activation policies require ``dense``."""
     if qat.enabled:
         gru_params = [p._replace(w_x=qat.quantize_params(p.w_x),
                                  w_h=qat.quantize_params(p.w_h),
@@ -72,7 +76,8 @@ def gru_model_forward(params, cfg: GruTaskConfig, xs: Array, *,
     if use_delta:
         ys, _, stats = deltagru_sequence(
             gru_params, xs, cfg.theta_x, cfg.theta_h,
-            collect_sparsity=collect_sparsity, sigmoid=sigmoid, tanh=tanh)
+            collect_sparsity=collect_sparsity, backend=backend,
+            sigmoid=sigmoid, tanh=tanh)
     else:
         ys = gru_sequence(gru_params, xs, sigmoid=sigmoid, tanh=tanh)
     out = ys @ params["head"] + params["head_b"]

@@ -3,10 +3,20 @@
 ``LmEngine`` — batched prefill + decode for any registry arch (jitted steps,
 ring caches with per-slot lengths for continuous batching).
 
-``GruStreamEngine`` — the paper's deployment mode: batch-1 streaming
-DeltaGRU inference with live temporal-sparsity accounting and the Eq. 7
-latency model, i.e. a software EdgeDRNN. Supports the dual thresholds and
-the dynamic-threshold controller (paper Sec. VI future work).
+``GruStreamEngine`` — the paper's deployment mode: streaming DeltaGRU
+inference with live temporal-sparsity accounting and the Eq. 7 latency
+model, i.e. a software EdgeDRNN. Supports the dual thresholds, the
+dynamic-threshold controller (paper Sec. VI future work), all three
+DeltaGRU backends (``dense | blocksparse | fused``), chunked
+``step_many`` streaming, and a batched multi-stream mode (``n_streams``
+independent streams through one kernel).
+
+The hot loop is zero-sync: firing statistics, the Eq. 7 latency estimate,
+and the dynamic-Θ controller all live *inside* the jitted step as a device
+carry — nothing forces a host round-trip until :attr:`stats` or
+:meth:`report` is read. (The seed called ``float(fx)``/``float(fh)`` and a
+host-side ``estimate_stack`` every timestep: three blocking transfers per
+frame, which capped streaming throughput at Python-dispatch rate.)
 """
 from __future__ import annotations
 
@@ -20,8 +30,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.deltagru import (DeltaGruStackState, deltagru_stack_step,
-                                 init_deltagru_stack_state)
-from repro.core.perf_model import EDGEDRNN, AcceleratorSpec, estimate_stack
+                                 init_deltagru_stack_state, pack_stack)
+from repro.core.perf_model import (EDGEDRNN, AcceleratorSpec, estimate_stack,
+                                   stack_latency_s)
 from repro.core.sparsity import GruDims
 from repro.core.thresholds import ThresholdPolicy, dynamic_threshold
 from repro.models.gru_rnn import GruTaskConfig
@@ -83,59 +94,149 @@ class StreamStats:
 
 
 class GruStreamEngine:
-    """Batch-1 streaming DeltaGRU inference (the EdgeDRNN deployment mode)."""
+    """Streaming DeltaGRU inference (the EdgeDRNN deployment mode).
+
+    Args:
+      params: ``init_gru_model`` params dict.
+      task: network config (sizes + default thresholds).
+      thresholds: static dual-threshold policy override.
+      accel: accelerator spec for the Eq. 7 latency model.
+      dynamic_target_fired: if set, the closed-loop Θ_h controller runs
+        *inside* the jitted step, tracking this firing-fraction target.
+      backend: DeltaGRU execution path (:mod:`repro.core.deltagru`);
+        ``"fused"`` is the single-kernel-per-layer-step EdgeDRNN pipeline.
+      n_streams: number of independent streams batched through one kernel
+        (the heavy-traffic mode: weights are fetched once per step for all
+        streams). ``step``/``step_many`` then take ``[N, I]`` / ``[T, N, I]``.
+    """
 
     def __init__(self, params, task: GruTaskConfig,
                  thresholds: ThresholdPolicy | None = None,
                  accel: AcceleratorSpec = EDGEDRNN,
-                 dynamic_target_fired: float | None = None):
+                 dynamic_target_fired: float | None = None,
+                 backend: str = "fused",
+                 n_streams: int = 1):
         self.params = params["gru"]
         self.head = (params["head"], params["head_b"])
         self.task = task
         self.accel = accel
+        self.backend = backend
+        self.n_streams = n_streams
         self.thresholds = thresholds or ThresholdPolicy(task.theta_x,
                                                         task.theta_h)
         self.theta_x = self.thresholds.theta_x
-        self.theta_h = self.thresholds.theta_h
         self.dynamic_target = dynamic_target_fired
-        self.state: DeltaGruStackState = init_deltagru_stack_state(
-            self.params, batch_shape=(1,))
-        self.stats = StreamStats()
         self.dims = GruDims(task.input_size, task.hidden_size, task.num_layers)
+        layouts, packs = pack_stack(self.params, backend)
 
-        @jax.jit
-        def _step(state, x, tx, th):
+        def _one_step(state, carry, x):
+            """One timestep, stats + controller on-device (no host sync)."""
             y, new_state, deltas = deltagru_stack_step(
-                self.params, state, x, tx, th)
+                self.params, state, x, self.theta_x, carry["theta_h"],
+                backend=backend, layouts=layouts, packs=packs)
             out = y @ self.head[0] + self.head[1]
             fx = jnp.mean(jnp.stack(
                 [jnp.mean((dx != 0).astype(jnp.float32)) for dx, _ in deltas]))
             fh = jnp.mean(jnp.stack(
                 [jnp.mean((dh != 0).astype(jnp.float32)) for _, dh in deltas]))
-            return out, new_state, fx, fh
+            theta_h = carry["theta_h"]
+            if self.dynamic_target is not None:
+                theta_h = dynamic_threshold(theta_h, fh, self.dynamic_target)
+            new_carry = {
+                "fired_x": carry["fired_x"] + fx,
+                "fired_h": carry["fired_h"] + fh,
+                # Eq. 7 latency for this step's actual firing fractions
+                "lat_s": carry["lat_s"] + stack_latency_s(
+                    self.dims, 1.0 - fx, 1.0 - fh, self.accel),
+                "theta_h": theta_h,
+            }
+            return out, new_state, new_carry
+
+        @jax.jit
+        def _step(state, carry, x):
+            return _one_step(state, carry, x)
+
+        @jax.jit
+        def _steps(state, carry, xs):
+            def body(sc, x):
+                state, carry = sc
+                out, state, carry = _one_step(state, carry, x)
+                return (state, carry), out
+
+            (state, carry), outs = jax.lax.scan(body, (state, carry), xs)
+            return outs, state, carry
 
         self._step = _step
+        self._steps = _steps
+        self.reset()
 
-    def step(self, x: np.ndarray | Array):
-        """Process one timestep ``x: [I]``; returns the model output [O]."""
-        x = jnp.asarray(x, jnp.float32).reshape(1, -1)
-        out, self.state, fx, fh = self._step(self.state, x, self.theta_x,
-                                             self.theta_h)
-        fx, fh = float(fx), float(fh)
-        self.stats.steps += 1
-        self.stats.fired_x += fx
-        self.stats.fired_h += fh
-        # Eq. 7 latency for this step's actual firing fractions
-        est = estimate_stack(self.dims, 1.0 - fx, 1.0 - fh, self.accel)
-        self.stats.est_latency_s += est.latency_s
-        if self.dynamic_target is not None:
-            self.theta_h = float(dynamic_threshold(
-                jnp.asarray(self.theta_h), fh, self.dynamic_target))
-        return np.asarray(out[0])
+    # -- hot path ---------------------------------------------------------
+
+    def step(self, x: np.ndarray | Array) -> Array:
+        """Process one timestep.
+
+        ``x: [I]`` (single stream) or ``[n_streams, I]``; returns ``[O]`` /
+        ``[n_streams, O]``. The returned array is a device array — reading
+        it (or :attr:`stats`) is what synchronizes, not the call itself.
+        """
+        x = jnp.asarray(x, jnp.float32).reshape(self.n_streams, -1)
+        out, self.state, self._carry = self._step(self.state, self._carry, x)
+        self._n_steps += 1
+        return out[0] if self.n_streams == 1 else out
+
+    def step_many(self, xs: np.ndarray | Array) -> Array:
+        """Process a chunk of timesteps in ONE device call (``lax.scan``).
+
+        ``xs: [T, I]`` or ``[T, n_streams, I]``; returns ``[T, O]`` /
+        ``[T, n_streams, O]``. Zero per-timestep Python dispatch — the whole
+        chunk, including stats/controller updates, runs on-device.
+        """
+        xs = jnp.asarray(xs, jnp.float32)
+        squeeze = xs.ndim == 2
+        if squeeze:
+            if self.n_streams != 1:
+                raise ValueError(
+                    f"engine has n_streams={self.n_streams}; step_many "
+                    f"needs [T, {self.n_streams}, I], got {xs.shape} "
+                    "(a 2-D chunk would silently broadcast one stream's "
+                    "input to all streams)")
+            xs = xs[:, None, :]
+        elif xs.shape[1] != self.n_streams:
+            raise ValueError(
+                f"chunk stream dim {xs.shape[1]} != n_streams="
+                f"{self.n_streams} (xs: {xs.shape})")
+        outs, self.state, self._carry = self._steps(self.state, self._carry,
+                                                    xs)
+        self._n_steps += xs.shape[0]
+        return outs[:, 0] if (squeeze and self.n_streams == 1) else outs
+
+    # -- accounting -------------------------------------------------------
+
+    @property
+    def theta_h(self) -> float:
+        """Current Θ_h (syncs once; moves only under the dynamic controller)."""
+        return float(self._carry["theta_h"])
+
+    @property
+    def stats(self) -> StreamStats:
+        """Materialize the device-side accumulators (one sync per read)."""
+        return StreamStats(
+            steps=self._n_steps,
+            fired_x=float(self._carry["fired_x"]),
+            fired_h=float(self._carry["fired_h"]),
+            est_latency_s=float(self._carry["lat_s"]),
+        )
 
     def reset(self):
-        self.state = init_deltagru_stack_state(self.params, batch_shape=(1,))
-        self.stats = StreamStats()
+        self.state = init_deltagru_stack_state(
+            self.params, batch_shape=(self.n_streams,))
+        self._carry = {
+            "fired_x": jnp.float32(0.0),
+            "fired_h": jnp.float32(0.0),
+            "lat_s": jnp.float32(0.0),
+            "theta_h": jnp.float32(self.thresholds.theta_h),
+        }
+        self._n_steps = 0
 
     def report(self) -> dict:
         s = self.stats
@@ -148,4 +249,6 @@ class GruStreamEngine:
             "effective_throughput_gops": est.throughput_ops / 1e9,
             "theta_x": self.theta_x,
             "theta_h": self.theta_h,
+            "backend": self.backend,
+            "n_streams": self.n_streams,
         }

@@ -1,0 +1,1 @@
+"""Test-support shims (dependency gates for slim containers)."""

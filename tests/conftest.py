@@ -7,5 +7,16 @@ benchmarks/run.py is a separate process that still sees the real device
 count.
 """
 import os
+import sys
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+# Dependency gate: slim containers may lack hypothesis; fall back to the
+# deterministic stub so the property tests still execute (see
+# repro.testing.hypothesis_stub). The real library wins when installed.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    from repro.testing import hypothesis_stub
+    sys.modules["hypothesis"] = hypothesis_stub
+    sys.modules["hypothesis.strategies"] = hypothesis_stub.strategies
