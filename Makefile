@@ -1,0 +1,16 @@
+# EdgeDRNN reproduction — tier-1 + perf-gate entry points.
+export PYTHONPATH := src
+
+.PHONY: test bench bench-quick check-regression
+
+test:            ## tier-1 suite
+	python -m pytest -x -q
+
+bench:           ## full paper tables/figures + kernel benches (rewrites BENCH_*.json)
+	python -m benchmarks.run
+
+bench-quick:     ## reduced CI pass (no baseline writes)
+	python -m benchmarks.run --quick
+
+check-regression:  ## gate fresh fused-path wall time / bytes model vs committed baselines
+	python -m benchmarks.check_regression

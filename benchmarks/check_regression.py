@@ -1,0 +1,160 @@
+"""CI perf gate: fresh kernel-bench pass vs the committed BENCH baselines.
+
+Re-runs the sequence-level backend shootout at the *same configuration* the
+committed ``BENCH_deltagru_seq.json`` / ``BENCH_deltagru_q8.json`` records
+were produced with (dims are read from the baseline's ``config`` block, so
+the gate always compares apples to apples), then:
+
+* fails on a > ``MAX_WALL_RATIO`` (1.5x) wall-time regression of the fused
+  paths (``fused``, ``fused_q8``) at any measured theta — these are the
+  inference hot paths the perf trajectory is about;
+* fails if the *modeled bytes-streamed per step* of any backend moved —
+  exactly on the baseline's machine class (the model is deterministic
+  there), within 2% elsewhere (float threshold crossings in the synthetic
+  input can flip a near-boundary fired block across machine classes); any
+  larger drift is a real layout / compaction / packing change that must be
+  intentional (regenerate the baseline in the same PR);
+* wall-time comparison is only meaningful on the machine class that
+  produced the baseline: when ``device``/``machine`` metadata disagree the
+  gate downgrades wall checks to a warning and keeps the bytes gate.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.check_regression`` (exit code
+1 on regression), or ``make check-regression``. Fresh numbers are NOT
+written over the baselines; regenerate those with the full
+``python -m benchmarks.run``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+MAX_WALL_RATIO = 1.5
+GATED_BACKENDS = ("fused", "fused_q8")
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _row_key(row):
+    return (row["theta"], row["backend"])
+
+
+def _comparable(base_cfg, fresh_cfg):
+    """Same measurement environment: numbers are only strictly comparable
+    when the device class, machine, and compiler (jax/XLA version) all
+    match — a same-machine jax upgrade changes both codegen (wall time)
+    and last-ulp float behaviour (bytes-model inputs)."""
+    return all(base_cfg.get(k) == fresh_cfg.get(k)
+               for k in ("device", "machine", "jax_version"))
+
+
+def _gate_walltime(name, base, fresh, failures):
+    base_rows = {_row_key(r): r for r in base["rows"]}
+    for row in fresh["rows"]:
+        if row["backend"] not in GATED_BACKENDS:
+            continue
+        b = base_rows.get(_row_key(row))
+        if b is None:
+            continue
+        ratio = row["us_per_step"] / max(b["us_per_step"], 1e-9)
+        line = (f"{name} {row['backend']} theta={row['theta']}: "
+                f"{b['us_per_step']:.1f} -> {row['us_per_step']:.1f} us/step "
+                f"({ratio:.2f}x)")
+        if ratio > MAX_WALL_RATIO:
+            failures.append(f"WALL REGRESSION {line}")
+        else:
+            print(f"ok   {line}")
+
+
+def _gate_bytes(name, base, fresh, failures, strict=True):
+    """Exact on the baseline's machine class; elsewhere allow the small
+    drift that last-ulp float differences in the synthetic input /
+    threshold-crossing chain can cause in fired-block counts (the model
+    itself is deterministic, but its *inputs* are computed in floats)."""
+    rel_tol = 0.0 if strict else 0.02
+    base_rows = {_row_key(r): r for r in base["rows"]}
+    for row in fresh["rows"]:
+        b = base_rows.get(_row_key(row))
+        if b is None or "bytes_per_step" not in b:
+            continue
+        drift = abs(row["bytes_per_step"] - b["bytes_per_step"])
+        if drift > rel_tol * max(b["bytes_per_step"], 1.0):
+            failures.append(
+                f"BYTES MODEL DRIFT {name} {row['backend']} "
+                f"theta={row['theta']}: {b['bytes_per_step']} -> "
+                f"{row['bytes_per_step']} (regenerate baseline if "
+                "intentional)")
+        else:
+            print(f"ok   {name} {row['backend']} theta={row['theta']}: "
+                  f"bytes/step={row['bytes_per_step']:.0f}")
+
+
+def main() -> int:
+    from benchmarks import kernel_bench as kb
+
+    failures: list[str] = []
+    warnings: list[str] = []
+
+    base_seq = _load(kb.BENCH_JSON)
+    base_q8 = _load(kb.BENCH_Q8_JSON)
+    if base_seq is None and base_q8 is None:
+        print("no committed BENCH_*.json baselines found; nothing to gate")
+        return 0
+
+    def cfg_dims(base):
+        c = base["config"]
+        return dict(t=c["t"], i=c["input"], h=c["hidden"],
+                    layers=c["layers"])
+
+    fresh_seq = None
+    if base_seq is not None:
+        _, fresh_seq = kb.bench_seq_record(
+            **cfg_dims(base_seq),
+            thetas=tuple(sorted({r["theta"] for r in base_seq["rows"]})))
+        if _comparable(base_seq["config"], fresh_seq["config"]):
+            _gate_walltime("seq", base_seq, fresh_seq, failures)
+        else:
+            warnings.append(
+                "seq baseline was recorded on "
+                f"{base_seq['config'].get('device')}/"
+                f"{base_seq['config'].get('machine')}; wall-time gate "
+                "skipped on this machine")
+
+    if base_q8 is not None:
+        # reuse the walls just measured by the seq pass when both baselines
+        # share a config — no point timing every backend twice
+        times = None
+        if (fresh_seq is not None
+                and cfg_dims(base_q8) == cfg_dims(base_seq)):
+            times = kb._times_from_record(fresh_seq)
+        _, fresh_q8 = kb.bench_q8_record(
+            **cfg_dims(base_q8),
+            thetas=tuple(sorted({r["theta"] for r in base_q8["rows"]})),
+            times_by_theta=times)
+        same_machine = _comparable(base_q8["config"], fresh_q8["config"])
+        _gate_bytes("q8", base_q8, fresh_q8, failures, strict=same_machine)
+        if same_machine:
+            _gate_walltime("q8", base_q8, fresh_q8, failures)
+        else:
+            warnings.append(
+                "q8 baseline was recorded on a different machine class; "
+                "wall-time gate skipped, bytes model enforced at 2% "
+                "tolerance")
+
+    for w in warnings:
+        print(f"warn {w}")
+    for f in failures:
+        print(f"FAIL {f}")
+    if failures:
+        return 1
+    print("check_regression: all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,14 +10,25 @@ ideal; unstructured sparsity shows the block-granularity gap.
 Part 2 (``run_seq``) times whole-sequence DeltaGRU execution per backend —
 the seed's per-step Python dispatch loop (one jit call + host sync per
 timestep, what ``GruStreamEngine.step`` used to do) against the scanned
-``dense`` / ``blocksparse`` / ``fused`` paths — at several temporal
-sparsity levels, and writes a ``BENCH_deltagru_seq.json`` record so the
-perf trajectory is machine-readable across PRs.
+``dense`` / ``blocksparse`` / ``fused`` / ``fused_q8`` paths — at several
+temporal sparsity levels, and writes a ``BENCH_deltagru_seq.json`` record
+(with device/platform/dtype metadata) so the perf trajectory is
+machine-readable and comparable across PRs and machines.
+
+Part 3 (``run_q8``) is the bandwidth story: per-backend **bytes streamed
+per timestep** (fired k-blocks x block width x fetched rows x weight
+bytes — the quantity EdgeDRNN's Eq. 8 is about) and effective GOp/s
+(nominal dense Op over measured wall clock), written to
+``BENCH_deltagru_q8.json``. ``benchmarks/roofline.py::run_deltagru`` turns
+those rows into arithmetic-intensity / roofline-bound lines, and
+``benchmarks/check_regression.py`` gates fresh runs against the committed
+records.
 """
 from __future__ import annotations
 
 import json
 import os
+import platform as _platform
 import time
 
 import jax
@@ -30,6 +41,23 @@ O, I = 2048, 2048
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__),
                           "BENCH_deltagru_seq.json")
+BENCH_Q8_JSON = os.path.join(os.path.dirname(__file__),
+                             "BENCH_deltagru_q8.json")
+
+SEQ_BACKENDS = ("dense", "blocksparse", "fused", "fused_q8")
+
+
+def record_meta() -> dict:
+    """Per-record environment metadata: bench numbers are only comparable
+    across runs when these match (check_regression keys off them)."""
+    return {
+        "device": jax.default_backend(),
+        "platform": _platform.platform(),
+        "machine": _platform.machine(),
+        "python": _platform.python_version(),
+        "jax_version": jax.__version__,
+        "dtype": "float32",
+    }
 
 
 def _traffic(dx):
@@ -66,8 +94,27 @@ def run() -> list[str]:
     us = (time.perf_counter() - t0) / 3 * 1e6
     lines.append(f"kernel.delta_spmv_interpret_512,{us:.0f},"
                  "interpret-mode (CPU correctness path)")
-    lines.extend(run_seq())
+    # run the seq shootout once and feed its walls to the q8 bytes/GOp/s
+    # record — same configs, no point timing every backend twice
+    seq_lines, seq_record = bench_seq_record()
+    lines.extend(seq_lines)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(seq_record, f, indent=1)
+    lines.append(
+        f"kernel.seq_bench_json,0,wrote {os.path.basename(BENCH_JSON)}")
+    lines.extend(run_q8(times_by_theta=_times_from_record(seq_record)))
     return lines
+
+
+def _times_from_record(seq_record) -> dict:
+    """{theta: {backend: wall_s}} from a bench_seq_record result."""
+    t = seq_record["config"]["t"]
+    times: dict = {}
+    for row in seq_record["rows"]:
+        if row["backend"] in SEQ_BACKENDS:
+            times.setdefault(row["theta"], {})[row["backend"]] = \
+                row["us_per_step"] * t / 1e6
+    return times
 
 
 def _walk_inputs(key, t, b, i, scale=0.08):
@@ -77,23 +124,78 @@ def _walk_inputs(key, t, b, i, scale=0.08):
     return jnp.cumsum(steps, axis=0)
 
 
-def _time_call(fn, reps=3):
-    jax.block_until_ready(fn())  # warmup / compile, fully drained
-    t0 = time.perf_counter()
+def _time_call(fn, reps=5):
+    """Best-of-reps wall time (min is the stable estimator under CPU
+    scheduling noise; the regression gate compares these numbers)."""
+    return _time_calls([fn], reps)[0]
+
+
+def _time_calls(fns, reps=5):
+    """Time several callables *interleaved* (round-robin), best-of-reps.
+
+    Backend shootouts are comparisons: interleaving the candidates inside
+    one measurement window means slow machine-load drift biases every
+    backend equally instead of penalizing whichever ran last.
+    """
+    for fn in fns:
+        jax.block_until_ready(fn())  # warmup / compile, fully drained
+    best = [float("inf")] * len(fns)
     for _ in range(reps):
-        out = fn()
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps
+        for k, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def _seq_fn(params, xs, theta, backend, layouts=None):
+    from repro.core.deltagru import deltagru_sequence
+    return jax.jit(lambda xs: deltagru_sequence(
+        params, xs, theta, theta, collect_sparsity=False,
+        backend=backend, layouts=layouts)[0])
+
+
+def _time_backends(params, qparams, layouts_q8, xs, theta):
+    """Wall time per scanned backend at one theta.
+
+    The fast paths (dense / fused / fused_q8) are interleaved with many
+    reps — they are the comparison the acceptance gates care about; the
+    interpret-mode blocksparse path is ~50x slower and only needs a rough
+    number, so it is timed separately with few reps.
+    """
+    fast = ("dense", "fused", "fused_q8")
+    seqs = [_seq_fn(qparams, xs, theta, be, layouts=layouts_q8)
+            if be == "fused_q8" else _seq_fn(params, xs, theta, be)
+            for be in fast]
+    walls = _time_calls([(lambda s=s: s(xs)) for s in seqs], reps=60)
+    times = dict(zip(fast, walls))
+    bs = _seq_fn(params, xs, theta, "blocksparse")
+    times["blocksparse"] = _time_call(lambda: bs(xs), reps=3)
+    return {be: times[be] for be in SEQ_BACKENDS}
 
 
 def run_seq(t=64, i=128, h=256, layers=2,
-            thetas=(0.0, 0.05, 0.2)) -> list[str]:
+            thetas=(0.0, 0.05, 0.2), write=True) -> list[str]:
     """Sequence-level wall time: seed dispatch loop vs scanned backends."""
+    lines, record = bench_seq_record(t=t, i=i, h=h, layers=layers,
+                                     thetas=thetas)
+    if write:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(record, f, indent=1)
+        lines.append(
+            f"kernel.seq_bench_json,0,wrote {os.path.basename(BENCH_JSON)}")
+    return lines
+
+
+def bench_seq_record(t=64, i=128, h=256, layers=2,
+                     thetas=(0.0, 0.05, 0.2)):
     from repro.core.deltagru import (deltagru_sequence, deltagru_stack_step,
                                      init_deltagru_stack_state,
                                      init_gru_stack)
+    from repro.quant.export import quantize_stack
     key = jax.random.PRNGKey(0)
     params = init_gru_stack(key, i, h, layers)
+    qparams, layouts_q8 = quantize_stack(params)
     xs = _walk_inputs(jax.random.fold_in(key, 1), t, 1, i)
     lines, rows = [], []
 
@@ -115,11 +217,7 @@ def run_seq(t=64, i=128, h=256, layers=2,
             return y
 
         times = {"per_step_dispatch": _time_call(per_step_loop)}
-        for be in ("dense", "blocksparse", "fused"):
-            seq = jax.jit(lambda xs, _be=be: deltagru_sequence(
-                params, xs, theta, theta, collect_sparsity=False,
-                backend=_be)[0])
-            times[be] = _time_call(lambda: seq(xs))
+        times.update(_time_backends(params, qparams, layouts_q8, xs, theta))
 
         for name, wall in times.items():
             us = wall / t * 1e6
@@ -137,14 +235,172 @@ def run_seq(t=64, i=128, h=256, layers=2,
         "config": {"t": t, "input": i, "hidden": h, "layers": layers,
                    "batch": 1,
                    # off-TPU the kernel backends auto-route per kernels/ops
-                   # conventions (fused -> jnp ref, blocksparse -> interpret)
-                   "device": jax.default_backend()},
+                   # conventions (fused/fused_q8 -> jnp ref, blocksparse ->
+                   # interpret)
+                   **record_meta()},
         "created_unix": int(time.time()),
         "rows": rows,
     }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(record, f, indent=1)
-    lines.append(f"kernel.seq_bench_json,0,wrote {os.path.basename(BENCH_JSON)}")
+    return lines, record
+
+
+# ---------------------------------------------------------------------------
+# Part 3: bytes-streamed + effective GOp/s per backend (the Eq. 8 story)
+# ---------------------------------------------------------------------------
+
+def _backend_weight_bytes() -> dict:
+    """Bytes per streamed weight, derived from the single source of truth
+    (the Eq. 6/7 model's per-backend width table) so bench and engine
+    cannot drift."""
+    from repro.core.perf_model import BACKEND_WEIGHT_BITS
+    return {be: bits // 8 for be, bits in BACKEND_WEIGHT_BITS.items()}
+
+
+def _mean_fired_blocks(params, xs, theta, backend="dense", layouts=None,
+                       block=128):
+    """Mean fired k-block counts per step per layer, ``[L, 2]`` (x, h).
+
+    Measured on the actual delta stream of the given backend (the
+    quantized path fires on the Q8.8-rounded stream, which can differ
+    slightly from the fp32 one).
+    """
+    from repro.core.deltagru import (deltagru_stack_step,
+                                     init_deltagru_stack_state, stack_m_init)
+
+    def blocks(d):
+        b, k = d.shape
+        pad = (-k) % block
+        dp = jnp.pad(d, ((0, 0), (0, pad)))
+        nb = dp.shape[-1] // block
+        fired = jnp.any(dp.reshape(b, nb, block) != 0, axis=(0, 2))
+        return jnp.sum(fired.astype(jnp.float32))
+
+    def run_counts(xs):
+        state = init_deltagru_stack_state(params, (xs.shape[1],),
+                                          m_init=stack_m_init(backend))
+
+        def body(s, x):
+            _, s2, deltas = deltagru_stack_step(
+                params, s, x, theta, theta, backend=backend,
+                layouts=layouts)
+            cnt = jnp.stack([jnp.stack([blocks(dx), blocks(dh)])
+                             for dx, dh in deltas])
+            return s2, cnt
+
+        _, cnts = jax.lax.scan(body, state, xs)
+        return jnp.mean(cnts, axis=0)                      # [L, 2]
+
+    return np.asarray(jax.jit(run_counts)(xs))
+
+
+def _bytes_per_step(params, counts, backend, block=128):
+    """Modeled weight HBM bytes per timestep for a backend.
+
+    dense reads the whole (unpadded) weight set every step; the kernel
+    backends fetch ``fired_blocks * block`` columns of their padded row
+    extent; fused_q8 fetches the same columns at 1 byte/element (the int8
+    volume is the kernel's only weight-sized operand).
+    """
+    wb = _backend_weight_bytes()[backend]
+    total = 0.0
+    for li, p in enumerate(params):
+        i_dim, h_dim = p.input_size, p.hidden_size
+        if backend == "dense":
+            total += 3 * h_dim * (i_dim + h_dim) * wb
+            continue
+        fbx, fbh = counts[li]
+        if backend == "blocksparse":
+            op3 = 3 * h_dim + (-3 * h_dim) % block     # delta_spmv row pad
+            total += (fbx + fbh) * block * op3 * wb
+        else:                                          # fused / fused_q8
+            hp = h_dim + (-h_dim) % block
+            total += (fbx + fbh) * block * 3 * hp * wb
+    return float(total)
+
+
+def run_q8(t=64, i=128, h=256, layers=2,
+           thetas=(0.0, 0.05, 0.2), write=True,
+           times_by_theta=None) -> list[str]:
+    """Bytes-streamed + effective-GOp/s shootout across all four backends."""
+    lines, record = bench_q8_record(t=t, i=i, h=h, layers=layers,
+                                    thetas=thetas,
+                                    times_by_theta=times_by_theta)
+    if write:
+        with open(BENCH_Q8_JSON, "w") as f:
+            json.dump(record, f, indent=1)
+        lines.append(
+            f"kernel.q8_bench_json,0,wrote {os.path.basename(BENCH_Q8_JSON)}")
+    return lines
+
+
+def bench_q8_record(t=64, i=128, h=256, layers=2,
+                    thetas=(0.0, 0.05, 0.2), times_by_theta=None):
+    """``times_by_theta`` ({theta: {backend: wall_s}}) reuses walls already
+    measured by :func:`bench_seq_record` on the same config; backends are
+    (re-)timed here only when absent."""
+    from repro.core.deltagru import deltagru_sequence, init_gru_stack
+    from repro.core.sparsity import GruDims
+    from repro.quant.export import quantize_stack
+
+    key = jax.random.PRNGKey(0)
+    params = init_gru_stack(key, i, h, layers)
+    qparams, layouts_q8 = quantize_stack(params)
+    xs = _walk_inputs(jax.random.fold_in(key, 1), t, 1, i)
+    ops_per_step = GruDims(i, h, layers).params_per_timestep_ops
+    lines, rows = [], []
+
+    for theta in thetas:
+        counts_fp = _mean_fired_blocks(params, xs, theta, backend="dense")
+        counts_q8 = _mean_fired_blocks(qparams, xs, theta,
+                                       backend="fused_q8",
+                                       layouts=layouts_q8)
+        _, _, st = deltagru_sequence(params, xs, theta, theta)
+        _, _, st_q = deltagru_sequence(qparams, xs, theta, theta,
+                                       backend="fused_q8",
+                                       layouts=layouts_q8)
+        times = (times_by_theta or {}).get(theta)
+        if times is None or any(be not in times for be in SEQ_BACKENDS):
+            times = _time_backends(params, qparams, layouts_q8, xs, theta)
+        for be in SEQ_BACKENDS:
+            wall = times[be]
+            counts, stats = ((counts_q8, st_q) if be == "fused_q8"
+                             else (counts_fp, st))
+            us = wall / t * 1e6
+            nbytes = _bytes_per_step(params, counts, be)
+            eff_gops = ops_per_step / (wall / t) / 1e9
+            rows.append({
+                "theta": theta, "backend": be,
+                "gamma_dx": round(float(stats["gamma_dx"]), 4),
+                "gamma_dh": round(float(stats["gamma_dh"]), 4),
+                "us_per_step": round(us, 2),
+                "bytes_per_step": round(nbytes, 1),
+                "eff_gops": round(eff_gops, 4),
+            })
+            lines.append(
+                f"kernel.q8_{be}_th{theta},{us:.1f},"
+                f"bytes/step={nbytes:.0f} eff_gops={eff_gops:.3f}")
+
+    record = {
+        "bench": "deltagru_q8_backends",
+        "unit": "us_per_step",
+        "config": {"t": t, "input": i, "hidden": h, "layers": layers,
+                   "batch": 1, "block": 128,
+                   "ops_per_step": ops_per_step,
+                   "weight_bytes": _backend_weight_bytes(),
+                   **record_meta()},
+        "created_unix": int(time.time()),
+        "rows": rows,
+    }
+    return lines, record
+
+
+def run_quick(t=16, i=64, h=128, layers=2, thetas=(0.0, 0.2)) -> list[str]:
+    """Reduced-size CI pass: exercises every backend + the bytes model
+    without touching the committed BENCH_*.json baselines."""
+    lines, record = bench_seq_record(t=t, i=i, h=h, layers=layers,
+                                     thetas=thetas)
+    lines += run_q8(t=t, i=i, h=h, layers=layers, thetas=thetas, write=False,
+                    times_by_theta=_times_from_record(record))
     return lines
 
 

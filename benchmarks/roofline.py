@@ -1,5 +1,10 @@
 """§Roofline: three-term analysis per (arch x shape x mesh) from the
-dry-run artifacts.
+dry-run artifacts, plus the DeltaGRU kernel-bench roofline
+(:func:`run_deltagru`), which turns the measured bytes-streamed /
+effective-GOp/s rows of ``BENCH_deltagru_q8.json`` into arithmetic
+intensity and memory/compute-bound terms — the Eq. 8 story at the
+backend level (int8 streaming quadruples the arithmetic intensity of
+every fired column).
 
     compute term    = HLO_FLOPs_global / (chips x 197 TFLOP/s)
     memory term     = HLO_bytes_global / (chips x 819 GB/s)
@@ -173,5 +178,58 @@ def run(mesh_filter: str = "16x16") -> list[str]:
     return lines
 
 
+# ---------------------------------------------------------------------------
+# DeltaGRU backend roofline from the kernel-bench bytes/GOp/s record
+# ---------------------------------------------------------------------------
+
+OUT_DELTAGRU_MD = os.path.join(os.path.dirname(__file__), "artifacts",
+                               "roofline_deltagru.md")
+
+
+def run_deltagru(bench_json: str | None = None,
+                 out_md: str | None = None) -> list[str]:
+    """Roofline terms per (backend, theta) from ``BENCH_deltagru_q8.json``.
+
+    arithmetic intensity = nominal Op / streamed weight bytes per step;
+    memory term          = bytes / HBM bandwidth (V5E constants);
+    compute term         = Op / peak.
+
+    Batch-1 DeltaGRU decode is deep in memory-bound territory, so the
+    modeled speedup of a backend is ~the reduction in bytes: delta
+    skipping divides bytes by 1/(1-Gamma_block), int8 divides them 4x
+    again — multiplicative, which is the paper's whole point.
+    """
+    from benchmarks.kernel_bench import BENCH_Q8_JSON
+    path = bench_json or BENCH_Q8_JSON
+    if not os.path.exists(path):
+        return []
+    rec = json.load(open(path))
+    ops_step = rec["config"]["ops_per_step"]
+    md = ["| backend | theta | bytes/step | AI (Op/B) | t_mem (us) | "
+          "t_comp (us) | bound | modeled GOp/s | measured GOp/s |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    lines = []
+    for row in rec["rows"]:
+        nbytes = row["bytes_per_step"]
+        ai = ops_step / max(nbytes, 1e-30)
+        t_mem = nbytes / V5E.hbm_bw
+        t_comp = ops_step / V5E.peak_bf16_flops
+        bound = "memory" if t_mem >= t_comp else "compute"
+        modeled = ops_step / max(t_mem, t_comp) / 1e9
+        md.append(
+            f"| {row['backend']} | {row['theta']} | {nbytes:.0f} | "
+            f"{ai:.2f} | {t_mem * 1e6:.3f} | {t_comp * 1e6:.3f} | {bound} | "
+            f"{modeled:.1f} | {row['eff_gops']:.2f} |")
+        lines.append(
+            f"roofline.deltagru.{row['backend']}_th{row['theta']},"
+            f"{t_mem * 1e6:.2f},AI={ai:.2f} bound={bound} "
+            f"modeled_gops={modeled:.1f} measured_gops={row['eff_gops']:.2f}")
+    out = out_md or OUT_DELTAGRU_MD
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("\n".join(md) + "\n")
+    return lines
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    print("\n".join(run() + run_deltagru()))

@@ -1,20 +1,28 @@
 """Benchmark driver: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines.
+
+``--quick`` runs a reduced kernel-suite pass (small dims, no JSON writes)
+suitable for CI; pair it with ``python -m benchmarks.check_regression``
+(or ``make check-regression``) to gate wall-time/bytes against the
+committed ``BENCH_*.json`` baselines.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def _suites(quick: bool):
     from benchmarks import (fig9_threshold_sweep, fig10_11_dual_threshold,
                             fig13_batch_sweep, fig14_15_latency_traces,
                             kernel_bench, table2_perfmodel,
                             table6_7_comparison)
+    if quick:
+        return [("kernel_quick", kernel_bench.run_quick)]
     suites = [
         ("table2", table2_perfmodel.run),
         ("table6_7", table6_7_comparison.run),
@@ -24,17 +32,30 @@ def main() -> None:
         ("fig9", fig9_threshold_sweep.run),
         ("fig10_11", fig10_11_dual_threshold.run),
     ]
-    # roofline runs only when dry-run artifacts exist
+    # roofline suites are additive: an import failure there (it pulls the
+    # whole configs registry) must not take down the paper-table suites
     try:
         from benchmarks import roofline
+        # kernel_bench.run writes BENCH_deltagru_q8.json above, so the
+        # DeltaGRU roofline always sees a fresh record
+        suites.append(("roofline_deltagru", roofline.run_deltagru))
+        # the LM roofline runs only when dry-run artifacts exist
         if os.path.isdir(roofline.ART_DIR) and os.listdir(roofline.ART_DIR):
             suites.append(("roofline", roofline.run))
     except Exception:
         pass
+    return suites
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced CI pass (small dims, no baseline writes)")
+    args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn in suites:
+    for name, fn in _suites(args.quick):
         t0 = time.perf_counter()
         try:
             for line in fn():
@@ -46,9 +67,10 @@ def main() -> None:
             print(f"{name}.FAILED,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
     # machine-readable perf-trajectory records written by the suites
-    from benchmarks.kernel_bench import BENCH_JSON
-    if os.path.exists(BENCH_JSON):
-        print(f"bench_json,0,{BENCH_JSON}", file=sys.stderr)
+    from benchmarks.kernel_bench import BENCH_JSON, BENCH_Q8_JSON
+    for p in (BENCH_JSON, BENCH_Q8_JSON):
+        if os.path.exists(p):
+            print(f"bench_json,0,{p}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

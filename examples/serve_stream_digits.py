@@ -53,6 +53,20 @@ print(f"  gamma_dx={rep['gamma_dx']:.3f} gamma_dh={rep['gamma_dh']:.3f}")
 print(f"  mean Eq.7 latency {rep['mean_est_latency_us']:.1f} us/frame, "
       f"effective {rep['effective_throughput_gops']:.2f} GOp/s")
 
+# -- quantized deployment: export to int8 and stream on fused_q8 ------------
+from repro.quant.export import quantize_gru_model
+
+qparams, layouts = quantize_gru_model(state.params)
+eng_q = GruStreamEngine(qparams, task, backend="fused_q8", layouts=layouts)
+for f in frames:
+    eng_q.step(f)
+rep_q = eng_q.report()
+print(f"\nint8 deployment (backend=fused_q8, {rep_q['weight_bits']}-bit "
+      "weights streamed):")
+print(f"  gamma_dh={rep_q['gamma_dh']:.3f}, "
+      f"{rep_q['mean_weight_bytes_per_step']:.0f} weight bytes/frame, "
+      f"latency {rep_q['mean_est_latency_us']:.1f} us/frame")
+
 # -- dynamic threshold: hold a firing-rate budget (paper Sec. VI) -----------
 eng2 = GruStreamEngine(state.params, task, dynamic_target_fired=0.15)
 for f in frames:

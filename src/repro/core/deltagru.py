@@ -25,10 +25,20 @@ Execution backends (``backend=`` on every step/sequence entry point):
   layer step over the concatenated ``[3H, I+H]`` Fig. 6 layout with a
   single compaction, activation pipeline included; sequences run under
   ``lax.scan`` with zero per-step Python dispatch.
+* ``"fused_q8"`` — the same fused pipeline with the paper's fixed-point
+  semantics (Sec. IV-A): **int8 packed weights** streamed from HBM
+  (4x fewer bytes per fired column), Q8.8 activations, unscaled
+  code-domain delta memories (the PE's integer accumulator; biases are
+  applied at the activation stage, not folded into ``M``), and the Q8.8
+  -> Q1.4 LUT sigmoid/tanh grid in-kernel. Quantize a trained stack with
+  :func:`repro.quant.export.quantize_stack` and pass its layouts.
 
-All three are numerically equivalent to the Eq. 3 recurrence (exactly at
-block granularity; the equivalence suite pins fused == blocksparse ==
-dense == the Eq. 1 oracle at ``theta == 0``).
+The first three are numerically equivalent to the Eq. 3 recurrence
+(exactly at block granularity; the equivalence suite pins fused ==
+blocksparse == dense == the Eq. 1 oracle at ``theta == 0``).
+``fused_q8`` instead bit-matches the fake-quant fixed-point reference on
+the declared Qm.n grids (``tests/test_quant_backends.py``) and reduces to
+a quantized plain GRU at ``theta == 0``.
 """
 from __future__ import annotations
 
@@ -41,7 +51,7 @@ from repro.core.delta import DeltaState, delta_encode, init_delta_state
 
 Array = jax.Array
 
-BACKENDS = ("dense", "blocksparse", "fused")
+BACKENDS = ("dense", "blocksparse", "fused", "fused_q8")
 
 
 def _default_acts(sigmoid: Callable, tanh: Callable) -> bool:
@@ -117,16 +127,24 @@ class DeltaGruLayerState(NamedTuple):
 
 
 def init_deltagru_state(params: GruLayerParams, batch_shape=(),
-                        dtype=None) -> DeltaGruLayerState:
+                        dtype=None, m_init: str = "bias") -> DeltaGruLayerState:
     """Paper init: ``M_r = b_r, M_u = b_u, M_xc = b_c, M_hc = 0``; states 0.
 
     Biases are folded into the delta memories up front, which is exactly the
     paper's "bias as first weight column, consumed once at t=1" trick.
+
+    ``m_init="zero"`` (the ``fused_q8`` convention) leaves ``M`` all-zero:
+    that backend's delta memories are the PE's *unscaled integer
+    accumulator* and the quantized bias lives in the packed layout,
+    consumed at the activation stage instead.
     """
     dtype = dtype or params.w_x.dtype
     h_dim, i_dim = params.hidden_size, params.input_size
-    b_r, b_u, b_c = jnp.split(params.b.astype(dtype), 3)
-    m0 = jnp.concatenate([b_r, b_u, b_c, jnp.zeros((h_dim,), dtype)])
+    if m_init == "zero":
+        m0 = jnp.zeros((4 * h_dim,), dtype)
+    else:
+        b_r, b_u, b_c = jnp.split(params.b.astype(dtype), 3)
+        m0 = jnp.concatenate([b_r, b_u, b_c, jnp.zeros((h_dim,), dtype)])
     m0 = jnp.broadcast_to(m0, (*batch_shape, 4 * h_dim))
     return DeltaGruLayerState(
         h=jnp.zeros((*batch_shape, h_dim), dtype),
@@ -206,6 +224,40 @@ def _fused_layer_step(params: GruLayerParams, state: DeltaGruLayerState,
                            delta_x=dx_out.delta, delta_h=dh_out.delta)
 
 
+def _fused_q8_layer_step(params: GruLayerParams, state: DeltaGruLayerState,
+                         dx_out, dh_out, layout=None,
+                         interpret: bool | None = None):
+    """Fixed-point Eq. 3 via the int8 single-pallas_call kernel.
+
+    Same mode resolution as :func:`_fused_layer_step`: compiled Pallas on
+    TPU (int8 HBM operand), the bit-identical pure-jnp oracle elsewhere
+    (with the code->f32 conversion hoisted to pack time).
+    """
+    from repro.kernels import deltagru_seq as _seq
+    from repro.kernels import ops as _ops
+    if layout is None:
+        layout = _seq.pack_spmv_weights_q8(params.w_x, params.w_h,
+                                           b=params.b)
+    use_ref = _ops._FORCE_REF or (interpret is None
+                                  and _ops._interpret_default())
+    h_dim, i_dim = params.hidden_size, params.input_size
+    lead = state.h.shape[:-1]
+    args = (layout, state.m.reshape(-1, 4 * h_dim),
+            state.h.reshape(-1, h_dim), dx_out.delta.reshape(-1, i_dim),
+            dh_out.delta.reshape(-1, h_dim))
+    if use_ref:
+        m_new, h_new = _seq.deltagru_q8_step_ref(*args)
+    else:
+        m_new, h_new = _seq.deltagru_q8_step(*args,
+                                             interpret=bool(interpret))
+    h_new = h_new.reshape(*lead, h_dim)
+    new_state = DeltaGruLayerState(
+        h=h_new, x_mem=dx_out.state, h_mem=dh_out.state,
+        m=m_new.reshape(*lead, 4 * h_dim))
+    return DeltaGruStepOut(h=h_new, state=new_state,
+                           delta_x=dx_out.delta, delta_h=dh_out.delta)
+
+
 def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
                   theta_x, theta_h,
                   sigmoid: Callable = jax.nn.sigmoid,
@@ -219,11 +271,22 @@ def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
 
     Args:
       matvec: optional override ``matvec(w, delta) -> product``; takes
-        precedence over ``backend``.
-      backend: ``"dense" | "blocksparse" | "fused"`` (see module docstring).
-      layout: optional pre-packed :class:`FusedGruLayout` for the fused
-        backend (packed on the fly otherwise — sequence entry points pack
-        once and thread it here).
+        precedence over ``backend`` (rejected by ``fused_q8``, whose state
+        lives in the code domain).
+      backend: ``"dense" | "blocksparse" | "fused" | "fused_q8"`` (see
+        module docstring).
+      layout: optional pre-packed :class:`FusedGruLayout` (fused) or
+        :class:`QuantGruLayout` (fused_q8) for the kernel backends
+        (packed/quantized on the fly otherwise — sequence entry points
+        pack once and thread it here).
+
+    State convention: ``state`` must have been created with
+    ``init_deltagru_state(..., m_init=stack_m_init(backend))``. For
+    ``fused_q8`` that means ``m_init="zero"`` — its ``M`` is the unscaled
+    code-domain accumulator and the bias lives in the packed layout; a
+    default (``m_init="bias"``) state would silently double-count the
+    bias through the dequant scale. The sequence/stack/engine entry
+    points handle this automatically when they build the initial state.
       packed: optional ``(w_x_packed, w_h_packed)`` pair for the
         blocksparse backend (see :func:`pack_spmv_weights`).
       interpret: Pallas mode for the kernel backends. ``None`` (default)
@@ -234,6 +297,28 @@ def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     h_dim = params.hidden_size
+
+    if backend == "fused_q8":
+        if matvec is not None:
+            raise ValueError("fused_q8 carries code-domain delta memories; "
+                             "a matvec= override cannot preserve its state "
+                             "semantics (use backend='dense' instead)")
+        if not _default_acts(sigmoid, tanh):
+            raise ValueError("fused_q8 hard-codes the Q8.8/Q1.n LUT "
+                             "activation pipeline; pass backend='dense' "
+                             "with QAT act fns for training-time emulation")
+        if layout is None:
+            from repro.kernels.deltagru_seq import pack_spmv_weights_q8
+            layout = pack_spmv_weights_q8(params.w_x, params.w_h,
+                                          b=params.b)
+        # The Delta Unit sees the Q8.8-quantized input stream (layer >= 2
+        # inputs are already on-grid hidden states; re-rounding is exact).
+        x = layout.quantize_act(x)
+        dx_out = delta_encode(x, state.x_mem, theta_x)
+        dh_out = delta_encode(state.h, state.h_mem, theta_h)
+        return _fused_q8_layer_step(params, state, dx_out, dh_out,
+                                    layout=layout, interpret=interpret)
+
     dx_out = delta_encode(x, state.x_mem, theta_x)
     dh_out = delta_encode(state.h, state.h_mem, theta_h)
     dx, dh = dx_out.delta, dh_out.delta
@@ -284,9 +369,16 @@ class DeltaGruStackState(NamedTuple):
 
 
 def init_deltagru_stack_state(params: Sequence[GruLayerParams], batch_shape=(),
-                              dtype=None) -> DeltaGruStackState:
+                              dtype=None,
+                              m_init: str = "bias") -> DeltaGruStackState:
     return DeltaGruStackState(
-        layers=tuple(init_deltagru_state(p, batch_shape, dtype) for p in params))
+        layers=tuple(init_deltagru_state(p, batch_shape, dtype, m_init=m_init)
+                     for p in params))
+
+
+def stack_m_init(backend: str) -> str:
+    """M-memory init convention for a backend (see init_deltagru_state)."""
+    return "zero" if backend == "fused_q8" else "bias"
 
 
 def deltagru_stack_step(params: Sequence[GruLayerParams],
@@ -327,6 +419,11 @@ def pack_stack(params: Sequence[GruLayerParams], backend: str,
         from repro.kernels.deltagru_seq import pack_gru_layer
         return [pack_gru_layer(p.w_x, p.w_h, block_h=block, block_k=block)
                 for p in params], None
+    if backend == "fused_q8":
+        from repro.kernels.deltagru_seq import pack_spmv_weights_q8
+        return [pack_spmv_weights_q8(p.w_x, p.w_h, b=p.b, block_h=block,
+                                     block_k=block)
+                for p in params], None
     if backend == "blocksparse":
         from repro.kernels.delta_spmv import pack_spmv_weights
         return None, [(pack_spmv_weights(p.w_x, block, block),
@@ -339,18 +436,25 @@ def deltagru_sequence(params: Sequence[GruLayerParams], xs: Array,
                       theta_x, theta_h,
                       init_state: DeltaGruStackState | None = None,
                       collect_sparsity: bool = True,
-                      backend: str = "dense", **kw):
+                      backend: str = "dense",
+                      layouts=None, packs=None, **kw):
     """Run a DeltaGRU stack over ``xs: [T, B, I]`` with ``lax.scan``.
 
     ``backend`` selects the per-step execution path (see module docstring);
-    kernel backends get their weights packed ONCE here, outside the scan.
+    kernel backends get their weights packed ONCE here, outside the scan —
+    or pass pre-packed ``layouts``/``packs`` (e.g. the exact
+    :func:`repro.quant.export.quantize_stack` layouts for ``fused_q8``) to
+    skip even that.
 
     Returns (ys ``[T, B, H]``, final_state, stats) where stats holds measured
     per-layer firing fractions for Eq. 4 if ``collect_sparsity``.
     """
     if init_state is None:
-        init_state = init_deltagru_stack_state(params, xs.shape[1:-1], xs.dtype)
-    layouts, packs = pack_stack(params, backend)
+        init_state = init_deltagru_stack_state(params, xs.shape[1:-1],
+                                               xs.dtype,
+                                               m_init=stack_m_init(backend))
+    if layouts is None and packs is None:
+        layouts, packs = pack_stack(params, backend)
 
     def step(state, x):
         y, new_state, deltas = deltagru_stack_step(params, state, x,

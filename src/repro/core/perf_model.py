@@ -18,7 +18,7 @@ term is weight traffic, and temporal sparsity divides that term by
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from repro.core.sparsity import GruDims, effective_sparsity
 
@@ -52,6 +52,26 @@ class AcceleratorSpec:
 
 
 EDGEDRNN = AcceleratorSpec()
+
+# Bytes-per-op term of the Eq. 6/7 model: a bandwidth-matched accelerator
+# retires K = W_DRAM / W_weight MACs per cycle, so the *streamed weight
+# width* of the executing backend sets both the latency and the DRAM
+# traffic. The fp32 backends stream 4 bytes per fetched weight (the
+# training-time fiction); fused_q8 streams the paper's INT8.
+BACKEND_WEIGHT_BITS = {"dense": 32, "blocksparse": 32, "fused": 32,
+                       "fused_q8": 8}
+
+
+def spec_for_backend(spec: AcceleratorSpec, backend: str) -> AcceleratorSpec:
+    """Derive the spec whose weight-stream width matches a DeltaGRU backend.
+
+    With the default EDGEDRNN spec, ``fused_q8`` keeps the paper's
+    operating point (8-bit weights -> K=8 PEs on the 64-bit bus) while the
+    fp32 backends drop to K=2 — the 4x bytes-per-op penalty of streaming
+    unquantized weights over the same interface.
+    """
+    bits = BACKEND_WEIGHT_BITS.get(backend, spec.w_weight_bits)
+    return replace(spec, w_weight_bits=bits)
 
 
 def delta_unit_latency_cycles(vec_len: int, gamma: float,

@@ -56,14 +56,21 @@ def init_gru_model(key: Array, cfg: GruTaskConfig, dtype=jnp.float32):
 def gru_model_forward(params, cfg: GruTaskConfig, xs: Array, *,
                       use_delta: bool = True, qat: QatPolicy = FP32,
                       collect_sparsity: bool = False,
-                      backend: str = "dense"):
+                      backend: str = "dense",
+                      layouts=None):
     """``xs: [T, B, I]`` -> (outputs ``[T, B, O]``, sparsity stats dict).
 
     ``use_delta=False`` runs the plain-GRU oracle (the paper's pretrain /
     cuDNN-equivalent baseline). ``backend`` picks the DeltaGRU execution
-    path (``dense | blocksparse | fused``, see :mod:`repro.core.deltagru`);
-    the fused kernel hard-codes the Fig. 7 activation pipeline, so QAT
-    activation policies require ``dense``."""
+    path (``dense | blocksparse | fused | fused_q8``, see
+    :mod:`repro.core.deltagru`); the fused kernels hard-code the Fig. 7
+    activation pipeline, so QAT activation policies require ``dense``.
+
+    QAT (training-time fake quant) and ``fused_q8`` (inference-time real
+    int8) are two sides of the same recipe: train with ``qat=EDGEDRNN_QAT``
+    on ``dense``, then export with
+    :func:`repro.quant.export.quantize_gru_model` and run
+    ``backend="fused_q8"`` with the exported ``layouts``."""
     if qat.enabled:
         gru_params = [p._replace(w_x=qat.quantize_params(p.w_x),
                                  w_h=qat.quantize_params(p.w_h),
@@ -77,7 +84,7 @@ def gru_model_forward(params, cfg: GruTaskConfig, xs: Array, *,
         ys, _, stats = deltagru_sequence(
             gru_params, xs, cfg.theta_x, cfg.theta_h,
             collect_sparsity=collect_sparsity, backend=backend,
-            sigmoid=sigmoid, tanh=tanh)
+            layouts=layouts, sigmoid=sigmoid, tanh=tanh)
     else:
         ys = gru_sequence(gru_params, xs, sigmoid=sigmoid, tanh=tanh)
     out = ys @ params["head"] + params["head_b"]

@@ -1,5 +1,10 @@
+"""Fixed-point quantization: training-side fake quant (Sec. IV-A) and the
+inference-side exporter into the ``fused_q8`` packed int8 runtime format
+(:func:`repro.quant.export.quantize_stack`)."""
 from repro.quant.fake_quant import QFormat, fake_quant, quantize, dequantize
 from repro.quant.lut import LutNonlinearity, lut_sigmoid, lut_tanh
+from repro.quant.export import quantize_gru_model, quantize_stack
 
 __all__ = ["QFormat", "fake_quant", "quantize", "dequantize",
-           "LutNonlinearity", "lut_sigmoid", "lut_tanh"]
+           "LutNonlinearity", "lut_sigmoid", "lut_tanh",
+           "quantize_stack", "quantize_gru_model"]

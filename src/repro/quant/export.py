@@ -1,0 +1,86 @@
+"""Export trained GRU stacks into the packed int8 runtime format.
+
+This is the bridge from the training-side QAT fiction (fp32 tensors that
+merely *carry* a Qm.n grid, :mod:`repro.quant.fake_quant`) to the inference
+hot path: :func:`quantize_stack` converts a trained fp32 or QAT
+``GruLayerParams`` stack into
+
+* per-layer :class:`~repro.kernels.deltagru_seq.QuantGruLayout` packs —
+  the Fig. 6 ``[3, Hp, Ip+Hk]`` weight volume as **int8 codes** plus
+  per-gate-row scales and the activation-grid bias, i.e. exactly what the
+  ``backend="fused_q8"`` kernel streams from HBM; and
+* a matching "fake-quant view" parameter stack whose fp32 values are the
+  dequantized codes (for oracles, dense-backend comparisons and state
+  init), with biases rounded onto the Q8.8 activation grid.
+
+Entry points: :func:`quantize_stack` (a list of ``GruLayerParams``) and
+:func:`quantize_gru_model` (the ``init_gru_model`` params dict; the output
+head stays fp32, matching the paper's FPGA/ARM split where the classifier
+runs on the CPU).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.deltagru_seq import QuantGruLayout, pack_spmv_weights_q8
+
+
+def quantize_stack(params, block: int = 128, act_frac_bits: int = 8,
+                   act_int_bits: int = 8, lut_frac_bits: int = 4,
+                   with_ref_codes: bool | None = None):
+    """Quantize a trained GRU stack into the packed q8 runtime format.
+
+    Args:
+      params: sequence of :class:`repro.core.deltagru.GruLayerParams`
+        (fp32 or QAT-trained — QAT weights are already near the int8 grid,
+        so requantization is a no-op up to fp rounding).
+      block: kernel block size (``block_h == block_k``).
+      act_frac_bits / act_int_bits: activation grid (paper: Q8.8).
+      lut_frac_bits: LUT output grid (paper default: Q1.4).
+      with_ref_codes: see :func:`pack_spmv_weights_q8` (None = auto).
+
+    Returns:
+      ``(qparams, layouts)`` — the fake-quant view stack and the per-layer
+      :class:`QuantGruLayout` packs. Pass BOTH to the runtime
+      (``deltagru_sequence(qparams, ..., backend="fused_q8",
+      layouts=layouts)`` or ``GruStreamEngine(..., layouts=layouts)``) so
+      state init and the kernel see the same quantized grids.
+    """
+    qparams, layouts = [], []
+    for p in params:
+        lay = pack_spmv_weights_q8(
+            p.w_x, p.w_h, b=p.b, block_h=block, block_k=block,
+            act_frac_bits=act_frac_bits, act_int_bits=act_int_bits,
+            lut_frac_bits=lut_frac_bits, with_ref_codes=with_ref_codes)
+        layouts.append(lay)
+        qparams.append(type(p)(w_x=_dequant_slice(lay, "x"),
+                               w_h=_dequant_slice(lay, "h"),
+                               b=_bias_view(lay)))
+    return qparams, layouts
+
+
+def quantize_gru_model(params: dict, **kw):
+    """Quantize an ``init_gru_model`` params dict (head left fp32).
+
+    Returns ``(qparams_dict, layouts)`` ready for ``GruStreamEngine``.
+    """
+    qstack, layouts = quantize_stack(params["gru"], **kw)
+    out = dict(params)
+    out["gru"] = qstack
+    return out, layouts
+
+
+def _dequant_slice(lay: QuantGruLayout, which: str):
+    h, i = lay.hidden_size, lay.input_size
+    codes = lay.w_q.astype(jnp.float32)
+    if which == "x":
+        sl = codes[:, :h, :i]
+    else:
+        sl = codes[:, :h, lay.ip:lay.ip + h]
+    w = sl * lay.scales[:, :h, None]
+    return w.reshape(3 * h, sl.shape[-1])
+
+
+def _bias_view(lay: QuantGruLayout):
+    h = lay.hidden_size
+    return lay.b4[:3, :h].reshape(3 * h)

@@ -3,6 +3,11 @@
 EdgeDRNN uses Qm.n fixed point: INT16 (Q8.8) activations, INT8 (Q1.7-ish)
 weights, trained with dual-copy rounding (a straight-through estimator over
 a quantized forward pass). We implement the general Qm.n grid + STE.
+
+These are the *training-side* primitives (fp32 tensors carrying a grid).
+The inference-side entry point is :func:`repro.quant.export.quantize_stack`,
+which converts a trained stack into the packed int8 runtime format consumed
+by the ``fused_q8`` kernel backend.
 """
 from __future__ import annotations
 

@@ -10,6 +10,12 @@ numerically identical to an input-indexed table whose entries are the
 rounded function values, because sigmoid/tanh are 1-Lipschitz monotone and
 the Q8.8 input step (1/256) is finer than the coarsest output step (1/16):
 adjacent input codes can never skip an output level by more than rounding.
+
+At inference the same Q8.8-input / Q1.n-output grid runs *inside* the
+``fused_q8`` Pallas kernel (:mod:`repro.kernels.deltagru_seq`); the grid
+constants are baked into the packed layout at export time
+(:func:`repro.quant.export.quantize_stack`), so the hot loop builds no
+tables or formats per step.
 """
 from __future__ import annotations
 

@@ -4,6 +4,11 @@ The paper's recipe (Sec. IV-A): quantize weights and activations during
 training with STE, use LUT-precision nonlinearities in the forward pass and
 FP32 gradients backward. :func:`qat_act_fns` returns drop-in ``(sigmoid,
 tanh)`` callables for :func:`repro.core.deltagru.deltagru_step` et al.
+
+After QAT, export the trained stack with
+:func:`repro.quant.export.quantize_stack` and serve it on the
+``backend="fused_q8"`` int8 kernel — the deployment-side counterpart of
+this policy.
 """
 from __future__ import annotations
 

@@ -6,10 +6,13 @@ ring caches with per-slot lengths for continuous batching).
 ``GruStreamEngine`` — the paper's deployment mode: streaming DeltaGRU
 inference with live temporal-sparsity accounting and the Eq. 7 latency
 model, i.e. a software EdgeDRNN. Supports the dual thresholds, the
-dynamic-threshold controller (paper Sec. VI future work), all three
-DeltaGRU backends (``dense | blocksparse | fused``), chunked
-``step_many`` streaming, and a batched multi-stream mode (``n_streams``
-independent streams through one kernel).
+dynamic-threshold controller (paper Sec. VI future work), all four
+DeltaGRU backends (``dense | blocksparse | fused | fused_q8`` — the last
+streams int8 packed weights and runs the paper's fixed-point pipeline),
+chunked ``step_many`` streaming, and a batched multi-stream mode
+(``n_streams`` independent streams through one kernel). The Eq. 7 model
+carries a bytes-per-op term: latency and weight-traffic estimates price
+the streamed weight width of the chosen backend.
 
 The hot loop is zero-sync: firing statistics, the Eq. 7 latency estimate,
 and the dynamic-Θ controller all live *inside* the jitted step as a device
@@ -30,8 +33,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.deltagru import (DeltaGruStackState, deltagru_stack_step,
-                                 init_deltagru_stack_state, pack_stack)
-from repro.core.perf_model import (EDGEDRNN, AcceleratorSpec, estimate_stack,
+                                 init_deltagru_stack_state, pack_stack,
+                                 stack_m_init)
+from repro.core.perf_model import (EDGEDRNN, AcceleratorSpec,
+                                   dram_traffic_bytes_per_timestep,
+                                   estimate_stack, spec_for_backend,
                                    stack_latency_s)
 from repro.core.sparsity import GruDims
 from repro.core.thresholds import ThresholdPolicy, dynamic_threshold
@@ -104,10 +110,22 @@ class GruStreamEngine:
       dynamic_target_fired: if set, the closed-loop Θ_h controller runs
         *inside* the jitted step, tracking this firing-fraction target.
       backend: DeltaGRU execution path (:mod:`repro.core.deltagru`);
-        ``"fused"`` is the single-kernel-per-layer-step EdgeDRNN pipeline.
+        ``"fused"`` is the single-kernel-per-layer-step EdgeDRNN pipeline,
+        ``"fused_q8"`` its int8-packed-weight fixed-point variant (pass a
+        :func:`repro.quant.export.quantize_gru_model` stack + layouts).
+      layouts: optional pre-packed per-layer kernel layouts (e.g. the
+        exact ``quantize_stack`` packs for ``fused_q8``); packed from
+        ``params`` otherwise.
       n_streams: number of independent streams batched through one kernel
         (the heavy-traffic mode: weights are fetched once per step for all
         streams). ``step``/``step_many`` then take ``[N, I]`` / ``[T, N, I]``.
+
+    The Eq. 7 latency model prices the *streamed weight width* of the
+    chosen backend (:func:`repro.core.perf_model.spec_for_backend`): the
+    fp32 backends pay 4 bytes/weight over the spec's DRAM bus while
+    ``fused_q8`` streams the paper's INT8 — so :attr:`accel` (and every
+    latency/bytes figure in :meth:`report`) reflects what the backend
+    actually fetches, not the training-time fiction.
     """
 
     def __init__(self, params, task: GruTaskConfig,
@@ -115,11 +133,12 @@ class GruStreamEngine:
                  accel: AcceleratorSpec = EDGEDRNN,
                  dynamic_target_fired: float | None = None,
                  backend: str = "fused",
+                 layouts=None,
                  n_streams: int = 1):
         self.params = params["gru"]
         self.head = (params["head"], params["head_b"])
         self.task = task
-        self.accel = accel
+        self.accel = spec_for_backend(accel, backend)
         self.backend = backend
         self.n_streams = n_streams
         self.thresholds = thresholds or ThresholdPolicy(task.theta_x,
@@ -127,7 +146,10 @@ class GruStreamEngine:
         self.theta_x = self.thresholds.theta_x
         self.dynamic_target = dynamic_target_fired
         self.dims = GruDims(task.input_size, task.hidden_size, task.num_layers)
-        layouts, packs = pack_stack(self.params, backend)
+        if layouts is None:
+            layouts, packs = pack_stack(self.params, backend)
+        else:
+            packs = None
 
         def _one_step(state, carry, x):
             """One timestep, stats + controller on-device (no host sync)."""
@@ -148,6 +170,10 @@ class GruStreamEngine:
                 # Eq. 7 latency for this step's actual firing fractions
                 "lat_s": carry["lat_s"] + stack_latency_s(
                     self.dims, 1.0 - fx, 1.0 - fh, self.accel),
+                # weight bytes the backend streams for this step's firing
+                "w_bytes": carry["w_bytes"] + dram_traffic_bytes_per_timestep(
+                    self.dims, 1.0 - fx, 1.0 - fh,
+                    w_weight_bits=self.accel.w_weight_bits),
                 "theta_h": theta_h,
             }
             return out, new_state, new_carry
@@ -229,11 +255,13 @@ class GruStreamEngine:
 
     def reset(self):
         self.state = init_deltagru_stack_state(
-            self.params, batch_shape=(self.n_streams,))
+            self.params, batch_shape=(self.n_streams,),
+            m_init=stack_m_init(self.backend))
         self._carry = {
             "fired_x": jnp.float32(0.0),
             "fired_h": jnp.float32(0.0),
             "lat_s": jnp.float32(0.0),
+            "w_bytes": jnp.float32(0.0),
             "theta_h": jnp.float32(self.thresholds.theta_h),
         }
         self._n_steps = 0
@@ -246,6 +274,9 @@ class GruStreamEngine:
             "gamma_dx": s.gamma_dx,
             "gamma_dh": s.gamma_dh,
             "mean_est_latency_us": 1e6 * s.est_latency_s / max(s.steps, 1),
+            "mean_weight_bytes_per_step":
+                float(self._carry["w_bytes"]) / max(s.steps, 1),
+            "weight_bits": self.accel.w_weight_bits,
             "effective_throughput_gops": est.throughput_ops / 1e9,
             "theta_x": self.theta_x,
             "theta_h": self.theta_h,

@@ -115,7 +115,9 @@ class TestStreamEngineZeroSync:
     def test_stats_match_host_side_accounting(self, backend):
         """Gamma/latency accounting unchanged after moving on-device: replay
         the seed's per-step host loop (float(fx)/float(fh) + host
-        estimate_stack) and compare against the device carry."""
+        estimate_stack) and compare against the device carry. The replay
+        uses ``eng.accel`` — the Eq. 7 model now prices the backend's
+        streamed weight width (fp32 here), see spec_for_backend."""
         task = GruTaskConfig(14, 32, 2, 1, task="regression",
                              theta_x=0.1, theta_h=0.1)
         params = init_gru_model(jax.random.PRNGKey(0), task)
@@ -138,7 +140,7 @@ class TestStreamEngineZeroSync:
                                 for _, dh in deltas]))
             fired_x += fx
             fired_h += fh
-            lat += estimate_stack(dims, 1 - fx, 1 - fh).latency_s
+            lat += estimate_stack(dims, 1 - fx, 1 - fh, eng.accel).latency_s
         t = len(xs)
         assert rep["steps"] == t
         assert rep["gamma_dx"] == pytest.approx(1 - fired_x / t, abs=1e-5)
