@@ -1,10 +1,12 @@
 # EdgeDRNN reproduction — tier-1 + perf-gate entry points.
 export PYTHONPATH := src
 
-.PHONY: test bench bench-quick check-regression
+.PHONY: test bench bench-quick check-regression ci
 
 test:            ## tier-1 suite
 	python -m pytest -x -q
+
+ci: test bench-quick check-regression  ## full gate: tier-1 + quick bench + perf regression
 
 bench:           ## full paper tables/figures + kernel benches (rewrites BENCH_*.json)
 	python -m benchmarks.run

@@ -9,10 +9,12 @@ Fig. 15: the AMPRO prosthetic 2L-128H network — EdgeDRNN-model latency vs a
 measured dense-GRU CPU step on THIS host (the paper's ARM comparison,
 rescaled to whatever CPU we're on).
 
-Both engines run ``backend="fused_q8"``: the Eq. 7 latency model prices the
-streamed weight width per backend (``spec_for_backend``), and the paper's
-figures are about the INT8 hardware — the quantized path is its operating
-point (K=8 PEs on the 64-bit bus) *and* its actual fixed-point arithmetic.
+Both engines run compiled ``fused_q8`` programs
+(``quantize_gru_model(params)`` -> ``GruStreamEngine(program, task)``):
+the Eq. 7 latency model prices the streamed weight width per backend
+(``spec_for_backend``), and the paper's figures are about the INT8
+hardware — the quantized program is its operating point (K=8 PEs on the
+64-bit bus) *and* its actual fixed-point arithmetic.
 """
 from __future__ import annotations
 
@@ -25,6 +27,7 @@ import numpy as np
 from repro.core.deltagru import gru_step, init_gru_stack
 from repro.data.synthetic import digit_batch
 from repro.models.gru_rnn import GruTaskConfig, init_gru_model
+from repro.quant.export import quantize_gru_model
 from repro.serve.engine import GruStreamEngine
 
 
@@ -35,7 +38,7 @@ def run() -> list[str]:
     task = GruTaskConfig(40, 128, 2, 12, task="ctc",
                          theta_x=16 / 256, theta_h=16 / 256)
     params = init_gru_model(jax.random.PRNGKey(0), task)
-    eng = GruStreamEngine(params, task, backend="fused_q8")
+    eng = GruStreamEngine(quantize_gru_model(params), task)
     batch = digit_batch(jax.random.PRNGKey(1), batch=1, max_t=96, max_l=4)
     feats = np.asarray(batch["features"][:, 0])            # [T, 40]
     active_mask = np.abs(feats).sum(-1) > 0.5 * np.abs(feats).sum(-1).mean()
@@ -55,7 +58,7 @@ def run() -> list[str]:
     task_a = GruTaskConfig(8, 128, 2, 4, task="regression",
                            theta_x=16 / 256, theta_h=16 / 256)
     params_a = init_gru_model(jax.random.PRNGKey(2), task_a)
-    eng_a = GruStreamEngine(params_a, task_a, backend="fused_q8")
+    eng_a = GruStreamEngine(quantize_gru_model(params_a), task_a)
     for t in range(200):
         eng_a.step(np.sin(np.arange(8) * 0.7 + t * 0.1))
     rep = eng_a.report()

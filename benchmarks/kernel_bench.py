@@ -149,10 +149,10 @@ def _time_calls(fns, reps=5):
 
 
 def _seq_fn(params, xs, theta, backend, layouts=None):
-    from repro.core.deltagru import deltagru_sequence
-    return jax.jit(lambda xs: deltagru_sequence(
-        params, xs, theta, theta, collect_sparsity=False,
-        backend=backend, layouts=layouts)[0])
+    from repro.core.program import compile_deltagru
+    prog = compile_deltagru(params, backend=backend, layouts=layouts)
+    return jax.jit(lambda xs: prog.sequence(
+        xs, theta, theta, collect_sparsity=False)[0])
 
 
 def _time_backends(params, qparams, layouts_q8, xs, theta):
@@ -250,10 +250,10 @@ def bench_seq_record(t=64, i=128, h=256, layers=2,
 
 def _backend_weight_bytes() -> dict:
     """Bytes per streamed weight, derived from the single source of truth
-    (the Eq. 6/7 model's per-backend width table) so bench and engine
-    cannot drift."""
-    from repro.core.perf_model import BACKEND_WEIGHT_BITS
-    return {be: bits // 8 for be, bits in BACKEND_WEIGHT_BITS.items()}
+    (the backend registry, surfaced through the Eq. 6/7 model) so bench
+    and engine cannot drift."""
+    from repro.core.perf_model import backend_weight_bits
+    return {be: bits // 8 for be, bits in backend_weight_bits().items()}
 
 
 def _mean_fired_blocks(params, xs, theta, backend="dense", layouts=None,

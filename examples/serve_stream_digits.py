@@ -53,11 +53,11 @@ print(f"  gamma_dx={rep['gamma_dx']:.3f} gamma_dh={rep['gamma_dh']:.3f}")
 print(f"  mean Eq.7 latency {rep['mean_est_latency_us']:.1f} us/frame, "
       f"effective {rep['effective_throughput_gops']:.2f} GOp/s")
 
-# -- quantized deployment: export to int8 and stream on fused_q8 ------------
+# -- quantized deployment: compile to an int8 program, stream it ------------
 from repro.quant.export import quantize_gru_model
 
-qparams, layouts = quantize_gru_model(state.params)
-eng_q = GruStreamEngine(qparams, task, backend="fused_q8", layouts=layouts)
+qprog = quantize_gru_model(state.params)    # ready-to-run fused_q8 program
+eng_q = GruStreamEngine(qprog, task)
 for f in frames:
     eng_q.step(f)
 rep_q = eng_q.report()
@@ -66,6 +66,20 @@ print(f"\nint8 deployment (backend=fused_q8, {rep_q['weight_bits']}-bit "
 print(f"  gamma_dh={rep_q['gamma_dh']:.3f}, "
       f"{rep_q['mean_weight_bytes_per_step']:.0f} weight bytes/frame, "
       f"latency {rep_q['mean_est_latency_us']:.1f} us/frame")
+
+# -- heavy traffic: many short-lived streams over a few session slots -------
+from repro.serve.scheduler import GruStreamBatcher
+
+eng_m = GruStreamEngine(qprog, task, n_streams=4)
+cb = GruStreamBatcher(eng_m)
+for k in range(10):                       # 10 utterances, 4 slots
+    u = digit_batch(jax.random.PRNGKey(100 + k), batch=1, max_t=48, max_l=2)
+    cb.submit(np.asarray(u["features"][:, 0]))
+finished = cb.run_until_drained()
+mean_lat = np.mean([r.stats["mean_est_latency_us"] for r in finished])
+print(f"\nsession batcher: {len(finished)} streams recycled through "
+      f"{eng_m.n_streams} slots (one weight fetch per tick serves all); "
+      f"mean per-stream latency {mean_lat:.1f} us/frame")
 
 # -- dynamic threshold: hold a firing-rate budget (paper Sec. VI) -----------
 eng2 = GruStreamEngine(state.params, task, dynamic_target_fired=0.15)

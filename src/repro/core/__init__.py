@@ -1,6 +1,9 @@
 """The paper's primary contribution: the delta-network (DeltaGRU) algorithm,
 its generalization to arbitrary streamed linear layers, temporal-sparsity
 accounting, threshold policies, and the EdgeDRNN analytical perf model."""
+from repro.core.backends import (BackendSpec, backend_names, get_backend,
+                                 register_backend, registered_backends,
+                                 unregister_backend)
 from repro.core.delta import (DeltaState, delta_encode, delta_encode_sequence,
                               delta_encode_ste, init_delta_state,
                               reconstruct_from_deltas)
@@ -22,6 +25,8 @@ from repro.core.perf_model import (EDGEDRNN, V5E, AcceleratorSpec,
                                    estimate_stack,
                                    normalized_batch1_throughput,
                                    tpu_batch1_gru_roofline)
+from repro.core.program import (DeltaGruProgram, DeltaGruProgramState,
+                                compile_deltagru)
 from repro.core.sparsity import (GruDims, effective_sparsity, fraction_zeros,
                                  gamma_from_fired)
 from repro.core.thresholds import ThresholdPolicy, dynamic_threshold, q88

@@ -14,7 +14,19 @@ Gate ordering throughout: ``r`` (reset), ``u`` (update), ``c`` (candidate);
 concatenated weights are ``W_x: [3H, I]`` and ``W_h: [3H, H]`` in that order,
 matching the paper's concatenated-column DRAM layout (Fig. 6).
 
-Execution backends (``backend=`` on every step/sequence entry point):
+**Primary entry point**: compile once, then stream —
+:func:`repro.core.program.compile_deltagru` resolves a backend spec from
+the registry (:mod:`repro.core.backends`), packs every layer's weights
+once, and returns an immutable :class:`~repro.core.program.DeltaGruProgram`
+whose ``init_state()`` / ``step()`` / ``sequence()`` methods carry the
+backend's state convention with them — a mismatched state is
+unrepresentable instead of silently corrupting. The loose
+``backend=`` / ``layouts=`` / ``packs=`` kwargs on the functions below
+remain as the legacy spelling (and the training-time path, where packing
+per call is the point).
+
+Execution backends (``backend=`` on every step/sequence entry point; each
+is a registered :class:`repro.core.backends.BackendSpec`):
 
 * ``"dense"`` — plain XLA matmuls; the oracle. Zeros in the deltas are
   multiplied, not skipped.
@@ -47,11 +59,12 @@ from typing import Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.backends import BackendSpec, get_backend, register_backend
 from repro.core.delta import DeltaState, delta_encode, init_delta_state
 
 Array = jax.Array
 
-BACKENDS = ("dense", "blocksparse", "fused", "fused_q8")
+BACKENDS = ("dense", "blocksparse", "fused", "fused_q8")  # legacy alias
 
 
 def _default_acts(sigmoid: Callable, tanh: Callable) -> bool:
@@ -164,21 +177,27 @@ class DeltaGruStepOut(NamedTuple):
 def _blocksparse_matvec(params: "GruLayerParams", packed=None,
                         interpret: bool | None = None,
                         block_o: int = 128, block_k: int = 128) -> Callable:
-    """``matvec(w, v)`` over arbitrary batch dims via the Pallas delta-spmv.
+    """``matvec(which, v)`` over arbitrary batch dims via the Pallas
+    delta-spmv, where ``which`` is an explicit ``"x"`` / ``"h"`` selector.
 
     ``packed``, when given, is ``(w_x_packed, w_h_packed)`` from
-    :func:`repro.kernels.delta_spmv.pack_spmv_weights`; the pre-padded
-    weight is selected by identity against ``params`` (the only two weights
-    this closure is ever called with), which keeps the per-call ``jnp.pad``
-    out of the hot loop.
+    :func:`repro.kernels.delta_spmv.pack_spmv_weights`; the selector picks
+    both the raw weight and its pre-padded pack, which keeps the per-call
+    ``jnp.pad`` out of the hot loop. (An earlier revision selected the pack
+    by ``w is params.w_x`` identity — a tracer-fragility trap: any
+    transform that re-wraps the weight array silently fell back to the
+    wrong operand.)
     """
     from repro.kernels import ops
 
-    def mv(w, v):
+    def mv(which, v):
+        if which not in ("x", "h"):
+            raise ValueError(f"selector must be 'x' or 'h', got {which!r}")
+        w = params.w_x if which == "x" else params.w_h
         lead = v.shape[:-1]
         v2 = v.reshape(-1, v.shape[-1])
         if packed is not None:
-            wp = packed[0] if w is params.w_x else packed[1]
+            wp = packed[0] if which == "x" else packed[1]
             out = ops.delta_spmv(wp, v2, block_o=block_o, block_k=block_k,
                                  interpret=interpret, packed=True,
                                  out_dim=w.shape[0])
@@ -258,85 +277,13 @@ def _fused_q8_layer_step(params: GruLayerParams, state: DeltaGruLayerState,
                            delta_x=dx_out.delta, delta_h=dh_out.delta)
 
 
-def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
-                  theta_x, theta_h,
-                  sigmoid: Callable = jax.nn.sigmoid,
-                  tanh: Callable = jnp.tanh,
-                  matvec: Callable | None = None,
-                  backend: str = "dense",
-                  layout=None,
-                  packed=None,
-                  interpret: bool | None = None) -> DeltaGruStepOut:
-    """One DeltaGRU timestep (Eq. 3).
-
-    Args:
-      matvec: optional override ``matvec(w, delta) -> product``; takes
-        precedence over ``backend`` (rejected by ``fused_q8``, whose state
-        lives in the code domain).
-      backend: ``"dense" | "blocksparse" | "fused" | "fused_q8"`` (see
-        module docstring).
-      layout: optional pre-packed :class:`FusedGruLayout` (fused) or
-        :class:`QuantGruLayout` (fused_q8) for the kernel backends
-        (packed/quantized on the fly otherwise — sequence entry points
-        pack once and thread it here).
-
-    State convention: ``state`` must have been created with
-    ``init_deltagru_state(..., m_init=stack_m_init(backend))``. For
-    ``fused_q8`` that means ``m_init="zero"`` — its ``M`` is the unscaled
-    code-domain accumulator and the bias lives in the packed layout; a
-    default (``m_init="bias"``) state would silently double-count the
-    bias through the dequant scale. The sequence/stack/engine entry
-    points handle this automatically when they build the initial state.
-      packed: optional ``(w_x_packed, w_h_packed)`` pair for the
-        blocksparse backend (see :func:`pack_spmv_weights`).
-      interpret: Pallas mode for the kernel backends. ``None`` (default)
-        auto-selects: compiled kernels on TPU, the pure-jnp references
-        elsewhere (fused) / interpret (blocksparse). ``True`` forces
-        interpret-mode emulation — the kernel-correctness path.
-    """
-    if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
-    h_dim = params.hidden_size
-
-    if backend == "fused_q8":
-        if matvec is not None:
-            raise ValueError("fused_q8 carries code-domain delta memories; "
-                             "a matvec= override cannot preserve its state "
-                             "semantics (use backend='dense' instead)")
-        if not _default_acts(sigmoid, tanh):
-            raise ValueError("fused_q8 hard-codes the Q8.8/Q1.n LUT "
-                             "activation pipeline; pass backend='dense' "
-                             "with QAT act fns for training-time emulation")
-        if layout is None:
-            from repro.kernels.deltagru_seq import pack_spmv_weights_q8
-            layout = pack_spmv_weights_q8(params.w_x, params.w_h,
-                                          b=params.b)
-        # The Delta Unit sees the Q8.8-quantized input stream (layer >= 2
-        # inputs are already on-grid hidden states; re-rounding is exact).
-        x = layout.quantize_act(x)
-        dx_out = delta_encode(x, state.x_mem, theta_x)
-        dh_out = delta_encode(state.h, state.h_mem, theta_h)
-        return _fused_q8_layer_step(params, state, dx_out, dh_out,
-                                    layout=layout, interpret=interpret)
-
-    dx_out = delta_encode(x, state.x_mem, theta_x)
-    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+def _accumulate_step(state: DeltaGruLayerState, dx_out, dh_out,
+                     mv_x: Callable, mv_h: Callable,
+                     sigmoid: Callable, tanh: Callable) -> DeltaGruStepOut:
+    """Shared Eq. 3 accumulate + activation path over two matvec thunks."""
     dx, dh = dx_out.delta, dh_out.delta
-
-    if backend == "fused" and matvec is None:
-        if not _default_acts(sigmoid, tanh):
-            raise ValueError("fused backend hard-codes the Fig. 7 activation "
-                             "pipeline; pass backend='dense' (or matvec=) "
-                             "for custom/QAT activations")
-        return _fused_layer_step(params, state, dx_out, dh_out,
-                                 layout=layout, interpret=interpret)
-
-    if matvec is None and backend == "blocksparse":
-        matvec = _blocksparse_matvec(params, packed=packed,
-                                     interpret=interpret)
-    mv = matvec if matvec is not None else (lambda w, v: v @ w.T)
-    zx = mv(params.w_x, dx)                     # [..., 3H] = W_x @ dx
-    zh = mv(params.w_h, dh)                     # [..., 3H] = W_h @ dh
+    zx = mv_x(dx)                               # [..., 3H] = W_x @ dx
+    zh = mv_h(dh)                               # [..., 3H] = W_h @ dh
 
     m_r, m_u, m_xc, m_hc = jnp.split(state.m, 4, axis=-1)
     zxr, zxu, zxc = jnp.split(zx, 3, axis=-1)
@@ -351,13 +298,171 @@ def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
     u = sigmoid(m_u)
     c = tanh(m_xc + r * m_hc)
     h = (1.0 - u) * c + u * state.h
-    del h_dim
 
     new_state = DeltaGruLayerState(
         h=h, x_mem=dx_out.state, h_mem=dh_out.state,
         m=jnp.concatenate([m_r, m_u, m_xc, m_hc], axis=-1),
     )
     return DeltaGruStepOut(h=h, state=new_state, delta_x=dx, delta_h=dh)
+
+
+# -- per-backend step implementations (registered BackendSpec.step fns) -----
+
+def _step_dense(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
+                matvec, layout, packed, interpret):
+    dx_out = delta_encode(x, state.x_mem, theta_x)
+    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+    mv = matvec if matvec is not None else (lambda w, v: v @ w.T)
+    return _accumulate_step(state, dx_out, dh_out,
+                            lambda v: mv(params.w_x, v),
+                            lambda v: mv(params.w_h, v), sigmoid, tanh)
+
+
+def _step_blocksparse(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
+                      matvec, layout, packed, interpret):
+    dx_out = delta_encode(x, state.x_mem, theta_x)
+    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+    if matvec is not None:
+        return _accumulate_step(state, dx_out, dh_out,
+                                lambda v: matvec(params.w_x, v),
+                                lambda v: matvec(params.w_h, v),
+                                sigmoid, tanh)
+    bs = _blocksparse_matvec(params, packed=packed, interpret=interpret)
+    return _accumulate_step(state, dx_out, dh_out,
+                            lambda v: bs("x", v), lambda v: bs("h", v),
+                            sigmoid, tanh)
+
+
+def _step_fused(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
+                matvec, layout, packed, interpret):
+    if matvec is not None:
+        # a matvec= override takes precedence over the fused kernel: run
+        # the generic accumulate path with the caller's matvec.
+        dx_out = delta_encode(x, state.x_mem, theta_x)
+        dh_out = delta_encode(state.h, state.h_mem, theta_h)
+        return _accumulate_step(state, dx_out, dh_out,
+                                lambda v: matvec(params.w_x, v),
+                                lambda v: matvec(params.w_h, v),
+                                sigmoid, tanh)
+    if not _default_acts(sigmoid, tanh):
+        raise ValueError("fused backend hard-codes the Fig. 7 activation "
+                         "pipeline; pass backend='dense' (or matvec=) "
+                         "for custom/QAT activations")
+    dx_out = delta_encode(x, state.x_mem, theta_x)
+    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+    return _fused_layer_step(params, state, dx_out, dh_out,
+                             layout=layout, interpret=interpret)
+
+
+def _step_fused_q8(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
+                   matvec, layout, packed, interpret):
+    if matvec is not None:
+        raise ValueError("fused_q8 carries code-domain delta memories; "
+                         "a matvec= override cannot preserve its state "
+                         "semantics (use backend='dense' instead)")
+    if not _default_acts(sigmoid, tanh):
+        raise ValueError("fused_q8 hard-codes the Q8.8/Q1.n LUT "
+                         "activation pipeline; pass backend='dense' "
+                         "with QAT act fns for training-time emulation")
+    if layout is None:
+        from repro.kernels.deltagru_seq import pack_spmv_weights_q8
+        layout = pack_spmv_weights_q8(params.w_x, params.w_h, b=params.b)
+    # The Delta Unit sees the Q8.8-quantized input stream (layer >= 2
+    # inputs are already on-grid hidden states; re-rounding is exact).
+    x = layout.quantize_act(x)
+    dx_out = delta_encode(x, state.x_mem, theta_x)
+    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+    return _fused_q8_layer_step(params, state, dx_out, dh_out,
+                                layout=layout, interpret=interpret)
+
+
+# -- per-backend stack packers (registered BackendSpec.pack fns) ------------
+
+def _pack_none(params, block):
+    return params, None, None
+
+
+def _pack_blocksparse(params, block):
+    from repro.kernels.delta_spmv import pack_spmv_weights
+    return params, None, [(pack_spmv_weights(p.w_x, block, block),
+                           pack_spmv_weights(p.w_h, block, block))
+                          for p in params]
+
+
+def _pack_fused(params, block):
+    from repro.kernels.deltagru_seq import pack_gru_layer
+    return params, [pack_gru_layer(p.w_x, p.w_h, block_h=block,
+                                   block_k=block)
+                    for p in params], None
+
+
+def _pack_fused_q8(params, block):
+    # quantize-and-pack: the returned stack is the dequantized fake-quant
+    # view, so oracles / state init see the same grids the kernel streams.
+    from repro.quant.export import quantize_stack
+    qparams, layouts = quantize_stack(params, block=block)
+    return qparams, layouts, None
+
+
+register_backend(BackendSpec(
+    name="dense", cell="gru", pack=_pack_none, step=_step_dense,
+    m_init="bias", weight_bits=32, supports_custom_acts=True))
+register_backend(BackendSpec(
+    name="blocksparse", cell="gru", pack=_pack_blocksparse,
+    step=_step_blocksparse, m_init="bias", weight_bits=32,
+    supports_custom_acts=True))
+register_backend(BackendSpec(
+    name="fused", cell="gru", pack=_pack_fused, step=_step_fused,
+    m_init="bias", weight_bits=32, supports_custom_acts=False))
+register_backend(BackendSpec(
+    name="fused_q8", cell="gru", pack=_pack_fused_q8, step=_step_fused_q8,
+    m_init="zero", weight_bits=8, supports_custom_acts=False))
+
+
+def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
+                  theta_x, theta_h,
+                  sigmoid: Callable = jax.nn.sigmoid,
+                  tanh: Callable = jnp.tanh,
+                  matvec: Callable | None = None,
+                  backend: str = "dense",
+                  layout=None,
+                  packed=None,
+                  interpret: bool | None = None) -> DeltaGruStepOut:
+    """One DeltaGRU timestep (Eq. 3), dispatched through the backend
+    registry (:mod:`repro.core.backends`).
+
+    Args:
+      matvec: optional override ``matvec(w, delta) -> product``; takes
+        precedence over ``backend`` (rejected by ``fused_q8``, whose state
+        lives in the code domain).
+      backend: any registered GRU backend name (builtin:
+        ``"dense" | "blocksparse" | "fused" | "fused_q8"``, see module
+        docstring). Unknown names raise.
+      layout: optional pre-packed :class:`FusedGruLayout` (fused) or
+        :class:`QuantGruLayout` (fused_q8) for the kernel backends
+        (packed/quantized on the fly otherwise — sequence entry points
+        pack once and thread it here).
+
+    State convention: ``state`` must have been created with
+    ``init_deltagru_state(..., m_init=stack_m_init(backend))``. For
+    ``fused_q8`` that means ``m_init="zero"`` — its ``M`` is the unscaled
+    code-domain accumulator and the bias lives in the packed layout; a
+    default (``m_init="bias"``) state would silently double-count the
+    bias through the dequant scale. The sequence/stack/engine entry
+    points handle this automatically when they build the initial state,
+    and the :class:`~repro.core.program.DeltaGruProgram` API makes the
+    mismatch unrepresentable.
+      packed: optional ``(w_x_packed, w_h_packed)`` pair for the
+        blocksparse backend (see :func:`pack_spmv_weights`).
+      interpret: Pallas mode for the kernel backends. ``None`` (default)
+        auto-selects: compiled kernels on TPU, the pure-jnp references
+        elsewhere (fused) / interpret (blocksparse). ``True`` forces
+        interpret-mode emulation — the kernel-correctness path.
+    """
+    spec = get_backend(backend, cell="gru")
+    return spec.step(params, state, x, theta_x, theta_h, sigmoid=sigmoid,
+                     tanh=tanh, matvec=matvec, layout=layout, packed=packed,
+                     interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -378,7 +483,7 @@ def init_deltagru_stack_state(params: Sequence[GruLayerParams], batch_shape=(),
 
 def stack_m_init(backend: str) -> str:
     """M-memory init convention for a backend (see init_deltagru_state)."""
-    return "zero" if backend == "fused_q8" else "bias"
+    return get_backend(backend, cell="gru").m_init
 
 
 def deltagru_stack_step(params: Sequence[GruLayerParams],
@@ -409,27 +514,18 @@ def pack_stack(params: Sequence[GruLayerParams], backend: str,
                block: int = 128):
     """Pre-pack every layer's weights for a kernel backend, once.
 
-    Returns ``(layouts, packs)`` — per-layer fused layouts for
-    ``backend == "fused"``, per-layer ``(w_x_packed, w_h_packed)`` pairs
-    for ``"blocksparse"``, ``(None, None)`` for ``"dense"``. This hoists
-    the per-call ``jnp.pad`` out of the scan body: inside a sequence the
-    pads would otherwise re-run every timestep.
+    Legacy entry point: dispatches to the registered spec's ``pack`` and
+    drops its (possibly rewritten) parameter stack, returning only
+    ``(layouts, packs)`` — per-layer fused layouts for the fused backends,
+    per-layer ``(w_x_packed, w_h_packed)`` pairs for ``"blocksparse"``,
+    ``(None, None)`` for ``"dense"``. This hoists the per-call ``jnp.pad``
+    out of the scan body: inside a sequence the pads would otherwise
+    re-run every timestep. Prefer
+    :func:`repro.core.program.compile_deltagru`, which also keeps the
+    rewritten stack (the int8 dequant view) and the state convention.
     """
-    if backend == "fused":
-        from repro.kernels.deltagru_seq import pack_gru_layer
-        return [pack_gru_layer(p.w_x, p.w_h, block_h=block, block_k=block)
-                for p in params], None
-    if backend == "fused_q8":
-        from repro.kernels.deltagru_seq import pack_spmv_weights_q8
-        return [pack_spmv_weights_q8(p.w_x, p.w_h, b=p.b, block_h=block,
-                                     block_k=block)
-                for p in params], None
-    if backend == "blocksparse":
-        from repro.kernels.delta_spmv import pack_spmv_weights
-        return None, [(pack_spmv_weights(p.w_x, block, block),
-                       pack_spmv_weights(p.w_h, block, block))
-                      for p in params]
-    return None, None
+    _, layouts, packs = get_backend(backend, cell="gru").pack(params, block)
+    return layouts, packs
 
 
 def deltagru_sequence(params: Sequence[GruLayerParams], xs: Array,

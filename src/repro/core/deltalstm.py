@@ -8,6 +8,11 @@ we provide it so the framework covers both gated-RNN families. Gate order:
 
 Delta memories: ``M = W_x dx + W_h dh + M_prev`` per gate pre-activation —
 the same bookkeeping as DeltaGRU but with four gates and a cell state ``c``.
+
+Execution backends go through the same registry as DeltaGRU
+(:mod:`repro.core.backends`, ``cell="lstm"``): only ``"dense"`` is
+registered today, but the registry keying means a fused LSTM kernel slots
+in without touching any call site.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ from typing import Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.backends import BackendSpec, get_backend, register_backend
 from repro.core.delta import DeltaState, delta_encode, init_delta_state
 
 Array = jax.Array
@@ -89,11 +95,12 @@ def init_deltalstm_state(params: LstmLayerParams, batch_shape=(),
         h_mem=init_delta_state((*batch_shape, h_dim), dtype), m=m0)
 
 
-def deltalstm_step(params: LstmLayerParams, state: DeltaLstmLayerState,
-                   x: Array, theta_x, theta_h,
-                   sigmoid: Callable = jax.nn.sigmoid,
-                   tanh: Callable = jnp.tanh,
-                   matvec: Callable | None = None):
+def _step_dense(params: LstmLayerParams, state: DeltaLstmLayerState,
+                x: Array, theta_x, theta_h, *,
+                sigmoid: Callable = jax.nn.sigmoid,
+                tanh: Callable = jnp.tanh,
+                matvec: Callable | None = None,
+                layout=None, packed=None, interpret=None):
     dx_out = delta_encode(x, state.x_mem, theta_x)
     dh_out = delta_encode(state.h, state.h_mem, theta_h)
     mv = matvec if matvec is not None else (lambda w, v: v @ w.T)
@@ -108,17 +115,48 @@ def deltalstm_step(params: LstmLayerParams, state: DeltaLstmLayerState,
     return h, new_state, (dx_out.delta, dh_out.delta)
 
 
+register_backend(BackendSpec(
+    name="dense", cell="lstm", pack=lambda params, block: (params, None, None),
+    step=_step_dense, m_init="bias", weight_bits=32,
+    supports_custom_acts=True))
+
+
+def deltalstm_step(params: LstmLayerParams, state: DeltaLstmLayerState,
+                   x: Array, theta_x, theta_h,
+                   sigmoid: Callable = jax.nn.sigmoid,
+                   tanh: Callable = jnp.tanh,
+                   matvec: Callable | None = None,
+                   backend: str = "dense",
+                   layout=None, packed=None,
+                   interpret: bool | None = None):
+    """One DeltaLSTM timestep, dispatched through the ``cell="lstm"``
+    registry (``"dense"`` is the only builtin). ``layout`` / ``packed`` /
+    ``interpret`` are forwarded to the spec so a kernel backend
+    registered later sees the full GRU-style step contract."""
+    spec = get_backend(backend, cell="lstm")
+    return spec.step(params, state, x, theta_x, theta_h, sigmoid=sigmoid,
+                     tanh=tanh, matvec=matvec, layout=layout, packed=packed,
+                     interpret=interpret)
+
+
 def deltalstm_sequence(params: Sequence[LstmLayerParams], xs: Array,
-                       theta_x, theta_h, **kw):
-    """Multi-layer DeltaLSTM over ``xs: [T, B, I]``."""
+                       theta_x, theta_h, layouts=None, packs=None, **kw):
+    """Multi-layer DeltaLSTM over ``xs: [T, B, I]``.
+
+    ``layouts`` / ``packs`` are optional per-layer pre-packed weights for
+    kernel backends (packed once here-abouts, threaded per step — the
+    same hoist-out-of-scan contract as the GRU sequence driver)."""
     batch_shape = xs.shape[1:-1]
     init = tuple(init_deltalstm_state(p, batch_shape, xs.dtype) for p in params)
 
     def step(states, x):
         inp = x
         new_states = []
-        for p, st in zip(params, states):
-            inp, ns, _ = deltalstm_step(p, st, inp, theta_x, theta_h, **kw)
+        for li, (p, st) in enumerate(zip(params, states)):
+            inp, ns, _ = deltalstm_step(
+                p, st, inp, theta_x, theta_h,
+                layout=layouts[li] if layouts is not None else None,
+                packed=packs[li] if packs is not None else None, **kw)
             new_states.append(ns)
         return tuple(new_states), inp
 

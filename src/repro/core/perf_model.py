@@ -53,25 +53,33 @@ class AcceleratorSpec:
 
 EDGEDRNN = AcceleratorSpec()
 
-# Bytes-per-op term of the Eq. 6/7 model: a bandwidth-matched accelerator
-# retires K = W_DRAM / W_weight MACs per cycle, so the *streamed weight
-# width* of the executing backend sets both the latency and the DRAM
-# traffic. The fp32 backends stream 4 bytes per fetched weight (the
-# training-time fiction); fused_q8 streams the paper's INT8.
-BACKEND_WEIGHT_BITS = {"dense": 32, "blocksparse": 32, "fused": 32,
-                       "fused_q8": 8}
+def backend_weight_bits(cell: str = "gru") -> dict:
+    """Bytes-per-op term of the Eq. 6/7 model, per registered backend.
+
+    A bandwidth-matched accelerator retires ``K = W_DRAM / W_weight`` MACs
+    per cycle, so the *streamed weight width* of the executing backend sets
+    both the latency and the DRAM traffic. The single source of truth is
+    the backend registry (:mod:`repro.core.backends`): the fp32 backends
+    stream 4 bytes per fetched weight (the training-time fiction);
+    ``fused_q8`` streams the paper's INT8.
+    """
+    from repro.core.backends import registered_backends
+    return {s.name: s.weight_bits for s in registered_backends(cell)}
 
 
-def spec_for_backend(spec: AcceleratorSpec, backend: str) -> AcceleratorSpec:
+def spec_for_backend(spec: AcceleratorSpec, backend: str,
+                     cell: str = "gru") -> AcceleratorSpec:
     """Derive the spec whose weight-stream width matches a DeltaGRU backend.
 
-    With the default EDGEDRNN spec, ``fused_q8`` keeps the paper's
-    operating point (8-bit weights -> K=8 PEs on the 64-bit bus) while the
-    fp32 backends drop to K=2 — the 4x bytes-per-op penalty of streaming
-    unquantized weights over the same interface.
+    Dispatches through the backend registry (unknown names raise, the same
+    rejection every other registry consumer gets). With the default
+    EDGEDRNN spec, ``fused_q8`` keeps the paper's operating point (8-bit
+    weights -> K=8 PEs on the 64-bit bus) while the fp32 backends drop to
+    K=2 — the 4x bytes-per-op penalty of streaming unquantized weights
+    over the same interface.
     """
-    bits = BACKEND_WEIGHT_BITS.get(backend, spec.w_weight_bits)
-    return replace(spec, w_weight_bits=bits)
+    from repro.core.backends import get_backend
+    return replace(spec, w_weight_bits=get_backend(backend, cell).weight_bits)
 
 
 def delta_unit_latency_cycles(vec_len: int, gamma: float,

@@ -1,0 +1,240 @@
+"""Compiled DeltaRNN programs: compile once, stream forever.
+
+EdgeDRNN's deployment model is a compile-then-stream split: weights are
+packed into the DRAM layout once, and the streaming side only ever issues
+steps against that fixed program. :func:`compile_deltagru` is the software
+analogue — it resolves a :class:`~repro.core.backends.BackendSpec` from the
+registry, packs every layer's weights once (quantizing them for
+``fused_q8``), and returns an immutable :class:`DeltaGruProgram`:
+
+* the program is a **pytree** (layers / layouts / packs / head are leaves,
+  the backend name is static), so it passes through ``jit``, ``vmap`` and
+  ``lax.scan`` like any parameter structure;
+* states come only from :meth:`DeltaGruProgram.init_state`, which bakes in
+  the backend's delta-memory convention (``m_init``) — a ``fused_q8``
+  program cannot be fed a bias-folded state, the historical silent-
+  corruption trap of the loose ``backend=`` / ``layouts=`` / ``m_init=``
+  knob soup;
+* :meth:`DeltaGruProgram.step` / :meth:`DeltaGruProgram.sequence` verify
+  the state they are given was minted by a same-backend program and raise
+  otherwise.
+
+Typical use::
+
+    prog = compile_deltagru(params, backend="fused_q8")   # quantizes+packs
+    state = prog.init_state(batch_shape=(n_streams,))
+    y, state, deltas = prog.step(state, x, theta_x, theta_h)
+    logits = prog.apply_head(y)
+
+or hand the program straight to the serving layer:
+``GruStreamEngine(prog, task)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+
+from repro.core.backends import BackendSpec, get_backend
+from repro.core.deltagru import (DeltaGruStackState, deltagru_sequence,
+                                 deltagru_stack_step,
+                                 init_deltagru_stack_state)
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class DeltaGruProgramState:
+    """A DeltaGRU stack state minted by (and bound to) a compiled program.
+
+    Wraps the raw :class:`DeltaGruStackState` with the backend name as
+    *static* pytree metadata: programs check it before every step, so a
+    state whose delta-memory convention doesn't match the executing
+    backend raises instead of silently corrupting. Construct via
+    :meth:`DeltaGruProgram.init_state`, never directly.
+    """
+
+    stack: DeltaGruStackState
+    backend: str
+
+    @property
+    def layers(self) -> tuple:
+        return self.stack.layers
+
+
+jax.tree_util.register_pytree_node(
+    DeltaGruProgramState,
+    lambda s: ((s.stack,), (s.backend,)),
+    lambda aux, ch: DeltaGruProgramState(stack=ch[0], backend=aux[0]))
+
+
+@dataclass(frozen=True)
+class DeltaGruProgram:
+    """An immutable, ready-to-run DeltaGRU stack for one backend.
+
+    Holds the per-layer parameters (for ``fused_q8`` these are the
+    dequantized fake-quant view, so oracle comparisons and state shapes
+    see the same grids the kernel streams), the pre-packed kernel layouts
+    / matvec packs, an optional classifier head, and the backend spec
+    resolved once at compile time. Registered as a pytree: arrays are
+    leaves, ``backend`` / ``interpret`` are static — programs can be
+    passed as ``jit`` arguments, scanned over, or held by engines.
+
+    Build with :func:`compile_deltagru`; do not construct directly.
+    """
+
+    layers: tuple          # tuple[GruLayerParams, ...]
+    layouts: tuple | None  # per-layer FusedGruLayout / QuantGruLayout
+    packs: tuple | None    # per-layer (w_x_packed, w_h_packed)
+    head: Array | None
+    head_b: Array | None
+    backend: str
+    interpret: bool | None = None
+
+    # -- derived ----------------------------------------------------------
+
+    @property
+    def spec(self) -> BackendSpec:
+        return get_backend(self.backend, cell="gru")
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    @property
+    def input_size(self) -> int:
+        return self.layers[0].input_size
+
+    @property
+    def hidden_size(self) -> int:
+        return self.layers[-1].hidden_size
+
+    # -- states -----------------------------------------------------------
+
+    def init_state(self, batch_shape=(), dtype=None) -> DeltaGruProgramState:
+        """A fresh stack state under THIS backend's ``m_init`` convention.
+
+        This is the only way to mint a program state — the convention
+        (bias-folded M for the fp32 backends, all-zero code-domain
+        accumulator for ``fused_q8``) is not a caller knob anymore.
+        """
+        stack = init_deltagru_stack_state(self.layers, batch_shape, dtype,
+                                          m_init=self.spec.m_init)
+        return DeltaGruProgramState(stack=stack, backend=self.backend)
+
+    def check_state(self, state) -> None:
+        """Raise unless ``state`` was minted by a same-backend program."""
+        if not isinstance(state, DeltaGruProgramState):
+            raise TypeError(
+                "expected a DeltaGruProgramState from program.init_state(); "
+                f"got {type(state).__name__} — raw stack states carry no "
+                "m_init convention tag and cannot be safely executed")
+        if state.backend != self.backend:
+            raise ValueError(
+                f"state was built for backend {state.backend!r} "
+                f"(m_init={get_backend(state.backend).m_init!r}) but this "
+                f"program runs {self.backend!r} "
+                f"(m_init={self.spec.m_init!r}); feeding it through would "
+                "silently corrupt the delta memories — rebuild with "
+                "program.init_state()")
+
+    # -- execution --------------------------------------------------------
+
+    def step(self, state: DeltaGruProgramState, x: Array,
+             theta_x=0.0, theta_h=0.0):
+        """One timestep through all layers.
+
+        ``x: [..., I]`` with the same batch shape the state was built
+        with. Returns ``(y, new_state, deltas)`` where ``y`` is the top
+        layer's hidden output and ``deltas`` the per-layer sparse
+        ``(delta_x, delta_h)`` pairs (for firing accounting).
+        """
+        self.check_state(state)
+        y, stack, deltas = deltagru_stack_step(
+            self.layers, state.stack, x, theta_x, theta_h,
+            backend=self.backend, layouts=self.layouts, packs=self.packs,
+            interpret=self.interpret)
+        return y, DeltaGruProgramState(stack=stack, backend=self.backend), \
+            deltas
+
+    def sequence(self, xs: Array, theta_x=0.0, theta_h=0.0,
+                 init_state: DeltaGruProgramState | None = None,
+                 collect_sparsity: bool = True):
+        """Run the program over ``xs: [T, B, I]`` with ``lax.scan``.
+
+        Returns ``(ys, final_state, stats)`` exactly like
+        :func:`repro.core.deltagru.deltagru_sequence`, but with the packed
+        weights reused from compile time and the state convention
+        enforced.
+        """
+        if init_state is None:
+            init_state = self.init_state(xs.shape[1:-1], xs.dtype)
+        self.check_state(init_state)
+        ys, final, stats = deltagru_sequence(
+            self.layers, xs, theta_x, theta_h,
+            init_state=init_state.stack, collect_sparsity=collect_sparsity,
+            backend=self.backend, layouts=self.layouts, packs=self.packs,
+            interpret=self.interpret)
+        return ys, DeltaGruProgramState(stack=final, backend=self.backend), \
+            stats
+
+    def apply_head(self, ys: Array) -> Array:
+        """Apply the compiled classifier/regression head (if any)."""
+        if self.head is None:
+            raise ValueError("program was compiled from a bare layer stack; "
+                             "compile from an init_gru_model params dict to "
+                             "carry the head")
+        return ys @ self.head + self.head_b
+
+    def with_interpret(self, interpret: bool | None) -> "DeltaGruProgram":
+        """Same program, different Pallas mode (kernel-correctness runs)."""
+        return replace(self, interpret=interpret)
+
+
+jax.tree_util.register_pytree_node(
+    DeltaGruProgram,
+    lambda p: ((p.layers, p.layouts, p.packs, p.head, p.head_b),
+               (p.backend, p.interpret)),
+    lambda aux, ch: DeltaGruProgram(layers=ch[0], layouts=ch[1], packs=ch[2],
+                                    head=ch[3], head_b=ch[4], backend=aux[0],
+                                    interpret=aux[1]))
+
+
+def compile_deltagru(params, backend: str = "fused", *,
+                     layouts=None, packs=None, block: int = 128,
+                     interpret: bool | None = None) -> DeltaGruProgram:
+    """Compile a GRU stack (or ``init_gru_model`` dict) into a program.
+
+    Args:
+      params: either a sequence of :class:`GruLayerParams` or the
+        ``init_gru_model`` params dict (``{"gru", "head", "head_b"}`` —
+        the head is carried into the program for serving).
+      backend: any registered GRU backend name; resolved once, here.
+      layouts / packs: optional pre-packed per-layer kernel operands
+        (e.g. the exact :func:`repro.quant.export.quantize_stack` layouts);
+        packed from ``params`` otherwise. For ``backend="fused_q8"`` with
+        no ``layouts``, the stack is quantized here — ``compile`` of a
+        trained fp32/QAT stack is the whole int8 export.
+      block: kernel block size used when packing.
+      interpret: Pallas mode baked into the program (None = auto).
+
+    Returns:
+      An immutable :class:`DeltaGruProgram`.
+    """
+    spec = get_backend(backend, cell="gru")
+    head = head_b = None
+    if isinstance(params, dict):
+        head, head_b = params.get("head"), params.get("head_b")
+        stack = list(params["gru"])
+    else:
+        stack = list(params)
+    if not stack or not isinstance(stack[0], tuple):
+        raise TypeError("compile_deltagru needs a non-empty GruLayerParams "
+                        f"stack; got {type(params).__name__}")
+    if layouts is None and packs is None:
+        stack, layouts, packs = spec.pack(stack, block)
+    return DeltaGruProgram(
+        layers=tuple(stack),
+        layouts=tuple(layouts) if layouts is not None else None,
+        packs=tuple(packs) if packs is not None else None,
+        head=head, head_b=head_b, backend=backend, interpret=interpret)

@@ -108,8 +108,10 @@ class FusedGruLayout(_GruBlockGeometry):
     to ``block_k`` followed by hidden columns padded to ``block_k`` — the
     Fig. 6 concatenated-column layout with a block-aligned x/h seam.
 
-    Not a pytree: functions close over it; the array rides inside jit as a
-    constant (or is threaded by the caller).
+    Registered as a pytree (the weight volume is the only leaf; the
+    geometry is static aux data), so layouts ride inside program objects
+    across jit boundaries. Closing over one still works — it then rides as
+    a jit constant.
     """
 
     w: Array
@@ -117,6 +119,14 @@ class FusedGruLayout(_GruBlockGeometry):
     hidden_size: int
     block_h: int
     block_k: int
+
+
+jax.tree_util.register_pytree_node(
+    FusedGruLayout,
+    lambda l: ((l.w,), (l.input_size, l.hidden_size, l.block_h, l.block_k)),
+    lambda aux, ch: FusedGruLayout(w=ch[0], input_size=aux[0],
+                                   hidden_size=aux[1], block_h=aux[2],
+                                   block_k=aux[3]))
 
 
 def pack_gru_layer(w_x: Array, w_h: Array, block_h: int = 128,
@@ -334,6 +344,19 @@ class QuantGruLayout(_GruBlockGeometry):
         return FusedGruLayout(w=w, input_size=self.input_size,
                               hidden_size=self.hidden_size,
                               block_h=self.block_h, block_k=self.block_k)
+
+
+jax.tree_util.register_pytree_node(
+    QuantGruLayout,
+    lambda l: ((l.w_q, l.scales, l.b4, l.w_codes_f32),
+               (l.input_size, l.hidden_size, l.block_h, l.block_k,
+                l.act_scale, l.act_min, l.act_max,
+                l.lut_scale, l.lut_min, l.lut_max)),
+    lambda aux, ch: QuantGruLayout(
+        w_q=ch[0], scales=ch[1], b4=ch[2], w_codes_f32=ch[3],
+        input_size=aux[0], hidden_size=aux[1], block_h=aux[2],
+        block_k=aux[3], act_scale=aux[4], act_min=aux[5], act_max=aux[6],
+        lut_scale=aux[7], lut_min=aux[8], lut_max=aux[9]))
 
 
 def pack_spmv_weights_q8(w_x: Array, w_h: Array, b: Array | None = None,

@@ -56,21 +56,47 @@ def init_gru_model(key: Array, cfg: GruTaskConfig, dtype=jnp.float32):
 def gru_model_forward(params, cfg: GruTaskConfig, xs: Array, *,
                       use_delta: bool = True, qat: QatPolicy = FP32,
                       collect_sparsity: bool = False,
-                      backend: str = "dense",
-                      layouts=None):
+                      backend: str | None = None,
+                      layouts=None,
+                      program=None):
     """``xs: [T, B, I]`` -> (outputs ``[T, B, O]``, sparsity stats dict).
 
     ``use_delta=False`` runs the plain-GRU oracle (the paper's pretrain /
-    cuDNN-equivalent baseline). ``backend`` picks the DeltaGRU execution
-    path (``dense | blocksparse | fused | fused_q8``, see
+    cuDNN-equivalent baseline).
+
+    ``program=`` (a :func:`repro.core.program.compile_deltagru` result) is
+    the compiled inference spelling: the program's pre-packed weights and
+    backend run the delta path, and its head (or ``params``'s, when the
+    program was compiled from a bare stack) produces the outputs. The
+    legacy ``backend=`` / ``layouts=`` kwargs remain for ad-hoc /
+    training-time calls (``dense | blocksparse | fused | fused_q8``, see
     :mod:`repro.core.deltagru`); the fused kernels hard-code the Fig. 7
     activation pipeline, so QAT activation policies require ``dense``.
 
     QAT (training-time fake quant) and ``fused_q8`` (inference-time real
     int8) are two sides of the same recipe: train with ``qat=EDGEDRNN_QAT``
     on ``dense``, then export with
-    :func:`repro.quant.export.quantize_gru_model` and run
-    ``backend="fused_q8"`` with the exported ``layouts``."""
+    :func:`repro.quant.export.quantize_gru_model` and run the returned
+    program."""
+    if program is not None:
+        if backend is not None or layouts is not None:
+            raise ValueError(
+                "backend=/layouts= conflict with program= — the compiled "
+                f"program already fixes both (its backend: "
+                f"{program.backend!r}); drop the legacy kwargs")
+        if qat.enabled:
+            raise ValueError(
+                "program= holds weights packed at compile time; QAT fake "
+                "quant would be silently ignored — quantize at compile "
+                "(backend='fused_q8') or run the legacy dense path")
+        if not use_delta:
+            raise ValueError("program= compiles the DeltaGRU path; use the "
+                             "legacy kwargs for the plain-GRU oracle")
+        ys, _, stats = program.sequence(xs, cfg.theta_x, cfg.theta_h,
+                                        collect_sparsity=collect_sparsity)
+        if program.head is not None:
+            return program.apply_head(ys), stats
+        return ys @ params["head"] + params["head_b"], stats
     if qat.enabled:
         gru_params = [p._replace(w_x=qat.quantize_params(p.w_x),
                                  w_h=qat.quantize_params(p.w_h),
@@ -83,7 +109,7 @@ def gru_model_forward(params, cfg: GruTaskConfig, xs: Array, *,
     if use_delta:
         ys, _, stats = deltagru_sequence(
             gru_params, xs, cfg.theta_x, cfg.theta_h,
-            collect_sparsity=collect_sparsity, backend=backend,
+            collect_sparsity=collect_sparsity, backend=backend or "dense",
             layouts=layouts, sigmoid=sigmoid, tanh=tanh)
     else:
         ys = gru_sequence(gru_params, xs, sigmoid=sigmoid, tanh=tanh)

@@ -13,10 +13,12 @@ hot path: :func:`quantize_stack` converts a trained fp32 or QAT
   dequantized codes (for oracles, dense-backend comparisons and state
   init), with biases rounded onto the Q8.8 activation grid.
 
-Entry points: :func:`quantize_stack` (a list of ``GruLayerParams``) and
-:func:`quantize_gru_model` (the ``init_gru_model`` params dict; the output
-head stays fp32, matching the paper's FPGA/ARM split where the classifier
-runs on the CPU).
+Entry points: :func:`quantize_stack` (a list of ``GruLayerParams``; the
+layer-level exporter, returns the loose ``(qparams, layouts)`` pair) and
+:func:`quantize_gru_model` (the ``init_gru_model`` params dict; returns a
+ready-to-run :class:`~repro.core.program.DeltaGruProgram` — the output
+head stays fp32 inside it, matching the paper's FPGA/ARM split where the
+classifier runs on the CPU).
 """
 from __future__ import annotations
 
@@ -59,15 +61,22 @@ def quantize_stack(params, block: int = 128, act_frac_bits: int = 8,
     return qparams, layouts
 
 
-def quantize_gru_model(params: dict, **kw):
+def quantize_gru_model(params: dict, interpret: bool | None = None, **kw):
     """Quantize an ``init_gru_model`` params dict (head left fp32).
 
-    Returns ``(qparams_dict, layouts)`` ready for ``GruStreamEngine``.
+    Returns a ready-to-run ``backend="fused_q8"``
+    :class:`~repro.core.program.DeltaGruProgram` (head included): hand it
+    straight to ``GruStreamEngine(program, task)`` or call
+    ``program.sequence(...)``. The dequantized fake-quant view stack is
+    ``program.layers`` and the packed layouts ``program.layouts`` — the
+    pieces the old loose ``(qparams_dict, layouts)`` return unpacked.
     """
+    from repro.core.program import DeltaGruProgram
     qstack, layouts = quantize_stack(params["gru"], **kw)
-    out = dict(params)
-    out["gru"] = qstack
-    return out, layouts
+    return DeltaGruProgram(
+        layers=tuple(qstack), layouts=tuple(layouts), packs=None,
+        head=params.get("head"), head_b=params.get("head_b"),
+        backend="fused_q8", interpret=interpret)
 
 
 def _dequant_slice(lay: QuantGruLayout, which: str):

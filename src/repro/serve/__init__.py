@@ -1,2 +1,5 @@
 """Serving substrate: batched LM engine (prefill/decode), the paper's
-batch-1 streaming DeltaGRU engine, and a continuous-batching scheduler."""
+streaming DeltaGRU engine (compiled-program driven, with per-stream
+open/close sessions), and the continuous-batching schedulers
+(``ContinuousBatcher`` over LM decode slots, ``GruStreamBatcher`` over
+DeltaGRU stream sessions)."""

@@ -5,21 +5,37 @@ ring caches with per-slot lengths for continuous batching).
 
 ``GruStreamEngine`` — the paper's deployment mode: streaming DeltaGRU
 inference with live temporal-sparsity accounting and the Eq. 7 latency
-model, i.e. a software EdgeDRNN. Supports the dual thresholds, the
-dynamic-threshold controller (paper Sec. VI future work), all four
-DeltaGRU backends (``dense | blocksparse | fused | fused_q8`` — the last
-streams int8 packed weights and runs the paper's fixed-point pipeline),
-chunked ``step_many`` streaming, and a batched multi-stream mode
-(``n_streams`` independent streams through one kernel). The Eq. 7 model
-carries a bytes-per-op term: latency and weight-traffic estimates price
-the streamed weight width of the chosen backend.
+model, i.e. a software EdgeDRNN. The **primary entry point is a compiled
+program**: build one with :func:`repro.core.program.compile_deltagru` (or
+:func:`repro.quant.export.quantize_gru_model` for the int8 operating
+point) and hand it to ``GruStreamEngine(program, task)`` — backend,
+packed layouts, and the delta-memory state convention all travel inside
+the program, so they cannot be mismatched. The legacy
+``GruStreamEngine(params_dict, task, backend=..., layouts=...)`` spelling
+still works as a thin shim that compiles a program internally.
 
-The hot loop is zero-sync: firing statistics, the Eq. 7 latency estimate,
-and the dynamic-Θ controller all live *inside* the jitted step as a device
-carry — nothing forces a host round-trip until :attr:`stats` or
-:meth:`report` is read. (The seed called ``float(fx)``/``float(fh)`` and a
-host-side ``estimate_stack`` every timestep: three blocking transfers per
-frame, which capped streaming throughput at Python-dispatch rate.)
+The engine supports the dual thresholds, the dynamic-threshold controller
+(paper Sec. VI future work), every registered DeltaGRU backend
+(``dense | blocksparse | fused | fused_q8`` — the last streams int8 packed
+weights and runs the paper's fixed-point pipeline), chunked ``step_many``
+streaming, and a batched multi-stream mode (``n_streams`` independent
+streams through one kernel — ONE weight fetch per step serves all
+streams). On top of the slots sits a **session API** for heavy traffic:
+:meth:`~GruStreamEngine.open_stream` claims a free slot and masked-resets
+only that stream's state, :meth:`~GruStreamEngine.close_stream` frees it
+and returns that stream's own firing/latency/byte accounting —
+``serve.scheduler.GruStreamBatcher`` drives millions of short-lived
+streams through these slots. The Eq. 7 model carries a bytes-per-op term:
+latency and weight-traffic estimates price the streamed weight width of
+the program's backend.
+
+The hot loop is zero-sync: firing statistics (per stream), the Eq. 7
+latency estimate, and the dynamic-Θ controller all live *inside* the
+jitted step as a device carry — nothing forces a host round-trip until
+:attr:`stats` or :meth:`report` is read, and those materialize the carry
+exactly once. (The seed called ``float(fx)``/``float(fh)`` and a host-side
+``estimate_stack`` every timestep: three blocking transfers per frame,
+which capped streaming throughput at Python-dispatch rate.)
 """
 from __future__ import annotations
 
@@ -32,13 +48,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.deltagru import (DeltaGruStackState, deltagru_stack_step,
-                                 init_deltagru_stack_state, pack_stack,
-                                 stack_m_init)
 from repro.core.perf_model import (EDGEDRNN, AcceleratorSpec,
                                    dram_traffic_bytes_per_timestep,
                                    estimate_stack, spec_for_backend,
                                    stack_latency_s)
+from repro.core.program import DeltaGruProgram, compile_deltagru
 from repro.core.sparsity import GruDims
 from repro.core.thresholds import ThresholdPolicy, dynamic_threshold
 from repro.models.gru_rnn import GruTaskConfig
@@ -85,10 +99,13 @@ class LmEngine:
 
 @dataclass
 class StreamStats:
+    """Aggregate (stream-averaged) accounting, one device sync per read."""
+
     steps: int = 0
     fired_x: float = 0.0
     fired_h: float = 0.0
     est_latency_s: float = 0.0
+    w_bytes: float = 0.0
 
     @property
     def gamma_dx(self) -> float:
@@ -103,77 +120,112 @@ class GruStreamEngine:
     """Streaming DeltaGRU inference (the EdgeDRNN deployment mode).
 
     Args:
-      params: ``init_gru_model`` params dict.
+      program: a compiled :class:`~repro.core.program.DeltaGruProgram`
+        (must carry a head, i.e. compiled from an ``init_gru_model``
+        params dict) — the primary spelling. A raw params dict is also
+        accepted and compiled internally with the legacy ``backend=`` /
+        ``layouts=`` kwargs (default backend: ``"fused"``).
       task: network config (sizes + default thresholds).
       thresholds: static dual-threshold policy override.
       accel: accelerator spec for the Eq. 7 latency model.
       dynamic_target_fired: if set, the closed-loop Θ_h controller runs
         *inside* the jitted step, tracking this firing-fraction target.
-      backend: DeltaGRU execution path (:mod:`repro.core.deltagru`);
-        ``"fused"`` is the single-kernel-per-layer-step EdgeDRNN pipeline,
-        ``"fused_q8"`` its int8-packed-weight fixed-point variant (pass a
-        :func:`repro.quant.export.quantize_gru_model` stack + layouts).
-      layouts: optional pre-packed per-layer kernel layouts (e.g. the
-        exact ``quantize_stack`` packs for ``fused_q8``); packed from
-        ``params`` otherwise.
-      n_streams: number of independent streams batched through one kernel
-        (the heavy-traffic mode: weights are fetched once per step for all
-        streams). ``step``/``step_many`` then take ``[N, I]`` / ``[T, N, I]``.
+      backend / layouts: legacy shim kwargs, only meaningful with a params
+        dict; passing them alongside a program is an error (the program
+        already fixes both).
+      n_streams: number of independent stream slots batched through one
+        kernel (the heavy-traffic mode: weights are fetched once per step
+        for all slots). ``step``/``step_many`` then take ``[N, I]`` /
+        ``[T, N, I]``. Slots double as serving sessions via
+        :meth:`open_stream` / :meth:`close_stream`.
 
     The Eq. 7 latency model prices the *streamed weight width* of the
-    chosen backend (:func:`repro.core.perf_model.spec_for_backend`): the
-    fp32 backends pay 4 bytes/weight over the spec's DRAM bus while
+    program's backend (:func:`repro.core.perf_model.spec_for_backend`):
+    the fp32 backends pay 4 bytes/weight over the spec's DRAM bus while
     ``fused_q8`` streams the paper's INT8 — so :attr:`accel` (and every
     latency/bytes figure in :meth:`report`) reflects what the backend
     actually fetches, not the training-time fiction.
     """
 
-    def __init__(self, params, task: GruTaskConfig,
+    _PER_STREAM_KEYS = ("fired_x", "fired_h", "lat_s", "w_bytes")
+
+    def __init__(self, program, task: GruTaskConfig,
                  thresholds: ThresholdPolicy | None = None,
                  accel: AcceleratorSpec = EDGEDRNN,
                  dynamic_target_fired: float | None = None,
-                 backend: str = "fused",
+                 backend: str | None = None,
                  layouts=None,
                  n_streams: int = 1):
-        self.params = params["gru"]
-        self.head = (params["head"], params["head_b"])
+        if isinstance(program, DeltaGruProgram):
+            if backend is not None and backend != program.backend:
+                raise ValueError(
+                    f"backend={backend!r} conflicts with the compiled "
+                    f"program's backend {program.backend!r}; drop the kwarg")
+            if layouts is not None:
+                raise ValueError("layouts= is meaningless with a compiled "
+                                 "program — it already holds its packs")
+        else:
+            # legacy shim: params dict + knob kwargs -> compile here
+            program = compile_deltagru(program, backend=backend or "fused",
+                                       layouts=layouts)
+        if program.head is None:
+            raise ValueError(
+                "GruStreamEngine needs a program with a classifier head; "
+                "compile from an init_gru_model params dict")
+        self.program = program
+        self.params = list(program.layers)   # legacy attr (the gru stack)
+        self.head = (program.head, program.head_b)
         self.task = task
-        self.accel = spec_for_backend(accel, backend)
-        self.backend = backend
+        self.accel = spec_for_backend(accel, program.backend)
+        self.backend = program.backend
         self.n_streams = n_streams
         self.thresholds = thresholds or ThresholdPolicy(task.theta_x,
                                                         task.theta_h)
         self.theta_x = self.thresholds.theta_x
         self.dynamic_target = dynamic_target_fired
         self.dims = GruDims(task.input_size, task.hidden_size, task.num_layers)
-        if layouts is None:
-            layouts, packs = pack_stack(self.params, backend)
-        else:
-            packs = None
 
         def _one_step(state, carry, x):
-            """One timestep, stats + controller on-device (no host sync)."""
-            y, new_state, deltas = deltagru_stack_step(
-                self.params, state, x, self.theta_x, carry["theta_h"],
-                backend=backend, layouts=layouts, packs=packs)
+            """One timestep, stats + controller on-device (no host sync).
+
+            Firing fractions are tracked **per stream** (``[N]`` carry
+            vectors); the Eq. 7 latency / byte terms are linear in the
+            firing fractions, so stream means reproduce the old aggregate
+            accounting exactly.
+            """
+            y, new_state, deltas = self.program.step(
+                state, x, self.theta_x, carry["theta_h"])
             out = y @ self.head[0] + self.head[1]
             fx = jnp.mean(jnp.stack(
-                [jnp.mean((dx != 0).astype(jnp.float32)) for dx, _ in deltas]))
+                [jnp.mean((dx != 0).astype(jnp.float32), axis=-1)
+                 for dx, _ in deltas]), axis=0)                   # [N]
             fh = jnp.mean(jnp.stack(
-                [jnp.mean((dh != 0).astype(jnp.float32)) for _, dh in deltas]))
+                [jnp.mean((dh != 0).astype(jnp.float32), axis=-1)
+                 for _, dh in deltas]), axis=0)                   # [N]
             theta_h = carry["theta_h"]
             if self.dynamic_target is not None:
-                theta_h = dynamic_threshold(theta_h, fh, self.dynamic_target)
+                theta_h = dynamic_threshold(theta_h, jnp.mean(fh),
+                                            self.dynamic_target)
+            # Eq. 7 latency / weight bytes for this step's actual firing
+            # fractions, per stream
+            lat = stack_latency_s(self.dims, 1.0 - fx, 1.0 - fh, self.accel)
+            wb = dram_traffic_bytes_per_timestep(
+                self.dims, 1.0 - fx, 1.0 - fh,
+                w_weight_bits=self.accel.w_weight_bits)
             new_carry = {
+                # per-stream accumulators ([N]): session accounting; these
+                # are zeroed slotwise by open_stream's masked reset
                 "fired_x": carry["fired_x"] + fx,
                 "fired_h": carry["fired_h"] + fh,
-                # Eq. 7 latency for this step's actual firing fractions
-                "lat_s": carry["lat_s"] + stack_latency_s(
-                    self.dims, 1.0 - fx, 1.0 - fh, self.accel),
-                # weight bytes the backend streams for this step's firing
-                "w_bytes": carry["w_bytes"] + dram_traffic_bytes_per_timestep(
-                    self.dims, 1.0 - fx, 1.0 - fh,
-                    w_weight_bits=self.accel.w_weight_bits),
+                "lat_s": carry["lat_s"] + lat,
+                "w_bytes": carry["w_bytes"] + wb,
+                # engine-lifetime aggregates (scalars): never touched by
+                # session opens, so stats/report() stay exact however many
+                # short-lived streams recycled through the slots
+                "agg_fired_x": carry["agg_fired_x"] + jnp.mean(fx),
+                "agg_fired_h": carry["agg_fired_h"] + jnp.mean(fh),
+                "agg_lat_s": carry["agg_lat_s"] + jnp.mean(lat),
+                "agg_w_bytes": carry["agg_w_bytes"] + jnp.mean(wb),
                 "theta_h": theta_h,
             }
             return out, new_state, new_carry
@@ -192,8 +244,27 @@ class GruStreamEngine:
             (state, carry), outs = jax.lax.scan(body, (state, carry), xs)
             return outs, state, carry
 
+        n = n_streams
+
+        @jax.jit
+        def _reset_streams(state, carry, mask):
+            """Masked per-slot reset: fresh state + zeroed accounting for
+            slots where ``mask`` is True; everything else untouched."""
+            fresh = self.program.init_state((n,))
+
+            def sel(cur, new):
+                m = mask.reshape((n,) + (1,) * (cur.ndim - 1))
+                return jnp.where(m, new, cur)
+
+            state = jax.tree_util.tree_map(sel, state, fresh)
+            carry = dict(carry)
+            for k in self._PER_STREAM_KEYS:
+                carry[k] = jnp.where(mask, 0.0, carry[k])
+            return state, carry
+
         self._step = _step
         self._steps = _steps
+        self._reset_streams = _reset_streams
         self.reset()
 
     # -- hot path ---------------------------------------------------------
@@ -236,6 +307,67 @@ class GruStreamEngine:
         self._n_steps += xs.shape[0]
         return outs[:, 0] if (squeeze and self.n_streams == 1) else outs
 
+    # -- per-stream sessions ----------------------------------------------
+
+    @property
+    def free_streams(self) -> list:
+        """Slot ids not currently claimed by an open session."""
+        return [i for i, busy in enumerate(self._slot_busy) if not busy]
+
+    def open_stream(self) -> int:
+        """Claim a free slot for a new stream session.
+
+        Masked-resets ONLY that slot — its stack state returns to the
+        program's init convention and its accounting accumulators zero,
+        while every other stream runs on undisturbed. Returns the slot id
+        to feed/read on the ``step``/``step_many`` stream axis. Raises
+        ``RuntimeError`` when all ``n_streams`` slots are busy (queue the
+        request — see ``serve.scheduler.GruStreamBatcher``).
+        """
+        free = self.free_streams
+        if not free:
+            raise RuntimeError(
+                f"all {self.n_streams} stream slots are busy; close one "
+                "or queue through GruStreamBatcher")
+        sid = free[0]
+        mask = np.zeros((self.n_streams,), bool)
+        mask[sid] = True
+        self.state, self._carry = self._reset_streams(
+            self.state, self._carry, jnp.asarray(mask))
+        self._slot_busy[sid] = True
+        self._slot_opened_at[sid] = self._n_steps
+        return sid
+
+    def close_stream(self, sid: int, host_carry=None) -> dict:
+        """Release a session slot; returns THAT stream's accounting.
+
+        One host sync (the per-stream carry vectors materialize once).
+        The slot is immediately reusable by the next :meth:`open_stream`.
+        ``host_carry`` lets a scheduler harvesting several streams in one
+        tick fetch the carry once (``jax.device_get(engine._carry)``) and
+        share it across the closes instead of syncing per stream.
+        """
+        if not (0 <= sid < self.n_streams) or not self._slot_busy[sid]:
+            raise ValueError(f"stream {sid} is not open")
+        host = host_carry if host_carry is not None \
+            else jax.device_get(self._carry)
+        steps = self._n_steps - self._slot_opened_at[sid]
+        fired_x = float(host["fired_x"][sid])
+        fired_h = float(host["fired_h"][sid])
+        lat = float(host["lat_s"][sid])
+        wb = float(host["w_bytes"][sid])
+        self._slot_busy[sid] = False
+        return {
+            "stream": sid,
+            "steps": steps,
+            "gamma_dx": 1.0 - fired_x / max(steps, 1),
+            "gamma_dh": 1.0 - fired_h / max(steps, 1),
+            "est_latency_s": lat,
+            "mean_est_latency_us": 1e6 * lat / max(steps, 1),
+            "w_bytes": wb,
+            "mean_weight_bytes_per_step": wb / max(steps, 1),
+        }
+
     # -- accounting -------------------------------------------------------
 
     @property
@@ -245,26 +377,40 @@ class GruStreamEngine:
 
     @property
     def stats(self) -> StreamStats:
-        """Materialize the device-side accumulators (one sync per read)."""
+        """Materialize the device carry ONCE; engine-lifetime aggregates.
+
+        Reads the scalar lifetime accumulators (stream means, updated
+        every step, never reset by session opens) — exact whatever mix of
+        open/close traffic the slots have seen. The accounting terms are
+        linear in the firing fractions, so the stream mean reproduces the
+        single-stream accounting exactly.
+        """
+        host = jax.device_get(self._carry)
         return StreamStats(
             steps=self._n_steps,
-            fired_x=float(self._carry["fired_x"]),
-            fired_h=float(self._carry["fired_h"]),
-            est_latency_s=float(self._carry["lat_s"]),
+            fired_x=float(host["agg_fired_x"]),
+            fired_h=float(host["agg_fired_h"]),
+            est_latency_s=float(host["agg_lat_s"]),
+            w_bytes=float(host["agg_w_bytes"]),
         )
 
     def reset(self):
-        self.state = init_deltagru_stack_state(
-            self.params, batch_shape=(self.n_streams,),
-            m_init=stack_m_init(self.backend))
+        self.state = self.program.init_state(batch_shape=(self.n_streams,))
+        zeros = jnp.zeros((self.n_streams,), jnp.float32)
         self._carry = {
-            "fired_x": jnp.float32(0.0),
-            "fired_h": jnp.float32(0.0),
-            "lat_s": jnp.float32(0.0),
-            "w_bytes": jnp.float32(0.0),
+            "fired_x": zeros,
+            "fired_h": zeros,
+            "lat_s": zeros,
+            "w_bytes": zeros,
+            "agg_fired_x": jnp.float32(0.0),
+            "agg_fired_h": jnp.float32(0.0),
+            "agg_lat_s": jnp.float32(0.0),
+            "agg_w_bytes": jnp.float32(0.0),
             "theta_h": jnp.float32(self.thresholds.theta_h),
         }
         self._n_steps = 0
+        self._slot_busy = [False] * self.n_streams
+        self._slot_opened_at = [0] * self.n_streams
 
     def report(self) -> dict:
         s = self.stats
@@ -274,8 +420,7 @@ class GruStreamEngine:
             "gamma_dx": s.gamma_dx,
             "gamma_dh": s.gamma_dh,
             "mean_est_latency_us": 1e6 * s.est_latency_s / max(s.steps, 1),
-            "mean_weight_bytes_per_step":
-                float(self._carry["w_bytes"]) / max(s.steps, 1),
+            "mean_weight_bytes_per_step": s.w_bytes / max(s.steps, 1),
             "weight_bits": self.accel.w_weight_bits,
             "effective_throughput_gops": est.throughput_ops / 1e9,
             "theta_x": self.theta_x,

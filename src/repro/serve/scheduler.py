@@ -1,10 +1,22 @@
-"""Continuous-batching request scheduler over ``LmEngine`` slots.
+"""Request schedulers over the serving engines' fixed slot counts.
 
-Requests queue up; whenever slots free up, the scheduler pads the newest
-wave of prompts to a common length, prefills them into the free slots, and
-keeps stepping all active slots each tick. Finished slots (EOS or budget)
-are harvested and recycled. Per-slot ragged positions are native to the
-ring KVCache (see models.attention.KVCache).
+``ContinuousBatcher`` — continuous batching over ``LmEngine`` decode slots:
+requests queue up; whenever slots free up, the scheduler pads the newest
+wave of prompts to a common length, prefills them into the free slots
+(slotwise-merging the caches so in-flight slots are untouched), and keeps
+stepping all active slots each tick. Finished slots (EOS or budget) are
+harvested and recycled. Per-slot ragged positions are native to the ring
+KVCache (see models.attention.KVCache).
+
+``GruStreamBatcher`` — the same admission/harvest loop over
+``GruStreamEngine`` stream sessions (the EdgeDRNN heavy-traffic mode):
+queued streaming requests are admitted into free ``n_streams`` slots via
+``open_stream()`` (per-slot masked reset), every tick feeds one frame per
+active stream through ONE batched engine step (one weight fetch serves all
+streams), and exhausted streams are harvested via ``close_stream()`` —
+which also returns that stream's own firing/latency accounting. Millions
+of short-lived streams recycle through a fixed set of slots without ever
+rebuilding the engine.
 """
 from __future__ import annotations
 
@@ -12,10 +24,11 @@ import collections
 import itertools
 from dataclasses import dataclass, field
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.engine import LmEngine
+from repro.serve.engine import GruStreamEngine, LmEngine
 
 
 @dataclass
@@ -29,9 +42,11 @@ class Request:
 
 
 class ContinuousBatcher:
-    """Slot-based scheduler. Note: slot admission re-prefills the *batch*
-    prefill path for the incoming wave (engine caches are slotwise-merged),
-    which keeps everything jit-friendly at fixed shapes."""
+    """Slot-based scheduler. Admission prefills the incoming wave through
+    the batch prefill path (fixed shapes, jit-friendly) and then restores
+    the live slots' cache rows — prefill writes every slot's cache, so
+    without the slotwise merge an admission into a partially occupied
+    batch would corrupt the in-flight requests."""
 
     def __init__(self, engine: LmEngine, pad_id: int = 0):
         self.engine = engine
@@ -49,6 +64,7 @@ class ContinuousBatcher:
 
     def _admit(self):
         free = [i for i, s in enumerate(self.slots) if s is None]
+        live = [i for i, s in enumerate(self.slots) if s is not None]
         if not free or not self.queue:
             return
         wave = []
@@ -60,16 +76,21 @@ class ContinuousBatcher:
             wave.append((slot, req))
         if not wave:
             return
-        # Pad the whole batch's "prompts": active slots replay a 1-token
-        # no-op prompt (their cache state is already live); new slots get
-        # their real prompt. For simplicity this implementation prefills
-        # waves only when ALL slots are free (cold start) or treats the
-        # engine as wave-synchronous otherwise.
+        # Prefill the wave through the whole-batch prefill path (fixed
+        # shapes). Live slots get a pad-only "prompt" whose cache writes
+        # are garbage — snapshot their cache rows first and merge them
+        # back after, so admission never perturbs in-flight requests.
+        old_caches = self.engine.caches if live else None
         max_len = max(len(r.prompt) for _, r in wave)
         tokens = np.full((self.engine.batch, max_len), self.pad_id, np.int32)
         for slot, req in wave:
             tokens[slot, -len(req.prompt):] = req.prompt
         logits = self.engine.prefill(jnp.asarray(tokens))
+        if live:
+            keep = np.zeros((self.engine.batch,), bool)
+            keep[live] = True
+            self.engine.caches = _merge_caches_slotwise(
+                old_caches, self.engine.caches, jnp.asarray(keep))
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         for slot, req in wave:
             req.output.append(int(nxt[slot]))
@@ -101,5 +122,114 @@ class ContinuousBatcher:
         for _ in range(max_ticks):
             done += self.step()
             if not self.queue and not any(self.slots):
+                break
+        return done
+
+
+def _merge_caches_slotwise(old, new, keep):
+    """Take ``old``'s rows for slots where ``keep`` is True, else ``new``.
+
+    Cache leaves are stacked ``[n_layers, B, ...]`` (see
+    ``models.blocks.init_caches``), so the slot (batch) axis is axis 1.
+    """
+    def sel(o, n):
+        m = keep.reshape((1, -1) + (1,) * (n.ndim - 2))
+        return jnp.where(m, o, n)
+
+    return jax.tree_util.tree_map(sel, old, new)
+
+
+@dataclass
+class StreamRequest:
+    """A queued streaming inference request: a finite frame sequence."""
+
+    uid: int
+    frames: np.ndarray                       # [T, I]
+    outputs: list = field(default_factory=list)
+    stats: dict | None = None                # per-stream engine accounting
+    done: bool = False
+    cursor: int = 0
+
+
+class GruStreamBatcher:
+    """Admission/harvest scheduler over ``GruStreamEngine`` sessions.
+
+    Mirrors :class:`ContinuousBatcher`: ``submit()`` queues a frame
+    sequence, each :meth:`step` tick admits queued requests into free
+    stream slots (``open_stream`` masked-resets exactly that slot), feeds
+    one frame per active stream through ONE batched engine step — the
+    heavy-traffic property: weights are fetched once per tick for every
+    active stream — and harvests exhausted streams (``close_stream``
+    returns their per-stream gamma/latency/byte accounting into
+    ``req.stats``). Idle slots are fed their last admitted frame (zero
+    delta — the silent regime, virtually free under Eq. 7).
+    """
+
+    def __init__(self, engine: GruStreamEngine):
+        self.engine = engine
+        self.queue: collections.deque[StreamRequest] = collections.deque()
+        self.slots: list[StreamRequest | None] = [None] * engine.n_streams
+        self._uid = itertools.count()
+        self._idle_x = np.zeros((engine.n_streams, engine.dims.input_size),
+                                np.float32)
+
+    def submit(self, frames) -> int:
+        """Queue a ``[T, I]`` (T >= 1) frame sequence; returns its uid."""
+        frames = np.asarray(frames, np.float32)
+        if (frames.ndim != 2 or frames.shape[0] == 0
+                or frames.shape[-1] != self.engine.dims.input_size):
+            raise ValueError(
+                f"frames must be [T >= 1, {self.engine.dims.input_size}], "
+                f"got {frames.shape}")
+        uid = next(self._uid)
+        self.queue.append(StreamRequest(uid, frames))
+        return uid
+
+    def _admit(self):
+        while self.queue and self.engine.free_streams:
+            req = self.queue.popleft()
+            sid = self.engine.open_stream()
+            self.slots[sid] = req
+
+    def step(self) -> list[StreamRequest]:
+        """One tick: admit, one batched engine step, harvest. Returns
+        finished requests (with ``stats`` filled).
+
+        The tick itself is zero-sync: per-frame outputs are kept as device
+        slices and only materialized to the host when a stream finishes
+        (harvest decisions are cursor-based, never value-based), so the
+        engine's device-side hot loop is never forced to drain per tick.
+        """
+        self._admit()
+        active = [(sid, req) for sid, req in enumerate(self.slots)
+                  if req is not None]
+        if not active:
+            return []
+        x = self._idle_x
+        for sid, req in active:
+            x[sid] = req.frames[req.cursor]
+        out = jnp.reshape(self.engine.step(x), (self.engine.n_streams, -1))
+        finished = []
+        host_carry = None
+        for sid, req in active:
+            req.outputs.append(out[sid])         # device slice, no sync
+            req.cursor += 1
+            if req.cursor >= len(req.frames):
+                if host_carry is None:           # one sync per tick, shared
+                    host_carry = jax.device_get(self.engine._carry)
+                req.stats = self.engine.close_stream(sid,
+                                                     host_carry=host_carry)
+                req.outputs = list(np.asarray(jnp.stack(req.outputs)))
+                req.done = True
+                finished.append(req)
+                self.slots[sid] = None
+        return finished
+
+    def run_until_drained(self, max_ticks: int = 100000):
+        """Tick until queue and slots are empty; returns finished requests."""
+        done = []
+        for _ in range(max_ticks):
+            done += self.step()
+            if not self.queue and not any(r is not None for r in self.slots):
                 break
         return done

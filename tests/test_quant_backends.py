@@ -187,21 +187,19 @@ class TestQuantEngine:
         task = GruTaskConfig(10, 16, 2, 2, task="regression",
                              theta_x=4 / 256, theta_h=8 / 256)
         params = init_gru_model(jax.random.PRNGKey(key), task)
-        qparams, layouts = quantize_gru_model(params)
-        return task, qparams, layouts
+        qprog = quantize_gru_model(params)   # ready-to-run fused_q8 program
+        return task, qprog
 
     def test_engine_stats_parity_on_quantized_stack(self):
         """step loop == step_many on a quantized stack, and the engine's
         gammas match the sequence entry point's."""
-        task, qparams, layouts = self._task_and_model()
+        task, qprog = self._task_and_model()
         rng = np.random.default_rng(0)
         xs = np.cumsum(rng.normal(size=(24, 10)) * 0.1, axis=0).astype(
             np.float32)
-        e1 = GruStreamEngine(qparams, task, backend="fused_q8",
-                             layouts=layouts)
+        e1 = GruStreamEngine(qprog, task)
         outs1 = np.stack([np.asarray(e1.step(x)) for x in xs])
-        e2 = GruStreamEngine(qparams, task, backend="fused_q8",
-                             layouts=layouts)
+        e2 = GruStreamEngine(qprog, task)
         outs2 = np.asarray(e2.step_many(xs))
         np.testing.assert_array_equal(outs1, outs2)
         r1, r2 = e1.report(), e2.report()
@@ -209,9 +207,8 @@ class TestQuantEngine:
                   "mean_weight_bytes_per_step"):
             assert r1[k] == pytest.approx(r2[k], rel=1e-6)
 
-        _, _, st = deltagru_sequence(
-            qparams["gru"], jnp.asarray(xs)[:, None, :], task.theta_x,
-            task.theta_h, backend="fused_q8", layouts=layouts)
+        _, _, st = qprog.sequence(jnp.asarray(xs)[:, None, :], task.theta_x,
+                                  task.theta_h)
         assert r1["gamma_dx"] == pytest.approx(float(st["gamma_dx"]),
                                                abs=1e-5)
         assert r1["gamma_dh"] == pytest.approx(float(st["gamma_dh"]),
@@ -222,9 +219,10 @@ class TestQuantEngine:
         64-bit bus (K=8 PEs, the paper's operating point); the fp32 fused
         backend pays 4 bytes/weight (K=2) — 4x the latency and bytes at
         identical firing fractions."""
-        task, qparams, layouts = self._task_and_model()
-        e_q8 = GruStreamEngine(qparams, task, backend="fused_q8",
-                               layouts=layouts)
+        task, qprog = self._task_and_model()
+        e_q8 = GruStreamEngine(qprog, task)
+        qparams = {"gru": list(qprog.layers), "head": qprog.head,
+                   "head_b": qprog.head_b}
         e_fp = GruStreamEngine(qparams, task, backend="fused")
         assert e_q8.accel.w_weight_bits == 8 and e_q8.accel.k_pes == 8
         assert e_fp.accel.w_weight_bits == 32 and e_fp.accel.k_pes == 2

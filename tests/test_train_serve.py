@@ -154,6 +154,37 @@ class TestServing:
         assert sorted(r.uid for r in done) == sorted(uids)
         assert all(len(r.output) == 4 for r in done)
 
+    def test_continuous_batcher_staggered_admission_keeps_live_slots(self):
+        """Regression: admitting into a partially occupied batch must not
+        clobber in-flight slots. The wave prefill writes EVERY slot's
+        cache; without the slotwise merge, request A's decode diverges the
+        moment request B is admitted mid-flight."""
+        cfg = get_config("llama3.2-1b").reduced()
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+
+        def run(staggered: bool):
+            eng = LmEngine(params, cfg, batch=2, max_len=64)
+            cb = ContinuousBatcher(eng)
+            cb.submit([1, 2, 3, 4], max_new_tokens=8)
+            done = []
+            submitted_b = not staggered
+            for _ in range(30):
+                done += cb.step()
+                # admit B after A has decoded a few tokens
+                if staggered and not submitted_b and cb.slots[0] is not None \
+                        and len(cb.slots[0].output) >= 3:
+                    cb.submit([5, 6, 7], max_new_tokens=4)
+                    submitted_b = True
+                if not staggered and len(done) == 1:
+                    break
+                if staggered and len(done) == 2:
+                    break
+            return {r.uid: r.output for r in done}
+
+        solo = run(staggered=False)
+        mixed = run(staggered=True)
+        assert mixed[0] == solo[0]   # request A unaffected by B's admission
+
     def test_stream_engine_sparsity_and_latency_model(self):
         task = GruTaskConfig(14, 32, 2, 1, task="regression",
                              theta_x=0.1, theta_h=0.1)
