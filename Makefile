@@ -1,18 +1,21 @@
 # EdgeDRNN reproduction — tier-1 + perf-gate entry points.
 export PYTHONPATH := src
 
-.PHONY: test bench bench-quick check-regression ci
+.PHONY: test bench bench-quick bench-lstm-quick check-regression ci
 
 test:            ## tier-1 suite
 	python -m pytest -x -q
 
-ci: test bench-quick check-regression  ## full gate: tier-1 + quick bench + perf regression
+ci: test bench-quick bench-lstm-quick check-regression  ## full gate: tier-1 + quick benches (GRU + LSTM parity) + perf regression
 
 bench:           ## full paper tables/figures + kernel benches (rewrites BENCH_*.json)
 	python -m benchmarks.run
 
 bench-quick:     ## reduced CI pass (no baseline writes)
 	python -m benchmarks.run --quick
+
+bench-lstm-quick:  ## DeltaLSTM parity/bench quick path (no baseline writes)
+	python -m benchmarks.kernel_bench --lstm --quick
 
 check-regression:  ## gate fresh fused-path wall time / bytes model vs committed baselines
 	python -m benchmarks.check_regression

@@ -1,9 +1,10 @@
 """CI perf gate: fresh kernel-bench pass vs the committed BENCH baselines.
 
-Re-runs the sequence-level backend shootout at the *same configuration* the
-committed ``BENCH_deltagru_seq.json`` / ``BENCH_deltagru_q8.json`` records
-were produced with (dims are read from the baseline's ``config`` block, so
-the gate always compares apples to apples), then:
+Re-runs the sequence-level backend shootouts at the *same configuration*
+the committed ``BENCH_deltagru_seq.json`` / ``BENCH_deltagru_q8.json`` /
+``BENCH_deltalstm_seq.json`` records were produced with (dims are read
+from the baseline's ``config`` block, so the gate always compares apples
+to apples), then:
 
 * fails on a > ``MAX_WALL_RATIO`` (1.5x) wall-time regression of the fused
   paths (``fused``, ``fused_q8``) at any measured theta — these are the
@@ -102,7 +103,8 @@ def main() -> int:
 
     base_seq = _load(kb.BENCH_JSON)
     base_q8 = _load(kb.BENCH_Q8_JSON)
-    if base_seq is None and base_q8 is None:
+    base_lstm = _load(kb.BENCH_LSTM_JSON)
+    if base_seq is None and base_q8 is None and base_lstm is None:
         print("no committed BENCH_*.json baselines found; nothing to gate")
         return 0
 
@@ -145,6 +147,28 @@ def main() -> int:
                 "q8 baseline was recorded on a different machine class; "
                 "wall-time gate skipped, bytes model enforced at 2% "
                 "tolerance")
+
+    if base_lstm is not None:
+        # bench_lstm_record itself hard-fails on fused-vs-dense parity
+        # drift, so a completed fresh record already certifies parity;
+        # the gate here is the fused wall-time trajectory. Parity drift is
+        # folded into `failures` so the GRU gates' findings still print.
+        try:
+            _, fresh_lstm = kb.bench_lstm_record(
+                **cfg_dims(base_lstm),
+                thetas=tuple(sorted({r["theta"]
+                                     for r in base_lstm["rows"]})))
+        except AssertionError as e:
+            failures.append(f"LSTM PARITY {e}")
+        else:
+            if _comparable(base_lstm["config"], fresh_lstm["config"]):
+                _gate_walltime("lstm", base_lstm, fresh_lstm, failures)
+            else:
+                warnings.append(
+                    "lstm baseline was recorded on "
+                    f"{base_lstm['config'].get('device')}/"
+                    f"{base_lstm['config'].get('machine')}; wall-time gate "
+                    "skipped on this machine")
 
     for w in warnings:
         print(f"warn {w}")

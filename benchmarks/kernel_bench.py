@@ -23,6 +23,13 @@ bytes — the quantity EdgeDRNN's Eq. 8 is about) and effective GOp/s
 those rows into arithmetic-intensity / roofline-bound lines, and
 ``benchmarks/check_regression.py`` gates fresh runs against the committed
 records.
+
+Part 4 (``run_lstm``) is the cell-parity trajectory: the DeltaLSTM
+``dense`` / ``fused`` sequence paths (compiled ``cell="lstm"`` programs)
+against the per-step dispatch loop, with a hard fused-vs-dense parity
+assertion, written to ``BENCH_deltalstm_seq.json``.
+``python -m benchmarks.kernel_bench --lstm --quick`` is the CI spelling
+(``make ci`` chains it).
 """
 from __future__ import annotations
 
@@ -43,8 +50,11 @@ BENCH_JSON = os.path.join(os.path.dirname(__file__),
                           "BENCH_deltagru_seq.json")
 BENCH_Q8_JSON = os.path.join(os.path.dirname(__file__),
                              "BENCH_deltagru_q8.json")
+BENCH_LSTM_JSON = os.path.join(os.path.dirname(__file__),
+                               "BENCH_deltalstm_seq.json")
 
 SEQ_BACKENDS = ("dense", "blocksparse", "fused", "fused_q8")
+LSTM_BACKENDS = ("dense", "fused")
 
 
 def record_meta() -> dict:
@@ -103,6 +113,7 @@ def run() -> list[str]:
     lines.append(
         f"kernel.seq_bench_json,0,wrote {os.path.basename(BENCH_JSON)}")
     lines.extend(run_q8(times_by_theta=_times_from_record(seq_record)))
+    lines.extend(run_lstm())
     return lines
 
 
@@ -404,5 +415,123 @@ def run_quick(t=16, i=64, h=128, layers=2, thetas=(0.0, 0.2)) -> list[str]:
     return lines
 
 
+# ---------------------------------------------------------------------------
+# Part 4: DeltaLSTM sequence shootout (the cell-parity trajectory)
+# ---------------------------------------------------------------------------
+
+def bench_lstm_record(t=64, i=128, h=256, layers=2,
+                      thetas=(0.0, 0.05, 0.2)):
+    """Wall time + fused-vs-dense parity for the DeltaLSTM backends.
+
+    Mirrors :func:`bench_seq_record` on ``cell="lstm"`` programs: the
+    seed-style per-step dispatch loop against the scanned ``dense`` /
+    ``fused`` sequence paths, plus a max-abs-error parity row (the fused
+    kernel must track the dense reference — the quick CI pass fails hard
+    on drift instead of silently recording it).
+    """
+    from repro.core.deltalstm import (deltalstm_sequence,
+                                      deltalstm_stack_step,
+                                      init_deltalstm_stack_state,
+                                      init_lstm_stack)
+    from repro.core.program import compile_delta_program
+    key = jax.random.PRNGKey(0)
+    params = init_lstm_stack(key, i, h, layers)
+    xs = _walk_inputs(jax.random.fold_in(key, 1), t, 1, i)
+    lines, rows = [], []
+
+    def _lstm_seq_fn(backend):
+        prog = compile_delta_program(params, backend=backend, cell="lstm")
+        return jax.jit(lambda xs: prog.sequence(
+            xs, theta, theta, collect_sparsity=False)[0])
+
+    for theta in thetas:
+        ys_d, _, st = deltalstm_sequence(params, xs, theta, theta)
+        gdx, gdh = float(st["gamma_dx"]), float(st["gamma_dh"])
+        ys_f, _, _ = deltalstm_sequence(params, xs, theta, theta,
+                                        backend="fused")
+        parity = float(jnp.max(jnp.abs(ys_f - ys_d)))
+        if not (parity < 1e-4):
+            raise AssertionError(
+                f"fused DeltaLSTM drifted from dense at theta={theta}: "
+                f"max|fused - dense| = {parity}")
+
+        step = jax.jit(lambda s, x: deltalstm_stack_step(
+            params, s, x, theta, theta))
+
+        def per_step_loop():
+            s = init_deltalstm_stack_state(params, (1,))
+            y = None
+            for x in xs:
+                y, s, deltas = step(s, x)
+                float(jnp.mean(deltas[0][0]))   # the seed's per-step sync
+            return y
+
+        seqs = [_lstm_seq_fn(be) for be in LSTM_BACKENDS]
+        walls = _time_calls([(lambda s=s: s(xs)) for s in seqs], reps=30)
+        times = {"per_step_dispatch": _time_call(per_step_loop)}
+        times.update(dict(zip(LSTM_BACKENDS, walls)))
+
+        for name, wall in times.items():
+            us = wall / t * 1e6
+            rows.append({"theta": theta, "gamma_dx": round(gdx, 4),
+                         "gamma_dh": round(gdh, 4), "backend": name,
+                         "us_per_step": round(us, 2),
+                         "steps_per_s": round(t / wall, 1),
+                         "fused_dense_maxerr": parity})
+            lines.append(
+                f"kernel.lstm_{name}_th{theta},{us:.1f},"
+                f"gamma_dh={gdh:.3f} steps/s={t / wall:.0f} "
+                f"parity={parity:.1e}")
+
+    record = {
+        "bench": "deltalstm_seq_backends",
+        "unit": "us_per_step",
+        "config": {"t": t, "input": i, "hidden": h, "layers": layers,
+                   "batch": 1, **record_meta()},
+        "created_unix": int(time.time()),
+        "rows": rows,
+    }
+    return lines, record
+
+
+def run_lstm(t=64, i=128, h=256, layers=2,
+             thetas=(0.0, 0.05, 0.2), write=True) -> list[str]:
+    """DeltaLSTM sequence wall time + parity; writes
+    ``BENCH_deltalstm_seq.json`` (gated by ``check_regression``)."""
+    lines, record = bench_lstm_record(t=t, i=i, h=h, layers=layers,
+                                      thetas=thetas)
+    if write:
+        with open(BENCH_LSTM_JSON, "w") as f:
+            json.dump(record, f, indent=1)
+        lines.append(
+            f"kernel.lstm_bench_json,0,wrote "
+            f"{os.path.basename(BENCH_LSTM_JSON)}")
+    return lines
+
+
+def run_lstm_quick(t=16, i=64, h=128, layers=2,
+                   thetas=(0.0, 0.2)) -> list[str]:
+    """Reduced LSTM parity/bench pass for CI (no baseline writes)."""
+    return run_lstm(t=t, i=i, h=h, layers=layers, thetas=thetas, write=False)
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="kernel benches (delta_spmv + DeltaGRU/DeltaLSTM "
+                    "sequence shootouts)")
+    ap.add_argument("--lstm", action="store_true",
+                    help="run only the DeltaLSTM parity/bench suite")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced CI pass (small dims, no baseline writes)")
+    args = ap.parse_args(argv)
+    if args.lstm:
+        print("\n".join(run_lstm_quick() if args.quick else run_lstm()))
+    elif args.quick:
+        print("\n".join(run_quick()))
+    else:
+        print("\n".join(run()))
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

@@ -22,6 +22,9 @@ def _suites(quick: bool):
                             kernel_bench, table2_perfmodel,
                             table6_7_comparison)
     if quick:
+        # the LSTM quick pass is its own `make ci` stage
+        # (`python -m benchmarks.kernel_bench --lstm --quick`), so it is
+        # NOT repeated here — `make ci` would run it twice otherwise
         return [("kernel_quick", kernel_bench.run_quick)]
     suites = [
         ("table2", table2_perfmodel.run),
@@ -67,8 +70,9 @@ def main(argv=None) -> None:
             print(f"{name}.FAILED,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
     # machine-readable perf-trajectory records written by the suites
-    from benchmarks.kernel_bench import BENCH_JSON, BENCH_Q8_JSON
-    for p in (BENCH_JSON, BENCH_Q8_JSON):
+    from benchmarks.kernel_bench import (BENCH_JSON, BENCH_LSTM_JSON,
+                                         BENCH_Q8_JSON)
+    for p in (BENCH_JSON, BENCH_Q8_JSON, BENCH_LSTM_JSON):
         if os.path.exists(p):
             print(f"bench_json,0,{p}", file=sys.stderr)
     if failures:

@@ -15,9 +15,12 @@ from repro.core.deltagru import (DeltaGruStackState, GruLayerParams,
                                  gru_sequence, gru_step, init_deltagru_state,
                                  init_deltagru_stack_state, init_gru_layer,
                                  init_gru_stack)
-from repro.core.deltalstm import (LstmLayerParams, deltalstm_sequence,
-                                  deltalstm_step, init_lstm_stack,
-                                  lstm_sequence)
+from repro.core.deltalstm import (DeltaLstmStackState, LstmLayerParams,
+                                  deltalstm_sequence, deltalstm_stack_step,
+                                  deltalstm_step, init_deltalstm_stack_state,
+                                  init_deltalstm_state, init_lstm_layer,
+                                  init_lstm_stack, lstm_sequence,
+                                  lstm_stack_m_init, pack_lstm_stack)
 from repro.core.perf_model import (EDGEDRNN, V5E, AcceleratorSpec,
                                    TpuChipSpec, batch_sweep,
                                    delta_unit_latency_cycles,
@@ -26,7 +29,11 @@ from repro.core.perf_model import (EDGEDRNN, V5E, AcceleratorSpec,
                                    normalized_batch1_throughput,
                                    tpu_batch1_gru_roofline)
 from repro.core.program import (DeltaGruProgram, DeltaGruProgramState,
-                                compile_deltagru)
-from repro.core.sparsity import (GruDims, effective_sparsity, fraction_zeros,
-                                 gamma_from_fired)
-from repro.core.thresholds import ThresholdPolicy, dynamic_threshold, q88
+                                DeltaProgram, DeltaProgramState,
+                                compile_delta_program, compile_deltagru,
+                                infer_cell)
+from repro.core.sparsity import (CELL_GATES, GruDims, cell_dims,
+                                 effective_sparsity, fraction_zeros,
+                                 gamma_from_fired, lstm_dims)
+from repro.core.thresholds import (ThresholdPolicy, dynamic_threshold,
+                                   layer_theta, q88)

@@ -21,14 +21,15 @@ by hand through ``backend=`` / ``layouts=`` / ``packs=`` /
 
 The registry is keyed on ``(cell, name)`` so it is cell-agnostic: the four
 DeltaGRU backends register themselves when :mod:`repro.core.deltagru`
-imports, and :mod:`repro.core.deltalstm` registers its ``dense`` path under
-``cell="lstm"``. Lookups lazily import the builtin cell modules, so
-``get_backend("fused")`` works without the caller having touched
-``deltagru`` first.
+imports, and :mod:`repro.core.deltalstm` registers its ``dense`` and
+``fused`` paths under ``cell="lstm"``. Lookups lazily import the builtin
+cell modules, so ``get_backend("fused")`` works without the caller having
+touched ``deltagru`` first.
 
-:func:`repro.core.program.compile_deltagru` builds on this: it resolves a
-spec once, packs once, and returns a program object whose states can only
-be constructed with the right convention.
+:func:`repro.core.program.compile_delta_program` builds on this: it
+resolves a spec once for any cell family, packs once, and returns a
+program object whose states can only be constructed with the right
+convention.
 """
 from __future__ import annotations
 

@@ -61,6 +61,7 @@ import jax.numpy as jnp
 
 from repro.core.backends import BackendSpec, get_backend, register_backend
 from repro.core.delta import DeltaState, delta_encode, init_delta_state
+from repro.core.thresholds import layer_theta
 
 Array = jax.Array
 
@@ -493,6 +494,9 @@ def deltagru_stack_step(params: Sequence[GruLayerParams],
     threshold of layers >= 2 is ``theta_x`` applied to the previous layer's
     output stream (those deltas count toward Gamma_dx in Eq. 4).
 
+    ``theta_x`` / ``theta_h`` accept a scalar or a static per-layer
+    tuple/list (one entry per layer — the
+    :meth:`~repro.core.thresholds.ThresholdPolicy.layer_thetas` spelling);
     ``layouts`` / ``packs`` are optional per-layer pre-packed weights for
     the fused / blocksparse backends (see :func:`pack_stack`).
     """
@@ -501,7 +505,7 @@ def deltagru_stack_step(params: Sequence[GruLayerParams],
     inp = x
     for li, (p, st) in enumerate(zip(params, state.layers)):
         out = deltagru_step(
-            p, st, inp, theta_x, theta_h,
+            p, st, inp, layer_theta(theta_x, li), layer_theta(theta_h, li),
             layout=layouts[li] if layouts is not None else None,
             packed=packs[li] if packs is not None else None, **kw)
         new_layers.append(out.state)

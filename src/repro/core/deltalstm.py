@@ -10,9 +10,19 @@ Delta memories: ``M = W_x dx + W_h dh + M_prev`` per gate pre-activation —
 the same bookkeeping as DeltaGRU but with four gates and a cell state ``c``.
 
 Execution backends go through the same registry as DeltaGRU
-(:mod:`repro.core.backends`, ``cell="lstm"``): only ``"dense"`` is
-registered today, but the registry keying means a fused LSTM kernel slots
-in without touching any call site.
+(:mod:`repro.core.backends`, ``cell="lstm"``) and carry full GRU parity:
+
+* ``"dense"`` — plain XLA matmuls; the oracle (custom/QAT activations OK).
+* ``"fused"`` — :mod:`repro.kernels.deltalstm_seq`: ONE pallas_call per
+  layer step over the concatenated ``[4H, I+H]`` Fig. 6-style layout with
+  a single fired-block compaction and the in-kernel i/f/g/o + cell-state
+  pipeline; sequences run under ``lax.scan`` with zero per-step Python
+  dispatch.
+
+Both compile into :func:`repro.core.program.compile_delta_program`
+programs (``cell="lstm"``) and stream through
+:class:`repro.serve.engine.DeltaStreamEngine` sessions exactly like their
+GRU counterparts.
 """
 from __future__ import annotations
 
@@ -23,8 +33,13 @@ import jax.numpy as jnp
 
 from repro.core.backends import BackendSpec, get_backend, register_backend
 from repro.core.delta import DeltaState, delta_encode, init_delta_state
+from repro.core.thresholds import layer_theta
 
 Array = jax.Array
+
+
+def _default_acts(sigmoid: Callable, tanh: Callable) -> bool:
+    return sigmoid is jax.nn.sigmoid and tanh is jnp.tanh
 
 
 class LstmLayerParams(NamedTuple):
@@ -85,22 +100,40 @@ class DeltaLstmLayerState(NamedTuple):
 
 
 def init_deltalstm_state(params: LstmLayerParams, batch_shape=(),
-                         dtype=None) -> DeltaLstmLayerState:
+                         dtype=None, m_init: str = "bias") -> DeltaLstmLayerState:
+    """``m_init="bias"`` folds the biases into the delta memories up front
+    (the paper's "bias as first weight column" trick, same as DeltaGRU);
+    ``"zero"`` leaves ``M`` all-zero for backends that consume the bias at
+    the activation stage (none registered for LSTM yet — the convention is
+    carried so a quantized LSTM backend slots in like ``fused_q8`` did)."""
     dtype = dtype or params.w_x.dtype
     h_dim, i_dim = params.hidden_size, params.input_size
-    m0 = jnp.broadcast_to(params.b.astype(dtype), (*batch_shape, 4 * h_dim))
+    if m_init == "zero":
+        m0 = jnp.zeros((*batch_shape, 4 * h_dim), dtype)
+    else:
+        m0 = jnp.broadcast_to(params.b.astype(dtype),
+                              (*batch_shape, 4 * h_dim))
     z = jnp.zeros((*batch_shape, h_dim), dtype)
     return DeltaLstmLayerState(
         h=z, c=z, x_mem=init_delta_state((*batch_shape, i_dim), dtype),
         h_mem=init_delta_state((*batch_shape, h_dim), dtype), m=m0)
 
 
+class DeltaLstmStepOut(NamedTuple):
+    h: Array
+    state: DeltaLstmLayerState
+    delta_x: Array   # the (sparse) encoded input delta actually used
+    delta_h: Array   # the (sparse) encoded hidden delta actually used
+
+
+# -- per-backend step implementations (registered BackendSpec.step fns) -----
+
 def _step_dense(params: LstmLayerParams, state: DeltaLstmLayerState,
                 x: Array, theta_x, theta_h, *,
                 sigmoid: Callable = jax.nn.sigmoid,
                 tanh: Callable = jnp.tanh,
                 matvec: Callable | None = None,
-                layout=None, packed=None, interpret=None):
+                layout=None, packed=None, interpret=None) -> DeltaLstmStepOut:
     dx_out = delta_encode(x, state.x_mem, theta_x)
     dh_out = delta_encode(state.h, state.h_mem, theta_h)
     mv = matvec if matvec is not None else (lambda w, v: v @ w.T)
@@ -112,13 +145,78 @@ def _step_dense(params: LstmLayerParams, state: DeltaLstmLayerState,
     h = o * tanh(c)
     new_state = DeltaLstmLayerState(h=h, c=c, x_mem=dx_out.state,
                                     h_mem=dh_out.state, m=m)
-    return h, new_state, (dx_out.delta, dh_out.delta)
+    return DeltaLstmStepOut(h=h, state=new_state, delta_x=dx_out.delta,
+                            delta_h=dh_out.delta)
+
+
+def _step_fused(params: LstmLayerParams, state: DeltaLstmLayerState,
+                x: Array, theta_x, theta_h, *, sigmoid, tanh, matvec,
+                layout=None, packed=None,
+                interpret=None) -> DeltaLstmStepOut:
+    """i/f/g/o + cell update via the single-pallas_call fused kernel.
+
+    Mode resolution follows :mod:`repro.kernels.ops`: compiled Pallas on
+    TPU; on other backends the pure-jnp oracle of the same fused math
+    (interpret-mode emulation is a correctness tool, not a perf path —
+    request it explicitly with ``interpret=True``).
+    """
+    from repro.kernels import deltalstm_seq as _seq
+    from repro.kernels import ops as _ops
+    if matvec is not None:
+        return _step_dense(params, state, x, theta_x, theta_h,
+                           sigmoid=sigmoid, tanh=tanh, matvec=matvec)
+    if not _default_acts(sigmoid, tanh):
+        raise ValueError("fused backend hard-codes the i/f/g/o activation "
+                         "pipeline; pass backend='dense' (or matvec=) "
+                         "for custom/QAT activations")
+    if layout is None:
+        layout = _seq.pack_lstm_layer(params.w_x, params.w_h)
+    use_ref = _ops._FORCE_REF or (interpret is None
+                                  and _ops._interpret_default())
+    dx_out = delta_encode(x, state.x_mem, theta_x)
+    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+    h_dim, i_dim = params.hidden_size, params.input_size
+    lead = state.h.shape[:-1]
+    args = (layout, state.m.reshape(-1, 4 * h_dim),
+            state.h.reshape(-1, h_dim), state.c.reshape(-1, h_dim),
+            dx_out.delta.reshape(-1, i_dim), dh_out.delta.reshape(-1, h_dim))
+    if use_ref:
+        m_new, h_new, c_new = _seq.deltalstm_seq_step_ref(*args)
+    else:
+        m_new, h_new, c_new = _seq.deltalstm_seq_step(
+            *args, interpret=bool(interpret))
+    h_new = h_new.reshape(*lead, h_dim)
+    new_state = DeltaLstmLayerState(
+        h=h_new, c=c_new.reshape(*lead, h_dim), x_mem=dx_out.state,
+        h_mem=dh_out.state, m=m_new.reshape(*lead, 4 * h_dim))
+    return DeltaLstmStepOut(h=h_new, state=new_state, delta_x=dx_out.delta,
+                            delta_h=dh_out.delta)
+
+
+# -- per-backend stack packers (registered BackendSpec.pack fns) ------------
+
+def _pack_none(params, block):
+    return params, None, None
+
+
+def _pack_fused(params, block):
+    from repro.kernels.deltalstm_seq import pack_lstm_layer
+    return params, [pack_lstm_layer(p.w_x, p.w_h, block_h=block,
+                                    block_k=block)
+                    for p in params], None
 
 
 register_backend(BackendSpec(
-    name="dense", cell="lstm", pack=lambda params, block: (params, None, None),
-    step=_step_dense, m_init="bias", weight_bits=32,
-    supports_custom_acts=True))
+    name="dense", cell="lstm", pack=_pack_none, step=_step_dense,
+    m_init="bias", weight_bits=32, supports_custom_acts=True))
+register_backend(BackendSpec(
+    name="fused", cell="lstm", pack=_pack_fused, step=_step_fused,
+    m_init="bias", weight_bits=32, supports_custom_acts=False))
+
+
+def lstm_stack_m_init(backend: str) -> str:
+    """M-memory init convention for an LSTM backend."""
+    return get_backend(backend, cell="lstm").m_init
 
 
 def deltalstm_step(params: LstmLayerParams, state: DeltaLstmLayerState,
@@ -128,40 +226,109 @@ def deltalstm_step(params: LstmLayerParams, state: DeltaLstmLayerState,
                    matvec: Callable | None = None,
                    backend: str = "dense",
                    layout=None, packed=None,
-                   interpret: bool | None = None):
+                   interpret: bool | None = None) -> DeltaLstmStepOut:
     """One DeltaLSTM timestep, dispatched through the ``cell="lstm"``
-    registry (``"dense"`` is the only builtin). ``layout`` / ``packed`` /
-    ``interpret`` are forwarded to the spec so a kernel backend
-    registered later sees the full GRU-style step contract."""
+    registry (builtin: ``"dense" | "fused"``). ``layout`` / ``packed`` /
+    ``interpret`` follow the GRU-style step contract."""
     spec = get_backend(backend, cell="lstm")
     return spec.step(params, state, x, theta_x, theta_h, sigmoid=sigmoid,
                      tanh=tanh, matvec=matvec, layout=layout, packed=packed,
                      interpret=interpret)
 
 
-def deltalstm_sequence(params: Sequence[LstmLayerParams], xs: Array,
-                       theta_x, theta_h, layouts=None, packs=None, **kw):
-    """Multi-layer DeltaLSTM over ``xs: [T, B, I]``.
+# ---------------------------------------------------------------------------
+# Multi-layer stacks over sequences (GRU-parity drivers)
+# ---------------------------------------------------------------------------
 
+class DeltaLstmStackState(NamedTuple):
+    layers: tuple  # tuple[DeltaLstmLayerState, ...]
+
+
+def init_deltalstm_stack_state(params: Sequence[LstmLayerParams],
+                               batch_shape=(), dtype=None,
+                               m_init: str = "bias") -> DeltaLstmStackState:
+    return DeltaLstmStackState(
+        layers=tuple(init_deltalstm_state(p, batch_shape, dtype,
+                                          m_init=m_init)
+                     for p in params))
+
+
+def deltalstm_stack_step(params: Sequence[LstmLayerParams],
+                         state: DeltaLstmStackState, x: Array,
+                         theta_x, theta_h, layouts=None, packs=None, **kw):
+    """One timestep through all layers; the input threshold of layers >= 2
+    applies to the previous layer's output stream, as in the GRU stack.
+
+    ``theta_x`` / ``theta_h`` accept a scalar or a static per-layer
+    tuple/list (see :func:`repro.core.thresholds.layer_theta`);
     ``layouts`` / ``packs`` are optional per-layer pre-packed weights for
-    kernel backends (packed once here-abouts, threaded per step — the
-    same hoist-out-of-scan contract as the GRU sequence driver)."""
-    batch_shape = xs.shape[1:-1]
-    init = tuple(init_deltalstm_state(p, batch_shape, xs.dtype) for p in params)
+    kernel backends (see :func:`pack_lstm_stack`).
+    """
+    new_layers = []
+    deltas = []
+    inp = x
+    for li, (p, st) in enumerate(zip(params, state.layers)):
+        out = deltalstm_step(
+            p, st, inp, layer_theta(theta_x, li), layer_theta(theta_h, li),
+            layout=layouts[li] if layouts is not None else None,
+            packed=packs[li] if packs is not None else None, **kw)
+        new_layers.append(out.state)
+        deltas.append((out.delta_x, out.delta_h))
+        inp = out.h
+    return inp, DeltaLstmStackState(tuple(new_layers)), deltas
 
-    def step(states, x):
-        inp = x
-        new_states = []
-        for li, (p, st) in enumerate(zip(params, states)):
-            inp, ns, _ = deltalstm_step(
-                p, st, inp, theta_x, theta_h,
-                layout=layouts[li] if layouts is not None else None,
-                packed=packs[li] if packs is not None else None, **kw)
-            new_states.append(ns)
-        return tuple(new_states), inp
 
-    final, ys = jax.lax.scan(step, init, xs)
-    return ys, final
+def pack_lstm_stack(params: Sequence[LstmLayerParams], backend: str,
+                    block: int = 128):
+    """Pre-pack every layer's weights for a kernel backend, once
+    (the LSTM spelling of :func:`repro.core.deltagru.pack_stack`)."""
+    _, layouts, packs = get_backend(backend, cell="lstm").pack(params, block)
+    return layouts, packs
+
+
+def deltalstm_sequence(params: Sequence[LstmLayerParams], xs: Array,
+                       theta_x, theta_h,
+                       init_state: DeltaLstmStackState | None = None,
+                       collect_sparsity: bool = True,
+                       backend: str = "dense",
+                       layouts=None, packs=None, **kw):
+    """Run a DeltaLSTM stack over ``xs: [T, B, I]`` with ``lax.scan``.
+
+    Full GRU-sequence parity: ``backend=`` selects the registered execution
+    path, kernel layouts are packed ONCE here outside the scan (or passed
+    pre-packed), per-layer thresholds are accepted, and the returned stats
+    dict carries the measured Eq. 4 firing fractions.
+
+    Returns ``(ys [T, B, H], final_state, stats)``.
+    """
+    if init_state is None:
+        init_state = init_deltalstm_stack_state(
+            params, xs.shape[1:-1], xs.dtype,
+            m_init=lstm_stack_m_init(backend))
+    if layouts is None and packs is None:
+        layouts, packs = pack_lstm_stack(params, backend)
+
+    def step(state, x):
+        y, new_state, deltas = deltalstm_stack_step(params, state, x,
+                                                    theta_x, theta_h,
+                                                    backend=backend,
+                                                    layouts=layouts,
+                                                    packs=packs, **kw)
+        if collect_sparsity:
+            stats = tuple((jnp.mean((dx == 0).astype(jnp.float32)),
+                           jnp.mean((dh == 0).astype(jnp.float32)))
+                          for dx, dh in deltas)
+        else:
+            stats = ()
+        return new_state, (y, stats)
+
+    final_state, (ys, stats) = jax.lax.scan(step, init_state, xs)
+    if collect_sparsity:
+        gamma_dx = jnp.mean(jnp.stack([jnp.mean(s[0]) for s in stats]))
+        gamma_dh = jnp.mean(jnp.stack([jnp.mean(s[1]) for s in stats]))
+        return ys, final_state, {"gamma_dx": gamma_dx, "gamma_dh": gamma_dh,
+                                 "per_layer": stats}
+    return ys, final_state, {}
 
 
 def lstm_sequence(params: Sequence[LstmLayerParams], xs: Array, **kw):

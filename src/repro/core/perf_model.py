@@ -102,11 +102,13 @@ def stack_effective_macs(dims: GruDims, gamma_dx, gamma_dh):
     """Eq. 7 numerator: MACs that survive delta skipping.
 
     Pure arithmetic (no branching), so it is traced-safe — the streaming
-    engine accumulates it on-device inside its jitted step.
+    engine accumulates it on-device inside its jitted step. ``dims.gates``
+    scales the weight volume each delta column gates (3 for GRU, 4 for
+    LSTM — the same law either way).
     """
-    i, h, l = dims.input_size, dims.hidden_size, dims.num_layers
-    in_block = 3 * h * i + 3 * h * h * (l - 1)   # gated by delta-x
-    rec_block = 3 * h * h * l                    # gated by delta-h
+    i, h, l, g = dims.input_size, dims.hidden_size, dims.num_layers, dims.gates
+    in_block = g * h * i + g * h * h * (l - 1)   # gated by delta-x
+    rec_block = g * h * h * l                    # gated by delta-h
     return in_block * (1.0 - gamma_dx) + rec_block * (1.0 - gamma_dh)
 
 
@@ -159,10 +161,11 @@ def normalized_batch1_throughput(gamma_eff: float,
 def dram_traffic_bytes_per_timestep(dims: GruDims, gamma_dx: float,
                                     gamma_dh: float,
                                     w_weight_bits: int = 8) -> float:
-    """Weight bytes fetched per timestep after delta column skipping."""
-    i, h, l = dims.input_size, dims.hidden_size, dims.num_layers
-    in_block = 3 * h * i + 3 * h * h * (l - 1)
-    rec_block = 3 * h * h * l
+    """Weight bytes fetched per timestep after delta column skipping
+    (``dims.gates`` rows per fetched column)."""
+    i, h, l, g = dims.input_size, dims.hidden_size, dims.num_layers, dims.gates
+    in_block = g * h * i + g * h * h * (l - 1)
+    rec_block = g * h * h * l
     surviving = in_block * (1.0 - gamma_dx) + rec_block * (1.0 - gamma_dh)
     return surviving * w_weight_bits / 8.0
 

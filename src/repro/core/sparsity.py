@@ -28,29 +28,61 @@ def gamma_from_fired(fired: Array) -> Array:
 
 @dataclass(frozen=True)
 class GruDims:
-    """Dimensions of an L-layer GRU/DeltaGRU stack (uniform hidden size)."""
+    """Dimensions of an L-layer gated-RNN stack (uniform hidden size).
+
+    ``gates`` is the number of stacked gate rows per weight column: 3 for
+    GRU (r, u, c — the default, so every existing positional construction
+    keeps its meaning) and 4 for LSTM (i, f, g, o). The Eq. 4/7/8 machinery
+    is linear in the gate count, so the same dims object prices both cell
+    families; :func:`lstm_dims` is the 4-gate spelling.
+    """
 
     input_size: int   # I
     hidden_size: int  # H
     num_layers: int   # L
+    gates: int = 3    # gate rows per column: GRU 3, LSTM 4
 
     @property
     def params_per_timestep_ops(self) -> int:
         """Total MAC*2 (multiply + add) op count per timestep (Eq. 7 'Op').
 
-        Op = 2 * (3HI + 3H^2(L-1) + 3H^2 L): input weights of layer 1 are
-        (3H x I), input weights of layers 2..L are (3H x H), and every layer
-        has recurrent weights (3H x H) plus the extra 1x (W_hc) fold that the
-        paper counts inside 3H^2L.
+        Op = 2 * (gHI + gH^2(L-1) + gH^2 L) with g = gates: input weights
+        of layer 1 are (gH x I), input weights of layers 2..L are (gH x H),
+        and every layer has recurrent weights (gH x H) plus the extra 1x
+        (W_hc) fold that the paper counts inside 3H^2L for GRU.
         """
-        i, h, l = self.input_size, self.hidden_size, self.num_layers
-        return 2 * (3 * h * i + 3 * h * h * (l - 1) + 3 * h * h * l)
+        i, h, l, g = (self.input_size, self.hidden_size, self.num_layers,
+                      self.gates)
+        return 2 * (g * h * i + g * h * h * (l - 1) + g * h * h * l)
 
     @property
     def n_params(self) -> int:
         """Weight parameter count (biases negligible, per the paper)."""
-        i, h, l = self.input_size, self.hidden_size, self.num_layers
-        return 3 * h * i + 3 * h * h * (l - 1) + 3 * h * h * l
+        i, h, l, g = (self.input_size, self.hidden_size, self.num_layers,
+                      self.gates)
+        return g * h * i + g * h * h * (l - 1) + g * h * h * l
+
+
+# Gate rows per weight column, per cell family — the single source of
+# truth the serving engine and dims helpers derive Eq. 4/7/8 pricing from.
+# A new cell family must add its entry here (unknown cells raise loudly
+# rather than silently pricing as a 3-gate GRU).
+CELL_GATES = {"gru": 3, "lstm": 4}
+
+
+def cell_dims(cell: str, input_size: int, hidden_size: int,
+              num_layers: int) -> GruDims:
+    """Dims of an L-layer delta-RNN stack of the given cell family."""
+    if cell not in CELL_GATES:
+        raise ValueError(f"unknown cell family {cell!r}; known gate "
+                         f"counts: {CELL_GATES}")
+    return GruDims(input_size, hidden_size, num_layers,
+                   gates=CELL_GATES[cell])
+
+
+def lstm_dims(input_size: int, hidden_size: int, num_layers: int) -> GruDims:
+    """Dims of an L-layer (Delta)LSTM stack: the 4-gate weight volume."""
+    return cell_dims("lstm", input_size, hidden_size, num_layers)
 
 
 def effective_sparsity(dims: GruDims, gamma_dx: float, gamma_dh: float) -> float:

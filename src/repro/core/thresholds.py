@@ -27,7 +27,16 @@ def q88(theta_int: float) -> float:
 
 @dataclass(frozen=True)
 class ThresholdPolicy:
-    """Static dual-threshold policy, optionally per-layer."""
+    """Static dual-threshold policy, optionally per-layer.
+
+    ``per_layer_x`` / ``per_layer_h`` override the global thresholds for
+    the layers they cover; layers beyond the override tuples fall back to
+    ``theta_x`` / ``theta_h``. Per-layer thresholds flow through the whole
+    stack: every ``*_stack_step`` / ``*_sequence`` entry point (and the
+    compiled-program ``step``/``sequence``) accepts a per-layer tuple
+    wherever it accepts a scalar theta, and the serving engine threads
+    :meth:`layer_thetas` through its jitted step.
+    """
 
     theta_x: float = 0.0
     theta_h: float = 0.0
@@ -38,6 +47,16 @@ class ThresholdPolicy:
         tx = self.per_layer_x[idx] if idx < len(self.per_layer_x) else self.theta_x
         th = self.per_layer_h[idx] if idx < len(self.per_layer_h) else self.theta_h
         return tx, th
+
+    @property
+    def has_per_layer(self) -> bool:
+        return bool(self.per_layer_x) or bool(self.per_layer_h)
+
+    def layer_thetas(self, num_layers: int) -> tuple[tuple, tuple]:
+        """Materialized per-layer ``(theta_x[...], theta_h[...])`` tuples —
+        what the engine / program entry points consume."""
+        pairs = [self.layer(l) for l in range(num_layers)]
+        return (tuple(tx for tx, _ in pairs), tuple(th for _, th in pairs))
 
     @classmethod
     def global_q88(cls, theta_int: float) -> "ThresholdPolicy":
@@ -51,14 +70,39 @@ class ThresholdPolicy:
 
 def dynamic_threshold(theta, fired_fraction, target_fired_fraction,
                       gain: float = 0.5, theta_min: float = 0.0,
-                      theta_max: float = 1.0):
+                      theta_max: float = 1.0,
+                      theta_floor: float = 1.0 / Q88_SCALE):
     """Closed-loop Θ controller (multiplicative-increase on overshoot).
 
     ``theta <- clip(theta * (fired/target)^gain)``: if the stream fires more
     than the latency budget allows, raise the threshold; if it underfires,
     lower it and recover accuracy. Pure jnp so it can run inside a jitted
     serving step.
+
+    A purely multiplicative update has an absorbing state at Θ = 0 — the
+    :class:`ThresholdPolicy` default, so a stream opened without an explicit
+    threshold could *never* be throttled however hard it overfired. On
+    overshoot (``fired > target``) the controller therefore first lifts Θ to
+    at least ``theta_floor`` (one Q8.8 LSB by default — the smallest
+    representable hardware threshold) before the multiplicative step, giving
+    the ratio term something to act on. Undershoot keeps the pure
+    multiplicative decay, so Θ can still anneal back toward 0.
     """
     ratio = (fired_fraction + 1e-6) / (target_fired_fraction + 1e-6)
+    theta = jnp.where(ratio > 1.0,
+                      jnp.maximum(theta, theta_floor), theta)
     new_theta = theta * ratio ** gain
     return jnp.clip(new_theta, theta_min, theta_max)
+
+
+def layer_theta(theta, idx: int):
+    """Resolve a scalar-or-per-layer threshold for layer ``idx``.
+
+    Stack steps accept either a single (possibly traced) scalar theta or a
+    static per-layer tuple/list (one entry per layer, e.g. from
+    :meth:`ThresholdPolicy.layer_thetas`); anything else passes through
+    unchanged so broadcastable arrays keep working.
+    """
+    if isinstance(theta, (tuple, list)):
+        return theta[idx]
+    return theta

@@ -129,22 +129,37 @@ jax.tree_util.register_pytree_node(
                                    block_k=aux[3]))
 
 
-def pack_gru_layer(w_x: Array, w_h: Array, block_h: int = 128,
-                   block_k: int = 128) -> FusedGruLayout:
-    """Pack ``w_x: [3H, I]`` and ``w_h: [3H, H]`` into the fused layout."""
-    three_h, i_dim = w_x.shape
-    h_dim = w_h.shape[-1]
-    assert three_h == 3 * h_dim and w_h.shape[0] == 3 * h_dim
+def pack_cat_volume(w_x: Array, w_h: Array, gates: int, block_h: int,
+                    block_k: int) -> Array:
+    """The Fig. 6 concatenated-column pack, gate-count-parameterized.
+
+    ``w_x: [gH, I]``, ``w_h: [gH, H]`` -> ``[g, Hp, Ip + Hk]``: gate-major
+    rows, hidden dim padded to ``block_h``, input columns then hidden
+    columns each padded to ``block_k`` (block-aligned x/h seam). This is
+    the ONE copy of the seam/pad arithmetic every cell's packer must agree
+    on — the GRU (g=3) and LSTM (g=4) layouts both call it.
+    """
+    i_dim, h_dim = w_x.shape[-1], w_h.shape[-1]
     hp = h_dim + (-h_dim) % block_h
     ip = i_dim + (-i_dim) % block_k
     hk = h_dim + (-h_dim) % block_k
-    wx3 = jnp.pad(w_x.reshape(3, h_dim, i_dim),
+    wxg = jnp.pad(w_x.reshape(gates, h_dim, i_dim),
                   ((0, 0), (0, hp - h_dim), (0, ip - i_dim)))
-    wh3 = jnp.pad(w_h.reshape(3, h_dim, h_dim),
+    whg = jnp.pad(w_h.reshape(gates, h_dim, h_dim),
                   ((0, 0), (0, hp - h_dim), (0, hk - h_dim)))
-    return FusedGruLayout(w=jnp.concatenate([wx3, wh3], axis=2),
-                          input_size=i_dim, hidden_size=h_dim,
-                          block_h=block_h, block_k=block_k)
+    return jnp.concatenate([wxg, whg], axis=2)
+
+
+def pack_gru_layer(w_x: Array, w_h: Array, block_h: int = 128,
+                   block_k: int = 128) -> FusedGruLayout:
+    """Pack ``w_x: [3H, I]`` and ``w_h: [3H, H]`` into the fused layout."""
+    i_dim, h_dim = w_x.shape[-1], w_h.shape[-1]
+    assert w_x.shape[0] == 3 * h_dim and w_h.shape[0] == 3 * h_dim
+    return FusedGruLayout(
+        w=pack_cat_volume(w_x, w_h, gates=3, block_h=block_h,
+                          block_k=block_k),
+        input_size=i_dim, hidden_size=h_dim,
+        block_h=block_h, block_k=block_k)
 
 
 def _prep_step_operands(lay: _GruBlockGeometry, m_prev: Array, h_prev: Array,

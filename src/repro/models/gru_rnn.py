@@ -53,6 +53,21 @@ def init_gru_model(key: Array, cfg: GruTaskConfig, dtype=jnp.float32):
     }
 
 
+def init_lstm_model(key: Array, cfg: GruTaskConfig, dtype=jnp.float32):
+    """The LSTM twin of :func:`init_gru_model` (the Table VII workload
+    family): a DeltaLSTM stack under the same task config + head shapes.
+    Compile with ``compile_delta_program(model, cell="lstm", ...)`` and
+    serve through ``DeltaStreamEngine`` exactly like the GRU models."""
+    from repro.core.deltalstm import init_lstm_stack
+    k1, k2 = jax.random.split(key)
+    return {
+        "lstm": init_lstm_stack(k1, cfg.input_size, cfg.hidden_size,
+                                cfg.num_layers, dtype),
+        "head": dense_init(k2, cfg.hidden_size, cfg.output_size, dtype),
+        "head_b": jnp.zeros((cfg.output_size,), dtype),
+    }
+
+
 def gru_model_forward(params, cfg: GruTaskConfig, xs: Array, *,
                       use_delta: bool = True, qat: QatPolicy = FP32,
                       collect_sparsity: bool = False,

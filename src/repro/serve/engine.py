@@ -3,31 +3,40 @@
 ``LmEngine`` — batched prefill + decode for any registry arch (jitted steps,
 ring caches with per-slot lengths for continuous batching).
 
-``GruStreamEngine`` — the paper's deployment mode: streaming DeltaGRU
+``DeltaStreamEngine`` — the paper's deployment mode: streaming delta-RNN
 inference with live temporal-sparsity accounting and the Eq. 7 latency
 model, i.e. a software EdgeDRNN. The **primary entry point is a compiled
-program**: build one with :func:`repro.core.program.compile_deltagru` (or
-:func:`repro.quant.export.quantize_gru_model` for the int8 operating
-point) and hand it to ``GruStreamEngine(program, task)`` — backend,
-packed layouts, and the delta-memory state convention all travel inside
-the program, so they cannot be mismatched. The legacy
-``GruStreamEngine(params_dict, task, backend=..., layouts=...)`` spelling
-still works as a thin shim that compiles a program internally.
+program** of ANY registered cell family — build one with
+:func:`repro.core.program.compile_delta_program` (GRU or LSTM;
+:func:`repro.core.program.compile_deltagru` and
+:func:`repro.quant.export.quantize_gru_model` are the GRU spellings) and
+hand it to ``DeltaStreamEngine(program, task)`` — cell, backend, packed
+layouts, and the delta-memory state convention all travel inside the
+program, so they cannot be mismatched. The legacy
+``DeltaStreamEngine(params_dict, task, backend=..., layouts=...)``
+spelling still works as a thin shim that compiles a program internally
+(the dict's ``"gru"`` / ``"lstm"`` key picks the cell), and
+``GruStreamEngine`` remains as an alias of the class.
 
-The engine supports the dual thresholds, the dynamic-threshold controller
-(paper Sec. VI future work), every registered DeltaGRU backend
-(``dense | blocksparse | fused | fused_q8`` — the last streams int8 packed
-weights and runs the paper's fixed-point pipeline), chunked ``step_many``
-streaming, and a batched multi-stream mode (``n_streams`` independent
-streams through one kernel — ONE weight fetch per step serves all
-streams). On top of the slots sits a **session API** for heavy traffic:
-:meth:`~GruStreamEngine.open_stream` claims a free slot and masked-resets
-only that stream's state, :meth:`~GruStreamEngine.close_stream` frees it
-and returns that stream's own firing/latency/byte accounting —
+The engine supports the dual thresholds (including per-layer
+:class:`~repro.core.thresholds.ThresholdPolicy` overrides, threaded into
+the jitted step), the dynamic-threshold controller (paper Sec. VI future
+work), every backend registered for the program's cell
+(GRU: ``dense | blocksparse | fused | fused_q8`` — the last streams int8
+packed weights and runs the paper's fixed-point pipeline; LSTM:
+``dense | fused``), chunked ``step_many`` streaming, and a batched
+multi-stream mode (``n_streams`` independent streams through one kernel —
+ONE weight fetch per step serves all streams). On top of the slots sits a
+**session API** for heavy traffic:
+:meth:`~DeltaStreamEngine.open_stream` claims a free slot and
+masked-resets only that stream's state,
+:meth:`~DeltaStreamEngine.close_stream` frees it and returns that
+stream's own firing/latency/byte accounting —
 ``serve.scheduler.GruStreamBatcher`` drives millions of short-lived
 streams through these slots. The Eq. 7 model carries a bytes-per-op term:
 latency and weight-traffic estimates price the streamed weight width of
-the program's backend.
+the program's backend and the cell's gate count (3 rows per fetched
+column for GRU, 4 for LSTM).
 
 The hot loop is zero-sync: firing statistics (per stream), the Eq. 7
 latency estimate, and the dynamic-Θ controller all live *inside* the
@@ -52,8 +61,9 @@ from repro.core.perf_model import (EDGEDRNN, AcceleratorSpec,
                                    dram_traffic_bytes_per_timestep,
                                    estimate_stack, spec_for_backend,
                                    stack_latency_s)
-from repro.core.program import DeltaGruProgram, compile_deltagru
-from repro.core.sparsity import GruDims
+from repro.core.program import (DeltaProgram, compile_delta_program,
+                                infer_cell)
+from repro.core.sparsity import cell_dims
 from repro.core.thresholds import ThresholdPolicy, dynamic_threshold
 from repro.models.gru_rnn import GruTaskConfig
 from repro.models.lm import init_lm_caches, lm_decode, lm_prefill
@@ -116,17 +126,22 @@ class StreamStats:
         return 1.0 - self.fired_h / max(self.steps, 1)
 
 
-class GruStreamEngine:
-    """Streaming DeltaGRU inference (the EdgeDRNN deployment mode).
+class DeltaStreamEngine:
+    """Streaming delta-RNN inference (the EdgeDRNN deployment mode).
 
     Args:
-      program: a compiled :class:`~repro.core.program.DeltaGruProgram`
-        (must carry a head, i.e. compiled from an ``init_gru_model``
-        params dict) — the primary spelling. A raw params dict is also
-        accepted and compiled internally with the legacy ``backend=`` /
-        ``layouts=`` kwargs (default backend: ``"fused"``).
+      program: a compiled :class:`~repro.core.program.DeltaProgram` of any
+        cell family (must carry a head, i.e. compiled from an
+        ``init_gru_model`` / ``init_lstm_model`` params dict) — the
+        primary spelling. A raw params dict is also accepted and compiled
+        internally with the legacy ``backend=`` / ``layouts=`` kwargs
+        (default backend: ``"fused"``; the dict's ``"gru"`` / ``"lstm"``
+        key picks the cell).
       task: network config (sizes + default thresholds).
-      thresholds: static dual-threshold policy override.
+      thresholds: static dual-threshold policy override. Per-layer
+        ``per_layer_x`` / ``per_layer_h`` overrides are threaded into the
+        jitted step (mutually exclusive with the dynamic controller,
+        which adjusts ONE scalar Θ_h).
       accel: accelerator spec for the Eq. 7 latency model.
       dynamic_target_fired: if set, the closed-loop Θ_h controller runs
         *inside* the jitted step, tracking this firing-fraction target.
@@ -142,9 +157,11 @@ class GruStreamEngine:
     The Eq. 7 latency model prices the *streamed weight width* of the
     program's backend (:func:`repro.core.perf_model.spec_for_backend`):
     the fp32 backends pay 4 bytes/weight over the spec's DRAM bus while
-    ``fused_q8`` streams the paper's INT8 — so :attr:`accel` (and every
-    latency/bytes figure in :meth:`report`) reflects what the backend
-    actually fetches, not the training-time fiction.
+    ``fused_q8`` streams the paper's INT8 — and the cell's gate count
+    (``dims.gates``: 3 for GRU, 4 for LSTM) scales the weight volume each
+    fired delta column fetches, so :attr:`accel` (and every latency/bytes
+    figure in :meth:`report`) reflects what the backend actually fetches,
+    not the training-time fiction.
     """
 
     _PER_STREAM_KEYS = ("fired_x", "fired_h", "lat_s", "w_bytes")
@@ -156,7 +173,7 @@ class GruStreamEngine:
                  backend: str | None = None,
                  layouts=None,
                  n_streams: int = 1):
-        if isinstance(program, DeltaGruProgram):
+        if isinstance(program, DeltaProgram):
             if backend is not None and backend != program.backend:
                 raise ValueError(
                     f"backend={backend!r} conflicts with the compiled "
@@ -166,24 +183,45 @@ class GruStreamEngine:
                                  "program — it already holds its packs")
         else:
             # legacy shim: params dict + knob kwargs -> compile here
-            program = compile_deltagru(program, backend=backend or "fused",
-                                       layouts=layouts)
+            program = compile_delta_program(program,
+                                            backend=backend or "fused",
+                                            cell=infer_cell(program),
+                                            layouts=layouts)
         if program.head is None:
             raise ValueError(
-                "GruStreamEngine needs a program with a classifier head; "
-                "compile from an init_gru_model params dict")
+                "DeltaStreamEngine needs a program with a classifier head; "
+                "compile from an init_gru_model / init_lstm_model params "
+                "dict")
         self.program = program
-        self.params = list(program.layers)   # legacy attr (the gru stack)
+        self.params = list(program.layers)   # legacy attr (the cell stack)
         self.head = (program.head, program.head_b)
         self.task = task
-        self.accel = spec_for_backend(accel, program.backend)
+        self.cell = program.cell
+        self.accel = spec_for_backend(accel, program.backend,
+                                      cell=program.cell)
         self.backend = program.backend
         self.n_streams = n_streams
         self.thresholds = thresholds or ThresholdPolicy(task.theta_x,
                                                         task.theta_h)
         self.theta_x = self.thresholds.theta_x
         self.dynamic_target = dynamic_target_fired
-        self.dims = GruDims(task.input_size, task.hidden_size, task.num_layers)
+        self.dims = cell_dims(program.cell, task.input_size,
+                              task.hidden_size, task.num_layers)
+        # per-layer thresholds ride as static tuples inside the jitted
+        # step; the dynamic controller steers ONE scalar theta_h, so the
+        # two are mutually exclusive rather than silently combined.
+        self._per_layer = self.thresholds.has_per_layer
+        if self._per_layer:
+            if dynamic_target_fired is not None:
+                raise ValueError(
+                    "per-layer thresholds and the dynamic-theta controller "
+                    "are mutually exclusive: the controller adjusts one "
+                    "scalar theta_h, which would silently override the "
+                    "per-layer policy")
+            self._theta_x_layers, self._theta_h_layers = \
+                self.thresholds.layer_thetas(task.num_layers)
+        else:
+            self._theta_x_layers = self._theta_h_layers = None
 
         def _one_step(state, carry, x):
             """One timestep, stats + controller on-device (no host sync).
@@ -193,8 +231,11 @@ class GruStreamEngine:
             firing fractions, so stream means reproduce the old aggregate
             accounting exactly.
             """
-            y, new_state, deltas = self.program.step(
-                state, x, self.theta_x, carry["theta_h"])
+            tx = (self._theta_x_layers if self._per_layer
+                  else self.theta_x)
+            th = (self._theta_h_layers if self._per_layer
+                  else carry["theta_h"])
+            y, new_state, deltas = self.program.step(state, x, tx, th)
             out = y @ self.head[0] + self.head[1]
             fx = jnp.mean(jnp.stack(
                 [jnp.mean((dx != 0).astype(jnp.float32), axis=-1)
@@ -275,8 +316,26 @@ class GruStreamEngine:
         ``x: [I]`` (single stream) or ``[n_streams, I]``; returns ``[O]`` /
         ``[n_streams, O]``. The returned array is a device array — reading
         it (or :attr:`stats`) is what synchronizes, not the call itself.
+
+        The shape is validated like :meth:`step_many`'s: an earlier
+        revision did ``x.reshape(self.n_streams, -1)``, which silently
+        scrambled frames across streams whenever a wrong-but-divisible
+        shape (e.g. a single ``[I]`` vector on a multi-stream engine) was
+        handed in.
         """
-        x = jnp.asarray(x, jnp.float32).reshape(self.n_streams, -1)
+        x = jnp.asarray(x, jnp.float32)
+        i_dim = self.dims.input_size
+        if x.ndim == 1 and self.n_streams == 1:
+            x = x[None]
+        if x.shape != (self.n_streams, i_dim):
+            want = (f"[{i_dim}]" if self.n_streams == 1
+                    else f"[{self.n_streams}, {i_dim}]")
+            raise ValueError(
+                f"engine has n_streams={self.n_streams}; step needs one "
+                f"frame per stream slot, shape {want}"
+                f"{f' or [1, {i_dim}]' if self.n_streams == 1 else ''}, "
+                f"got {tuple(x.shape)} — reshaping would silently "
+                "cross-contaminate stream slots")
         out, self.state, self._carry = self._step(self.state, self._carry, x)
         self._n_steps += 1
         return out[0] if self.n_streams == 1 else out
@@ -415,7 +474,7 @@ class GruStreamEngine:
     def report(self) -> dict:
         s = self.stats
         est = estimate_stack(self.dims, s.gamma_dx, s.gamma_dh, self.accel)
-        return {
+        rep = {
             "steps": s.steps,
             "gamma_dx": s.gamma_dx,
             "gamma_dh": s.gamma_dh,
@@ -426,5 +485,18 @@ class GruStreamEngine:
             "theta_x": self.theta_x,
             "theta_h": self.theta_h,
             "backend": self.backend,
+            "cell": self.cell,
             "n_streams": self.n_streams,
         }
+        if self._per_layer:
+            # the scalar fields would report the (unapplied) global policy
+            # values — under a per-layer policy the tuples are the truth
+            rep["theta_x"] = rep["theta_h"] = None
+            rep["theta_x_per_layer"] = self._theta_x_layers
+            rep["theta_h_per_layer"] = self._theta_h_layers
+        return rep
+
+
+# The class served only GRU programs when it was born; the name survives
+# as an alias now that it streams any compiled delta-RNN cell.
+GruStreamEngine = DeltaStreamEngine

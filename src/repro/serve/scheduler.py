@@ -8,15 +8,16 @@ stepping all active slots each tick. Finished slots (EOS or budget) are
 harvested and recycled. Per-slot ragged positions are native to the ring
 KVCache (see models.attention.KVCache).
 
-``GruStreamBatcher`` — the same admission/harvest loop over
-``GruStreamEngine`` stream sessions (the EdgeDRNN heavy-traffic mode):
-queued streaming requests are admitted into free ``n_streams`` slots via
-``open_stream()`` (per-slot masked reset), every tick feeds one frame per
-active stream through ONE batched engine step (one weight fetch serves all
-streams), and exhausted streams are harvested via ``close_stream()`` —
-which also returns that stream's own firing/latency accounting. Millions
-of short-lived streams recycle through a fixed set of slots without ever
-rebuilding the engine.
+``GruStreamBatcher`` (alias ``DeltaStreamBatcher``) — the same
+admission/harvest loop over ``DeltaStreamEngine`` stream sessions (the
+EdgeDRNN heavy-traffic mode), for any compiled cell family (GRU or LSTM
+programs alike): queued streaming requests are admitted into free
+``n_streams`` slots via ``open_stream()`` (per-slot masked reset), every
+tick feeds one frame per active stream through ONE batched engine step
+(one weight fetch serves all streams), and exhausted streams are
+harvested via ``close_stream()`` — which also returns that stream's own
+firing/latency accounting. Millions of short-lived streams recycle
+through a fixed set of slots without ever rebuilding the engine.
 """
 from __future__ import annotations
 
@@ -28,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.engine import GruStreamEngine, LmEngine
+from repro.serve.engine import DeltaStreamEngine, GruStreamEngine, LmEngine
 
 
 @dataclass
@@ -152,7 +153,8 @@ class StreamRequest:
 
 
 class GruStreamBatcher:
-    """Admission/harvest scheduler over ``GruStreamEngine`` sessions.
+    """Admission/harvest scheduler over ``DeltaStreamEngine`` sessions
+    (any cell family — the engine's program carries the cell).
 
     Mirrors :class:`ContinuousBatcher`: ``submit()`` queues a frame
     sequence, each :meth:`step` tick admits queued requests into free
@@ -165,7 +167,7 @@ class GruStreamBatcher:
     delta — the silent regime, virtually free under Eq. 7).
     """
 
-    def __init__(self, engine: GruStreamEngine):
+    def __init__(self, engine: DeltaStreamEngine):
         self.engine = engine
         self.queue: collections.deque[StreamRequest] = collections.deque()
         self.slots: list[StreamRequest | None] = [None] * engine.n_streams
@@ -233,3 +235,8 @@ class GruStreamBatcher:
             if not self.queue and not any(r is not None for r in self.slots):
                 break
         return done
+
+
+# Cell-agnostic alias (the batcher has always been engine-shaped, and the
+# engine now serves any compiled delta-RNN cell).
+DeltaStreamBatcher = GruStreamBatcher

@@ -105,7 +105,7 @@ class TestDeltaLstm:
         params = init_lstm_stack(k, 10, 20, 2)
         xs = jax.random.normal(jax.random.fold_in(k, 1), (12, 2, 10))
         ys_ref = lstm_sequence(params, xs)
-        ys, _ = deltalstm_sequence(params, xs, 0.0, 0.0)
+        ys, _, _ = deltalstm_sequence(params, xs, 0.0, 0.0)
         np.testing.assert_allclose(ys, ys_ref, atol=2e-5)
 
 

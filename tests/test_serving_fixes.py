@@ -1,0 +1,273 @@
+"""Regression tests for the PR 3 serving-layer latent bugs.
+
+Three fixes pinned here, each with the failure mode it guards against:
+
+* ``dynamic_threshold`` was purely multiplicative, so a stream opened at
+  the ``ThresholdPolicy`` default Θ_h = 0 could NEVER be throttled — the
+  controller's own output stayed 0 whatever the firing rate;
+* ``DeltaStreamEngine.step`` did ``x.reshape(n_streams, -1)``, which
+  silently scrambled frames across stream slots for any
+  wrong-but-divisible input shape (e.g. a single ``[I]`` vector on a
+  multi-stream engine);
+* ``ThresholdPolicy.per_layer_x/_h`` + ``.layer(idx)`` were dead code —
+  nothing threaded per-layer thresholds into the stack steps, programs,
+  or the engine.
+
+Plus the batcher slot-recycling accounting-isolation property: a stream
+admitted into a just-freed slot must not inherit its predecessor's
+``fired_*`` / ``lat_s`` / ``w_bytes``, including through the
+shared-``host_carry`` multi-harvest path of ``close_stream``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.deltagru import deltagru_sequence, init_gru_stack
+from repro.core.program import compile_deltagru
+from repro.core.thresholds import (ThresholdPolicy, dynamic_threshold,
+                                   layer_theta)
+from repro.models.gru_rnn import GruTaskConfig, init_gru_model
+from repro.serve.engine import DeltaStreamEngine, GruStreamEngine
+from repro.serve.scheduler import GruStreamBatcher
+
+
+class TestDynamicThresholdEscapesZero:
+    def test_controller_leaves_zero_on_overshoot(self):
+        """From the ThresholdPolicy default Θ=0, sustained overfiring must
+        drive Θ up (the old multiplicative-only update returned 0*r^g = 0
+        forever)."""
+        theta = jnp.float32(0.0)
+        for _ in range(5):
+            theta = dynamic_threshold(theta, fired_fraction=0.9,
+                                      target_fired_fraction=0.1)
+        assert float(theta) > 1.0 / 256.0   # escaped, beyond one Q8.8 LSB
+
+    def test_zero_stays_zero_on_undershoot(self):
+        """Underfiring at Θ=0 must NOT lift the threshold — the floor only
+        engages when the controller wants to throttle."""
+        theta = dynamic_threshold(jnp.float32(0.0), fired_fraction=0.01,
+                                  target_fired_fraction=0.5)
+        assert float(theta) == 0.0
+
+    def test_multiplicative_behaviour_untouched_above_floor(self):
+        """Away from the absorbing state the update is the original
+        multiplicative law in both directions."""
+        up = dynamic_threshold(0.1, 0.4, 0.1, gain=0.5)
+        assert float(up) == pytest.approx(0.1 * (0.400001 / 0.100001) ** 0.5,
+                                          rel=1e-4)
+        down = dynamic_threshold(0.1, 0.05, 0.2, gain=0.5)
+        assert 0.0 < float(down) < 0.1
+
+    def test_engine_stream_started_at_zero_gets_throttled(self):
+        """End-to-end: an engine opened with the default Θ_h=0 policy and a
+        low firing target must raise Θ_h above 0 under lively input."""
+        task = GruTaskConfig(14, 32, 1, 1, task="regression",
+                             theta_x=0.0, theta_h=0.0)
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        eng = DeltaStreamEngine(params, task, dynamic_target_fired=0.1)
+        assert eng.theta_h == 0.0
+        eng.step_many(np.stack(
+            [np.sin(np.arange(14) * 0.5 + s * 0.3) * 2.0
+             for s in range(60)]).astype(np.float32))
+        assert eng.theta_h > 0.0
+
+
+class TestStepShapeValidation:
+    def _engine(self, n_streams):
+        task = GruTaskConfig(8, 16, 1, 2, task="regression")
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        return DeltaStreamEngine(params, task, n_streams=n_streams)
+
+    def test_vector_on_multi_stream_engine_raises(self):
+        """The historical trap: an [I] vector on n_streams=2 reshaped into
+        [2, I/2] and cross-contaminated both slots."""
+        eng = self._engine(2)
+        with pytest.raises(ValueError, match=r"\[2, 8\]"):
+            eng.step(np.zeros(8, np.float32))
+
+    def test_wrong_but_divisible_shape_raises(self):
+        eng = self._engine(2)
+        with pytest.raises(ValueError, match="n_streams"):
+            eng.step(np.zeros((1, 16), np.float32))   # 2*8 elements, wrong
+        with pytest.raises(ValueError, match="n_streams"):
+            eng.step(np.zeros(16, np.float32))        # flat, divisible
+
+    def test_wrong_feature_dim_raises(self):
+        eng = self._engine(1)
+        with pytest.raises(ValueError, match="n_streams"):
+            eng.step(np.zeros(4, np.float32))
+
+    def test_valid_shapes_still_accepted(self):
+        e1 = self._engine(1)
+        assert np.asarray(e1.step(np.zeros(8, np.float32))).shape == (2,)
+        assert np.asarray(e1.step(np.zeros((1, 8), np.float32))).shape == (2,)
+        e2 = self._engine(2)
+        out = e2.step(np.zeros((2, 8), np.float32))
+        assert np.asarray(out).shape == (2, 2)
+
+    def test_multi_stream_isolation_with_valid_input(self):
+        """With the validated shape, streams stay independent (the property
+        the reshape used to break silently)."""
+        task = GruTaskConfig(8, 16, 1, 2, task="regression",
+                             theta_x=0.05, theta_h=0.05)
+        params = init_gru_model(jax.random.PRNGKey(1), task)
+        rng = np.random.default_rng(0)
+        xs = rng.normal(size=(6, 2, 8)).astype(np.float32)
+        eng = DeltaStreamEngine(params, task, n_streams=2)
+        outs = np.stack([np.asarray(eng.step(x)) for x in xs])
+        solo = DeltaStreamEngine(params, task)
+        want = np.stack([np.asarray(solo.step(x)) for x in xs[:, 0]])
+        np.testing.assert_allclose(outs[:, 0], want, atol=1e-6)
+
+
+class TestPerLayerThresholds:
+    def _stack_and_xs(self, key=0, i=10, h=24, layers=2, t=20):
+        params = init_gru_stack(jax.random.PRNGKey(key), i, h, layers)
+        xs = jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(key), 1), (t, 2, i)) * 0.5
+        return params, xs
+
+    def test_layer_theta_helper(self):
+        assert layer_theta(0.1, 3) == 0.1
+        assert layer_theta((0.1, 0.2), 1) == 0.2
+        pol = ThresholdPolicy(theta_x=0.1, theta_h=0.2,
+                              per_layer_h=(0.0, 0.5))
+        assert pol.layer(0) == (0.1, 0.0)
+        assert pol.layer(1) == (0.1, 0.5)
+        assert pol.layer(2) == (0.1, 0.2)      # beyond overrides: global
+        assert pol.layer_thetas(2) == ((0.1, 0.1), (0.0, 0.5))
+        assert pol.has_per_layer and not ThresholdPolicy(0.1).has_per_layer
+
+    def test_sequence_per_layer_gamma_split(self):
+        """Distinct per-layer thresholds must show up as a per-layer gamma
+        split in the sequence stats (the dead-code regression: they used
+        to be silently ignored, every layer running the global theta)."""
+        params, xs = self._stack_and_xs()
+        _, _, st = deltagru_sequence(params, xs, (0.0, 0.0), (0.0, 0.6))
+        (gx0, gh0), (gx1, gh1) = [(float(jnp.mean(a)), float(jnp.mean(b)))
+                                  for a, b in st["per_layer"]]
+        assert gh0 < 0.1          # layer 0 at theta_h=0: dense-ish firing
+        assert gh1 > 0.9          # layer 1 throttled hard
+        # layer 0 behaves exactly as under the scalar spelling of ITS theta
+        _, _, st_scalar = deltagru_sequence(params, xs, 0.0, 0.0)
+        g0_scalar = [(float(jnp.mean(a)), float(jnp.mean(b)))
+                     for a, b in st_scalar["per_layer"]][0]
+        assert (gx0, gh0) == pytest.approx(g0_scalar, abs=1e-6)
+
+    def test_program_step_and_sequence_accept_per_layer(self):
+        params, xs = self._stack_and_xs(key=3)
+        prog = compile_deltagru(params, backend="fused")
+        tx, th = (0.0, 0.05), (0.0, 0.4)
+        want, _, st_seq = prog.sequence(xs, tx, th)
+        state = prog.init_state((2,))
+        outs = []
+        for x in xs:
+            y, state, _ = prog.step(state, x, tx, th)
+            outs.append(y)
+        np.testing.assert_allclose(np.asarray(jnp.stack(outs)),
+                                   np.asarray(want), atol=1e-6)
+        gh = [float(jnp.mean(b)) for _, b in st_seq["per_layer"]]
+        assert gh[1] > gh[0]
+
+    def test_engine_threads_policy_per_layer(self):
+        """A per-layer ThresholdPolicy through the engine reproduces the
+        program-level per-layer run exactly (outputs AND accounting)."""
+        task = GruTaskConfig(10, 24, 2, 3, task="regression")
+        model = init_gru_model(jax.random.PRNGKey(2), task)
+        prog = compile_deltagru(model, backend="fused")
+        pol = ThresholdPolicy(theta_x=0.02, theta_h=0.0,
+                              per_layer_h=(0.0, 0.4))
+        eng = DeltaStreamEngine(prog, task, thresholds=pol)
+        rng = np.random.default_rng(0)
+        xs = np.cumsum(rng.normal(size=(25, 10)) * 0.3,
+                       axis=0).astype(np.float32)
+        outs = np.asarray(eng.step_many(xs))
+        ys, _, st = prog.sequence(jnp.asarray(xs)[:, None, :],
+                                  *pol.layer_thetas(task.num_layers))
+        np.testing.assert_allclose(outs, np.asarray(prog.apply_head(ys))[:, 0],
+                                   atol=1e-6)
+        rep = eng.report()
+        assert rep["theta_h_per_layer"] == (0.0, 0.4)
+        assert rep["gamma_dh"] == pytest.approx(float(st["gamma_dh"]),
+                                                abs=1e-5)
+        # and the split is real: distinct from running the global theta_h=0
+        _, _, st_flat = prog.sequence(jnp.asarray(xs)[:, None, :], 0.02, 0.0)
+        assert abs(float(st["gamma_dh"]) - float(st_flat["gamma_dh"])) > 0.1
+
+    def test_per_layer_with_dynamic_controller_rejected(self):
+        task = GruTaskConfig(10, 24, 2, 3, task="regression")
+        model = init_gru_model(jax.random.PRNGKey(2), task)
+        pol = ThresholdPolicy(per_layer_h=(0.0, 0.4))
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            DeltaStreamEngine(model, task, thresholds=pol,
+                              dynamic_target_fired=0.2)
+
+
+class TestBatcherSlotRecyclingIsolation:
+    def test_recycled_slot_does_not_inherit_accounting(self):
+        """Two equal-length streams close in the SAME tick (exercising the
+        shared-host_carry multi-harvest path of close_stream); the next
+        request admitted into a recycled slot on the adjacent tick must
+        report only its own fired_*/latency/bytes accounting."""
+        task = GruTaskConfig(8, 16, 2, 3, task="regression",
+                             theta_x=0.05, theta_h=0.05)
+        params = init_gru_model(jax.random.PRNGKey(2), task)
+        eng = GruStreamEngine(params, task, n_streams=2)
+        cb = GruStreamBatcher(eng)
+        rng = np.random.default_rng(0)
+        # loud first wave (large deltas -> heavy fired_*/bytes accounting)
+        wave1 = [(3.0 * rng.normal(size=(6, 8))).astype(np.float32)
+                 for _ in range(2)]
+        # quiet successor: slowly-varying, mostly silent under theta
+        quiet = np.cumsum(rng.normal(size=(6, 8)) * 0.02,
+                          axis=0).astype(np.float32)
+        uids = [cb.submit(s) for s in wave1] + [cb.submit(quiet)]
+        done = cb.run_until_drained()
+        by_uid = {r.uid: r for r in done}
+        # both wave-1 streams closed on the same tick -> one shared carry
+        assert by_uid[uids[0]].stats["steps"] == 6
+        assert by_uid[uids[1]].stats["steps"] == 6
+        got = by_uid[uids[2]].stats
+        solo = GruStreamEngine(params, task)
+        solo.step_many(quiet)
+        want = solo.report()
+        assert got["steps"] == 6
+        assert got["gamma_dh"] == pytest.approx(want["gamma_dh"], abs=1e-5)
+        assert got["gamma_dx"] == pytest.approx(want["gamma_dx"], abs=1e-5)
+        # float32 device accumulators: loose rel tolerance rides out XLA
+        # CPU reduction-order jitter; inheritance from the loud
+        # predecessor would be an order-of-magnitude blowup, not 1e-3
+        assert got["w_bytes"] == pytest.approx(
+            want["mean_weight_bytes_per_step"] * 6, rel=1e-3)
+        assert got["est_latency_s"] == pytest.approx(
+            want["mean_est_latency_us"] * 6 / 1e6, rel=1e-3)
+        # the predecessor was LOUD: inheriting even one of its steps would
+        # blow these figures far past the solo run's
+        loud = by_uid[uids[0]].stats
+        assert loud["w_bytes"] > 3 * got["w_bytes"]
+
+    def test_same_slot_reuse_across_adjacent_ticks(self):
+        """Sequential single-slot traffic: each request's accounting stands
+        alone even though every stream reuses slot 0."""
+        task = GruTaskConfig(8, 16, 1, 2, task="regression",
+                             theta_x=0.05, theta_h=0.05)
+        params = init_gru_model(jax.random.PRNGKey(3), task)
+        eng = GruStreamEngine(params, task, n_streams=1)
+        cb = GruStreamBatcher(eng)
+        rng = np.random.default_rng(1)
+        seqs = [(s * rng.normal(size=(4, 8))).astype(np.float32)
+                for s in (2.0, 0.01, 2.0)]
+        uids = [cb.submit(s) for s in seqs]
+        done = cb.run_until_drained()
+        by_uid = {r.uid: r for r in done}
+        for uid, s in zip(uids, seqs):
+            solo = GruStreamEngine(params, task)
+            solo.step_many(s)
+            want = solo.report()
+            st = by_uid[uid].stats
+            assert st["steps"] == 4
+            assert st["gamma_dh"] == pytest.approx(want["gamma_dh"],
+                                                   abs=1e-5)
+            assert st["mean_weight_bytes_per_step"] == pytest.approx(
+                want["mean_weight_bytes_per_step"], rel=1e-4)
