@@ -1,12 +1,12 @@
 # EdgeDRNN reproduction — tier-1 + perf-gate entry points.
 export PYTHONPATH := src
 
-.PHONY: test bench bench-quick bench-lstm-quick check-regression ci
+.PHONY: test bench bench-quick bench-lstm-quick bench-lstm-q8-quick check-regression ci
 
 test:            ## tier-1 suite
 	python -m pytest -x -q
 
-ci: test bench-quick bench-lstm-quick check-regression  ## full gate: tier-1 + quick benches (GRU + LSTM parity) + perf regression
+ci: test bench-quick bench-lstm-quick bench-lstm-q8-quick check-regression  ## full gate: tier-1 + quick benches (GRU + LSTM parity + LSTM q8 parity/bytes) + perf regression
 
 bench:           ## full paper tables/figures + kernel benches (rewrites BENCH_*.json)
 	python -m benchmarks.run
@@ -16,6 +16,9 @@ bench-quick:     ## reduced CI pass (no baseline writes)
 
 bench-lstm-quick:  ## DeltaLSTM parity/bench quick path (no baseline writes)
 	python -m benchmarks.kernel_bench --lstm --quick
+
+bench-lstm-q8-quick:  ## quantized DeltaLSTM parity/bytes quick path (hard fused_q8-vs-dense + kernel-oracle assertions)
+	python -m benchmarks.kernel_bench --lstm-q8 --quick
 
 check-regression:  ## gate fresh fused-path wall time / bytes model vs committed baselines
 	python -m benchmarks.check_regression

@@ -2,9 +2,9 @@
 
 Re-runs the sequence-level backend shootouts at the *same configuration*
 the committed ``BENCH_deltagru_seq.json`` / ``BENCH_deltagru_q8.json`` /
-``BENCH_deltalstm_seq.json`` records were produced with (dims are read
-from the baseline's ``config`` block, so the gate always compares apples
-to apples), then:
+``BENCH_deltalstm_seq.json`` / ``BENCH_deltalstm_q8.json`` records were
+produced with (dims are read from the baseline's ``config`` block, so the
+gate always compares apples to apples), then:
 
 * fails on a > ``MAX_WALL_RATIO`` (1.5x) wall-time regression of the fused
   paths (``fused``, ``fused_q8``) at any measured theta — these are the
@@ -15,6 +15,14 @@ to apples), then:
   input can flip a near-boundary fired block across machine classes); any
   larger drift is a real layout / compaction / packing change that must be
   intentional (regenerate the baseline in the same PR);
+* fails if the quantized LSTM record's matched-firing invariant breaks:
+  ``fused_q8`` must stream EXACTLY 0.25x the fp32 fused bytes over the
+  same fired-column set (1 byte/weight vs 4) — checked on the fresh
+  record's matched-count fields, so it holds on every machine class;
+* the LSTM re-runs themselves hard-fail on parity drift (fused vs dense
+  in fp32; fused_q8 Pallas kernel vs its jnp oracle, bit-exact, plus the
+  quantization-budget rail vs the fp32 dense reference) — those
+  assertions are folded into the failure list;
 * wall-time comparison is only meaningful on the machine class that
   produced the baseline: when ``device``/``machine`` metadata disagree the
   gate downgrades wall checks to a warning and keeps the bytes gate.
@@ -95,6 +103,35 @@ def _gate_bytes(name, base, fresh, failures, strict=True):
                   f"bytes/step={row['bytes_per_step']:.0f}")
 
 
+def _gate_q8_matched_bytes(name, fresh, failures):
+    """EXACT invariant of the quantized bytes model: at matched firing
+    counts, ``fused_q8`` streams precisely 0.25x the fp32 fused bytes (1
+    byte/weight vs 4 over the identical fired-column set). Evaluated on
+    the fresh record's matched-count fields — stored UNROUNDED, because
+    scaling a float sum by a power of two is exact while independently
+    rounded copies need not satisfy the ratio — so float threshold
+    crossings cannot blur it; any deviation is a real weight-width or
+    row-extent bug in the bytes model."""
+    for row in fresh["rows"]:
+        if row["backend"] != "fused_q8":
+            continue
+        q8m = row.get("q8_bytes_matched_fp32")
+        fm = row.get("fused_bytes_matched_fp32")
+        if q8m is None or fm is None:
+            failures.append(
+                f"Q8 MATCHED BYTES {name} theta={row['theta']}: record is "
+                "missing the matched-firing fields")
+            continue
+        if q8m != 0.25 * fm:
+            failures.append(
+                f"Q8 MATCHED BYTES {name} theta={row['theta']}: fused_q8 "
+                f"streams {q8m} B/step vs fused {fm} at matched firing "
+                f"(expected exactly 0.25x = {0.25 * fm})")
+        else:
+            print(f"ok   {name} theta={row['theta']}: fused_q8 bytes = "
+                  f"0.25x fused at matched firing ({q8m:.0f} B/step)")
+
+
 def main() -> int:
     from benchmarks import kernel_bench as kb
 
@@ -148,6 +185,7 @@ def main() -> int:
                 "wall-time gate skipped, bytes model enforced at 2% "
                 "tolerance")
 
+    fresh_lstm = None
     if base_lstm is not None:
         # bench_lstm_record itself hard-fails on fused-vs-dense parity
         # drift, so a completed fresh record already certifies parity;
@@ -169,6 +207,38 @@ def main() -> int:
                     f"{base_lstm['config'].get('device')}/"
                     f"{base_lstm['config'].get('machine')}; wall-time gate "
                     "skipped on this machine")
+
+    base_lstm_q8 = _load(kb.BENCH_LSTM_Q8_JSON)
+    if base_lstm_q8 is not None:
+        # bench_lstm_q8_record hard-fails on (a) fused_q8 Pallas kernel
+        # vs jnp-oracle bit drift and (b) quantization drift beyond the
+        # Q8.8/LUT budget; a completed fresh record certifies both.
+        times = None
+        if (fresh_lstm is not None
+                and cfg_dims(base_lstm_q8) == cfg_dims(base_lstm)):
+            times = kb._times_from_record(fresh_lstm, kb.LSTM_BACKENDS)
+        try:
+            _, fresh_lstm_q8 = kb.bench_lstm_q8_record(
+                **cfg_dims(base_lstm_q8),
+                thetas=tuple(sorted({r["theta"]
+                                     for r in base_lstm_q8["rows"]})),
+                times_by_theta=times)
+        except AssertionError as e:
+            failures.append(f"LSTM Q8 PARITY {e}")
+        else:
+            same_machine = _comparable(base_lstm_q8["config"],
+                                       fresh_lstm_q8["config"])
+            _gate_bytes("lstm_q8", base_lstm_q8, fresh_lstm_q8, failures,
+                        strict=same_machine)
+            _gate_q8_matched_bytes("lstm_q8", fresh_lstm_q8, failures)
+            if same_machine:
+                _gate_walltime("lstm_q8", base_lstm_q8, fresh_lstm_q8,
+                               failures)
+            else:
+                warnings.append(
+                    "lstm_q8 baseline was recorded on a different machine "
+                    "class; wall-time gate skipped, bytes model enforced "
+                    "at 2% tolerance")
 
     for w in warnings:
         print(f"warn {w}")

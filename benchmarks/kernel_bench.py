@@ -24,12 +24,21 @@ those rows into arithmetic-intensity / roofline-bound lines, and
 ``benchmarks/check_regression.py`` gates fresh runs against the committed
 records.
 
-Part 4 (``run_lstm``) is the cell-parity trajectory: the DeltaLSTM
-``dense`` / ``fused`` sequence paths (compiled ``cell="lstm"`` programs)
-against the per-step dispatch loop, with a hard fused-vs-dense parity
-assertion, written to ``BENCH_deltalstm_seq.json``.
-``python -m benchmarks.kernel_bench --lstm --quick`` is the CI spelling
-(``make ci`` chains it).
+Part 4 (``run_lstm``) is the cell-parity trajectory: every DeltaLSTM
+backend registered for ``cell="lstm"`` (the sweep list is derived from the
+backend registry, so new backends are auto-benched) against the per-step
+dispatch loop, with a hard fused-vs-dense parity assertion, written to
+``BENCH_deltalstm_seq.json``. ``python -m benchmarks.kernel_bench --lstm
+--quick`` is the CI spelling (``make ci`` chains it).
+
+Part 5 (``run_lstm_q8``) is the quantized 4-gate bandwidth story: the
+LSTM analogue of Part 3 — bytes streamed + effective GOp/s per backend,
+plus two HARD gates (fused_q8 Pallas kernel bit-identical to its jnp
+oracle; fused_q8 within the quantization budget of the fp32 dense
+reference) — written to ``BENCH_deltalstm_q8.json`` with the
+matched-firing 0.25x bytes invariant the regression gate checks exactly.
+``python -m benchmarks.kernel_bench --lstm-q8 --quick`` is the CI
+spelling (``make bench-lstm-q8-quick``).
 """
 from __future__ import annotations
 
@@ -42,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backends import list_backends
 from repro.kernels import ops
 
 O, I = 2048, 2048
@@ -52,9 +62,14 @@ BENCH_Q8_JSON = os.path.join(os.path.dirname(__file__),
                              "BENCH_deltagru_q8.json")
 BENCH_LSTM_JSON = os.path.join(os.path.dirname(__file__),
                                "BENCH_deltalstm_seq.json")
+BENCH_LSTM_Q8_JSON = os.path.join(os.path.dirname(__file__),
+                                  "BENCH_deltalstm_q8.json")
 
-SEQ_BACKENDS = ("dense", "blocksparse", "fused", "fused_q8")
-LSTM_BACKENDS = ("dense", "fused")
+# Derived from the backend registry (the single source of truth): a newly
+# registered backend is automatically swept, benched, and regression-gated
+# instead of silently skipped by a stale hand-maintained tuple.
+SEQ_BACKENDS = list_backends("gru")
+LSTM_BACKENDS = list_backends("lstm")
 
 
 def record_meta() -> dict:
@@ -113,16 +128,26 @@ def run() -> list[str]:
     lines.append(
         f"kernel.seq_bench_json,0,wrote {os.path.basename(BENCH_JSON)}")
     lines.extend(run_q8(times_by_theta=_times_from_record(seq_record)))
-    lines.extend(run_lstm())
+    # LSTM shootout + the quantized-LSTM bytes record, reusing the walls
+    # the LSTM pass already measured (same configs, no double timing)
+    lstm_lines, lstm_record = bench_lstm_record()
+    lines.extend(lstm_lines)
+    with open(BENCH_LSTM_JSON, "w") as f:
+        json.dump(lstm_record, f, indent=1)
+    lines.append(
+        f"kernel.lstm_bench_json,0,wrote {os.path.basename(BENCH_LSTM_JSON)}")
+    lines.extend(run_lstm_q8(times_by_theta=_times_from_record(
+        lstm_record, LSTM_BACKENDS)))
     return lines
 
 
-def _times_from_record(seq_record) -> dict:
-    """{theta: {backend: wall_s}} from a bench_seq_record result."""
+def _times_from_record(seq_record, backends=None) -> dict:
+    """{theta: {backend: wall_s}} from a bench_*_record result."""
     t = seq_record["config"]["t"]
+    backends = SEQ_BACKENDS if backends is None else backends
     times: dict = {}
     for row in seq_record["rows"]:
-        if row["backend"] in SEQ_BACKENDS:
+        if row["backend"] in backends:
             times.setdefault(row["theta"], {})[row["backend"]] = \
                 row["us_per_step"] * t / 1e6
     return times
@@ -259,24 +284,26 @@ def bench_seq_record(t=64, i=128, h=256, layers=2,
 # Part 3: bytes-streamed + effective GOp/s per backend (the Eq. 8 story)
 # ---------------------------------------------------------------------------
 
-def _backend_weight_bytes() -> dict:
+def _backend_weight_bytes(cell="gru") -> dict:
     """Bytes per streamed weight, derived from the single source of truth
     (the backend registry, surfaced through the Eq. 6/7 model) so bench
     and engine cannot drift."""
     from repro.core.perf_model import backend_weight_bits
-    return {be: bits // 8 for be, bits in backend_weight_bits().items()}
+    return {be: bits // 8 for be, bits in backend_weight_bits(cell).items()}
 
 
 def _mean_fired_blocks(params, xs, theta, backend="dense", layouts=None,
-                       block=128):
+                       block=128, cell="gru"):
     """Mean fired k-block counts per step per layer, ``[L, 2]`` (x, h).
 
     Measured on the actual delta stream of the given backend (the
-    quantized path fires on the Q8.8-rounded stream, which can differ
-    slightly from the fp32 one).
+    quantized paths fire on the Q8.8-rounded stream, which can differ
+    slightly from the fp32 one). Cell-agnostic: the stack is compiled
+    into a program of the given cell family and scanned step by step.
     """
-    from repro.core.deltagru import (deltagru_stack_step,
-                                     init_deltagru_stack_state, stack_m_init)
+    from repro.core.program import compile_delta_program
+    prog = compile_delta_program(params, backend=backend, cell=cell,
+                                 layouts=layouts)
 
     def blocks(d):
         b, k = d.shape
@@ -287,13 +314,10 @@ def _mean_fired_blocks(params, xs, theta, backend="dense", layouts=None,
         return jnp.sum(fired.astype(jnp.float32))
 
     def run_counts(xs):
-        state = init_deltagru_stack_state(params, (xs.shape[1],),
-                                          m_init=stack_m_init(backend))
+        state = prog.init_state((xs.shape[1],))
 
         def body(s, x):
-            _, s2, deltas = deltagru_stack_step(
-                params, s, x, theta, theta, backend=backend,
-                layouts=layouts)
+            _, s2, deltas = prog.step(s, x, theta, theta)
             cnt = jnp.stack([jnp.stack([blocks(dx), blocks(dh)])
                              for dx, dh in deltas])
             return s2, cnt
@@ -304,28 +328,31 @@ def _mean_fired_blocks(params, xs, theta, backend="dense", layouts=None,
     return np.asarray(jax.jit(run_counts)(xs))
 
 
-def _bytes_per_step(params, counts, backend, block=128):
+def _bytes_per_step(params, counts, backend, block=128, cell="gru"):
     """Modeled weight HBM bytes per timestep for a backend.
 
     dense reads the whole (unpadded) weight set every step; the kernel
     backends fetch ``fired_blocks * block`` columns of their padded row
-    extent; fused_q8 fetches the same columns at 1 byte/element (the int8
-    volume is the kernel's only weight-sized operand).
+    extent (``gates`` rows per column — 3 for GRU, 4 for LSTM); fused_q8
+    fetches the same columns at 1 byte/element (the int8 volume is the
+    kernel's only weight-sized operand).
     """
-    wb = _backend_weight_bytes()[backend]
+    from repro.core.sparsity import CELL_GATES
+    g = CELL_GATES[cell]
+    wb = _backend_weight_bytes(cell)[backend]
     total = 0.0
     for li, p in enumerate(params):
         i_dim, h_dim = p.input_size, p.hidden_size
         if backend == "dense":
-            total += 3 * h_dim * (i_dim + h_dim) * wb
+            total += g * h_dim * (i_dim + h_dim) * wb
             continue
         fbx, fbh = counts[li]
         if backend == "blocksparse":
-            op3 = 3 * h_dim + (-3 * h_dim) % block     # delta_spmv row pad
-            total += (fbx + fbh) * block * op3 * wb
+            opg = g * h_dim + (-g * h_dim) % block     # delta_spmv row pad
+            total += (fbx + fbh) * block * opg * wb
         else:                                          # fused / fused_q8
             hp = h_dim + (-h_dim) % block
-            total += (fbx + fbh) * block * 3 * hp * wb
+            total += (fbx + fbh) * block * g * hp * wb
     return float(total)
 
 
@@ -424,10 +451,12 @@ def bench_lstm_record(t=64, i=128, h=256, layers=2,
     """Wall time + fused-vs-dense parity for the DeltaLSTM backends.
 
     Mirrors :func:`bench_seq_record` on ``cell="lstm"`` programs: the
-    seed-style per-step dispatch loop against the scanned ``dense`` /
-    ``fused`` sequence paths, plus a max-abs-error parity row (the fused
+    seed-style per-step dispatch loop against every backend registered for
+    the cell (``LSTM_BACKENDS`` — registry-derived, so ``fused_q8`` is
+    swept automatically), plus a max-abs-error parity row (the fused
     kernel must track the dense reference — the quick CI pass fails hard
-    on drift instead of silently recording it).
+    on drift instead of silently recording it; the quantized path's own
+    parity gates live in :func:`bench_lstm_q8_record`).
     """
     from repro.core.deltalstm import (deltalstm_sequence,
                                       deltalstm_stack_step,
@@ -515,17 +544,179 @@ def run_lstm_quick(t=16, i=64, h=128, layers=2,
     return run_lstm(t=t, i=i, h=h, layers=layers, thetas=thetas, write=False)
 
 
+# ---------------------------------------------------------------------------
+# Part 5: quantized DeltaLSTM bytes/GOp/s record (the 4-gate Eq. 8 story)
+# ---------------------------------------------------------------------------
+
+def bench_lstm_q8_record(t=64, i=128, h=256, layers=2,
+                         thetas=(0.0, 0.05, 0.2), times_by_theta=None):
+    """Bytes-streamed + effective-GOp/s shootout for the LSTM backends,
+    with the quantized path's hard parity gates.
+
+    Mirrors :func:`bench_q8_record` on ``cell="lstm"``. Two assertions
+    fail the record (and therefore CI) instead of silently recording
+    drift:
+
+    * **kernel parity** — the ``fused_q8`` Pallas kernel (interpret mode)
+      must be *bit-identical* to its jnp oracle on a sequence prefix (the
+      code-domain accumulator makes any mismatch a real kernel bug, not
+      rounding);
+    * **quantization drift** — ``fused_q8`` must track the fp32 dense
+      reference within the Q8.8/LUT quantization budget (a generous 0.25
+      rail; real drift is layout/seam corruption, which lands far outside
+      it).
+
+    Each theta also records ``q8_bytes_matched_fp32`` — the fused_q8 bytes
+    model evaluated at the *fp32 firing counts* — so the regression gate
+    can assert the exact 0.25x invariant (int8 streams a quarter of the
+    fp32 fused bytes at matched firing) without float-threshold noise.
+    """
+    from repro.core.deltalstm import deltalstm_sequence, init_lstm_stack
+    from repro.core.sparsity import lstm_dims
+    from repro.quant.export import quantize_delta_stack
+
+    key = jax.random.PRNGKey(0)
+    params = init_lstm_stack(key, i, h, layers)
+    qparams, layouts_q8 = quantize_delta_stack(params, cell="lstm")
+    xs = _walk_inputs(jax.random.fold_in(key, 1), t, 1, i)
+    ops_per_step = lstm_dims(i, h, layers).params_per_timestep_ops
+    lines, rows = [], []
+
+    def _lstm_seq_fn(backend):
+        from repro.core.program import compile_delta_program
+        prog = compile_delta_program(
+            qparams if backend == "fused_q8" else params, backend=backend,
+            cell="lstm",
+            layouts=layouts_q8 if backend == "fused_q8" else None)
+        return jax.jit(lambda xs: prog.sequence(
+            xs, theta, theta, collect_sparsity=False)[0])
+
+    for theta in thetas:
+        counts_fp = _mean_fired_blocks(params, xs, theta, backend="dense",
+                                       cell="lstm")
+        counts_q8 = _mean_fired_blocks(qparams, xs, theta,
+                                       backend="fused_q8",
+                                       layouts=layouts_q8, cell="lstm")
+        ys_d, _, st = deltalstm_sequence(params, xs, theta, theta)
+        ys_q, _, st_q = deltalstm_sequence(qparams, xs, theta, theta,
+                                           backend="fused_q8",
+                                           layouts=layouts_q8)
+        # kernel parity on a prefix (interpret mode is the slow
+        # correctness path; a prefix certifies the kernel all the same)
+        tp = min(t, 12)
+        ys_qk, _, _ = deltalstm_sequence(qparams, xs[:tp], theta, theta,
+                                         backend="fused_q8",
+                                         layouts=layouts_q8, interpret=True)
+        kparity = float(jnp.max(jnp.abs(ys_q[:tp] - ys_qk)))
+        if kparity != 0.0:
+            raise AssertionError(
+                f"fused_q8 LSTM Pallas kernel drifted from its jnp oracle "
+                f"at theta={theta}: max|kernel - ref| = {kparity} "
+                "(the code-domain accumulator makes this exact by "
+                "construction — a nonzero gap is a kernel bug)")
+        drift = float(jnp.max(jnp.abs(ys_q - ys_d)))
+        if not (drift < 0.25):
+            raise AssertionError(
+                f"fused_q8 LSTM drifted from the fp32 dense reference at "
+                f"theta={theta}: max|q8 - dense| = {drift} (beyond the "
+                "Q8.8/LUT quantization budget)")
+
+        times = (times_by_theta or {}).get(theta)
+        if times is None or any(be not in times for be in LSTM_BACKENDS):
+            seqs = [_lstm_seq_fn(be) for be in LSTM_BACKENDS]
+            walls = _time_calls([(lambda s=s: s(xs)) for s in seqs],
+                                reps=30)
+            times = dict(zip(LSTM_BACKENDS, walls))
+
+        fused_bytes = _bytes_per_step(params, counts_fp, "fused",
+                                      cell="lstm")
+        q8_bytes_matched = _bytes_per_step(params, counts_fp, "fused_q8",
+                                           cell="lstm")
+        for be in LSTM_BACKENDS:
+            wall = times[be]
+            counts, stats = ((counts_q8, st_q) if be == "fused_q8"
+                             else (counts_fp, st))
+            us = wall / t * 1e6
+            nbytes = _bytes_per_step(params, counts, be, cell="lstm")
+            eff_gops = ops_per_step / (wall / t) / 1e9
+            row = {
+                "theta": theta, "backend": be,
+                "gamma_dx": round(float(stats["gamma_dx"]), 4),
+                "gamma_dh": round(float(stats["gamma_dh"]), 4),
+                "us_per_step": round(us, 2),
+                "bytes_per_step": round(nbytes, 1),
+                "eff_gops": round(eff_gops, 4),
+            }
+            if be == "fused_q8":
+                # UNROUNDED: the regression gate asserts the exact 0.25x
+                # ratio on these (scaling a float sum by a power of two
+                # is exact; independent rounding would break equality for
+                # non-integral bytes/step)
+                row["q8_bytes_matched_fp32"] = q8_bytes_matched
+                row["fused_bytes_matched_fp32"] = fused_bytes
+                row["dense_drift"] = round(drift, 5)
+            rows.append(row)
+            lines.append(
+                f"kernel.lstm_q8_{be}_th{theta},{us:.1f},"
+                f"bytes/step={nbytes:.0f} eff_gops={eff_gops:.3f}")
+
+    record = {
+        "bench": "deltalstm_q8_backends",
+        "unit": "us_per_step",
+        "config": {"t": t, "input": i, "hidden": h, "layers": layers,
+                   "batch": 1, "block": 128, "gates": 4,
+                   "ops_per_step": ops_per_step,
+                   "weight_bytes": _backend_weight_bytes("lstm"),
+                   **record_meta()},
+        "created_unix": int(time.time()),
+        "rows": rows,
+    }
+    return lines, record
+
+
+def run_lstm_q8(t=64, i=128, h=256, layers=2,
+                thetas=(0.0, 0.05, 0.2), write=True,
+                times_by_theta=None) -> list[str]:
+    """Quantized-LSTM bytes/GOp/s shootout + parity gates; writes
+    ``BENCH_deltalstm_q8.json`` (gated by ``check_regression``)."""
+    lines, record = bench_lstm_q8_record(t=t, i=i, h=h, layers=layers,
+                                         thetas=thetas,
+                                         times_by_theta=times_by_theta)
+    if write:
+        with open(BENCH_LSTM_Q8_JSON, "w") as f:
+            json.dump(record, f, indent=1)
+        lines.append(
+            f"kernel.lstm_q8_bench_json,0,wrote "
+            f"{os.path.basename(BENCH_LSTM_Q8_JSON)}")
+    return lines
+
+
+def run_lstm_q8_quick(t=16, i=64, h=128, layers=2,
+                      thetas=(0.0, 0.2)) -> list[str]:
+    """Reduced quantized-LSTM parity/bytes pass for CI (hard fused_q8
+    parity assertions, no baseline writes) — the `make bench-lstm-q8-quick`
+    entry."""
+    return run_lstm_q8(t=t, i=i, h=h, layers=layers, thetas=thetas,
+                       write=False)
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(
         description="kernel benches (delta_spmv + DeltaGRU/DeltaLSTM "
-                    "sequence shootouts)")
+                    "sequence + quantized shootouts)")
     ap.add_argument("--lstm", action="store_true",
                     help="run only the DeltaLSTM parity/bench suite")
+    ap.add_argument("--lstm-q8", action="store_true",
+                    help="run only the quantized-DeltaLSTM parity/bytes "
+                         "suite")
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI pass (small dims, no baseline writes)")
     args = ap.parse_args(argv)
-    if args.lstm:
+    if args.lstm_q8:
+        print("\n".join(run_lstm_q8_quick() if args.quick
+                        else run_lstm_q8()))
+    elif args.lstm:
         print("\n".join(run_lstm_quick() if args.quick else run_lstm()))
     elif args.quick:
         print("\n".join(run_quick()))

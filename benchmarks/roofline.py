@@ -187,17 +187,23 @@ OUT_DELTAGRU_MD = os.path.join(os.path.dirname(__file__), "artifacts",
 
 
 def run_deltagru(bench_json: str | None = None,
-                 out_md: str | None = None) -> list[str]:
-    """Roofline terms per (backend, theta) from ``BENCH_deltagru_q8.json``.
+                 out_md: str | None = None,
+                 label: str = "deltagru") -> list[str]:
+    """Roofline terms per (backend, theta) from a kernel-bench bytes
+    record (``BENCH_deltagru_q8.json`` by default; pass
+    ``BENCH_deltalstm_q8.json`` / ``label="deltalstm"`` for the 4-gate
+    record — :func:`run_deltalstm` is that spelling).
 
     arithmetic intensity = nominal Op / streamed weight bytes per step;
     memory term          = bytes / HBM bandwidth (V5E constants);
     compute term         = Op / peak.
 
-    Batch-1 DeltaGRU decode is deep in memory-bound territory, so the
+    Batch-1 delta-RNN decode is deep in memory-bound territory, so the
     modeled speedup of a backend is ~the reduction in bytes: delta
     skipping divides bytes by 1/(1-Gamma_block), int8 divides them 4x
-    again — multiplicative, which is the paper's whole point.
+    again — multiplicative, which is the paper's whole point. The law is
+    identical for both cell families; the LSTM's 4-gate volume only moves
+    the constants.
     """
     from benchmarks.kernel_bench import BENCH_Q8_JSON
     path = bench_json or BENCH_Q8_JSON
@@ -221,7 +227,7 @@ def run_deltagru(bench_json: str | None = None,
             f"{ai:.2f} | {t_mem * 1e6:.3f} | {t_comp * 1e6:.3f} | {bound} | "
             f"{modeled:.1f} | {row['eff_gops']:.2f} |")
         lines.append(
-            f"roofline.deltagru.{row['backend']}_th{row['theta']},"
+            f"roofline.{label}.{row['backend']}_th{row['theta']},"
             f"{t_mem * 1e6:.2f},AI={ai:.2f} bound={bound} "
             f"modeled_gops={modeled:.1f} measured_gops={row['eff_gops']:.2f}")
     out = out_md or OUT_DELTAGRU_MD
@@ -231,5 +237,19 @@ def run_deltagru(bench_json: str | None = None,
     return lines
 
 
+OUT_DELTALSTM_MD = os.path.join(os.path.dirname(__file__), "artifacts",
+                                "roofline_deltalstm.md")
+
+
+def run_deltalstm(bench_json: str | None = None,
+                  out_md: str | None = None) -> list[str]:
+    """The 4-gate spelling of :func:`run_deltagru`: roofline terms per
+    (backend, theta) from ``BENCH_deltalstm_q8.json``."""
+    from benchmarks.kernel_bench import BENCH_LSTM_Q8_JSON
+    return run_deltagru(bench_json=bench_json or BENCH_LSTM_Q8_JSON,
+                        out_md=out_md or OUT_DELTALSTM_MD,
+                        label="deltalstm")
+
+
 if __name__ == "__main__":
-    print("\n".join(run() + run_deltagru()))
+    print("\n".join(run() + run_deltagru() + run_deltalstm()))

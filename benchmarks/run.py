@@ -39,9 +39,11 @@ def _suites(quick: bool):
     # whole configs registry) must not take down the paper-table suites
     try:
         from benchmarks import roofline
-        # kernel_bench.run writes BENCH_deltagru_q8.json above, so the
-        # DeltaGRU roofline always sees a fresh record
+        # kernel_bench.run writes BENCH_deltagru_q8.json and
+        # BENCH_deltalstm_q8.json above, so both delta-RNN rooflines
+        # always see fresh records
         suites.append(("roofline_deltagru", roofline.run_deltagru))
+        suites.append(("roofline_deltalstm", roofline.run_deltalstm))
         # the LM roofline runs only when dry-run artifacts exist
         if os.path.isdir(roofline.ART_DIR) and os.listdir(roofline.ART_DIR):
             suites.append(("roofline", roofline.run))
@@ -71,8 +73,9 @@ def main(argv=None) -> None:
             traceback.print_exc(file=sys.stderr)
     # machine-readable perf-trajectory records written by the suites
     from benchmarks.kernel_bench import (BENCH_JSON, BENCH_LSTM_JSON,
-                                         BENCH_Q8_JSON)
-    for p in (BENCH_JSON, BENCH_Q8_JSON, BENCH_LSTM_JSON):
+                                         BENCH_LSTM_Q8_JSON, BENCH_Q8_JSON)
+    for p in (BENCH_JSON, BENCH_Q8_JSON, BENCH_LSTM_JSON,
+              BENCH_LSTM_Q8_JSON):
         if os.path.exists(p):
             print(f"bench_json,0,{p}", file=sys.stderr)
     if failures:

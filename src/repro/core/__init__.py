@@ -2,8 +2,8 @@
 its generalization to arbitrary streamed linear layers, temporal-sparsity
 accounting, threshold policies, and the EdgeDRNN analytical perf model."""
 from repro.core.backends import (BackendSpec, backend_names, get_backend,
-                                 register_backend, registered_backends,
-                                 unregister_backend)
+                                 list_backends, register_backend,
+                                 registered_backends, unregister_backend)
 from repro.core.delta import (DeltaState, delta_encode, delta_encode_sequence,
                               delta_encode_ste, init_delta_state,
                               reconstruct_from_deltas)

@@ -114,10 +114,20 @@ def get_backend(name: str, cell: str = "gru") -> BackendSpec:
     return spec
 
 
-def backend_names(cell: str = "gru") -> tuple:
-    """Registered backend names for a cell, in registration order."""
+def list_backends(cell: str = "gru") -> tuple:
+    """Registered backend names for a cell, in registration order.
+
+    This is the query every "which backends exist" list must derive from —
+    the legacy ``repro.core.deltagru.BACKENDS`` tuple and the kernel-bench
+    backend sweeps all read it, so a newly registered backend is
+    automatically benched and regression-gated instead of silently skipped.
+    """
     _ensure_builtins()
     return tuple(n for (c, n) in _REGISTRY if c == cell)
+
+
+# Historical spelling of the same query.
+backend_names = list_backends
 
 
 def registered_backends(cell: str = "gru") -> tuple:

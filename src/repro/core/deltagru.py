@@ -59,13 +59,12 @@ from typing import Callable, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.backends import BackendSpec, get_backend, register_backend
+from repro.core.backends import (BackendSpec, get_backend, list_backends,
+                                 register_backend)
 from repro.core.delta import DeltaState, delta_encode, init_delta_state
 from repro.core.thresholds import layer_theta
 
 Array = jax.Array
-
-BACKENDS = ("dense", "blocksparse", "fused", "fused_q8")  # legacy alias
 
 
 def _default_acts(sigmoid: Callable, tanh: Callable) -> bool:
@@ -418,6 +417,11 @@ register_backend(BackendSpec(
 register_backend(BackendSpec(
     name="fused_q8", cell="gru", pack=_pack_fused_q8, step=_step_fused_q8,
     m_init="zero", weight_bits=8, supports_custom_acts=False))
+
+# Legacy alias, now DERIVED from the registry instead of hand-maintained:
+# a backend registered after import still shows up via list_backends("gru");
+# this tuple is only the snapshot of the builtins above.
+BACKENDS = list_backends("gru")
 
 
 def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,

@@ -18,6 +18,17 @@ Execution backends go through the same registry as DeltaGRU
   a single fired-block compaction and the in-kernel i/f/g/o + cell-state
   pipeline; sequences run under ``lax.scan`` with zero per-step Python
   dispatch.
+* ``"fused_q8"`` — the same fused pipeline with the paper's fixed-point
+  semantics, via the cell-agnostic int8 core
+  (:mod:`repro.kernels.delta_q8`, G=4): int8 packed ``[4, Hp, Ip+Hk]``
+  weights streamed from HBM (4x fewer bytes per fired column), Q8.8
+  activations, unscaled code-domain delta memories (``m_init="zero"`` —
+  biases are applied at the activation stage), Q8.8 -> Q1.4 LUT
+  i/f/g/o gates, and the cell state ``c`` on the saturating Q8.8
+  accumulator grid (clips at the rails, never wraps). Quantize a trained
+  stack with :func:`repro.quant.export.quantize_delta_stack`
+  (``cell="lstm"``) or just compile:
+  ``compile_delta_program(params, cell="lstm", backend="fused_q8")``.
 
 Both compile into :func:`repro.core.program.compile_delta_program`
 programs (``cell="lstm"``) and stream through
@@ -103,9 +114,9 @@ def init_deltalstm_state(params: LstmLayerParams, batch_shape=(),
                          dtype=None, m_init: str = "bias") -> DeltaLstmLayerState:
     """``m_init="bias"`` folds the biases into the delta memories up front
     (the paper's "bias as first weight column" trick, same as DeltaGRU);
-    ``"zero"`` leaves ``M`` all-zero for backends that consume the bias at
-    the activation stage (none registered for LSTM yet — the convention is
-    carried so a quantized LSTM backend slots in like ``fused_q8`` did)."""
+    ``"zero"`` is the ``fused_q8`` convention — ``M`` is the unscaled
+    code-domain accumulator and the quantized bias lives in the packed
+    layout, consumed at the activation stage instead."""
     dtype = dtype or params.w_x.dtype
     h_dim, i_dim = params.hidden_size, params.input_size
     if m_init == "zero":
@@ -193,6 +204,58 @@ def _step_fused(params: LstmLayerParams, state: DeltaLstmLayerState,
                             delta_h=dh_out.delta)
 
 
+def _step_fused_q8(params: LstmLayerParams, state: DeltaLstmLayerState,
+                   x: Array, theta_x, theta_h, *, sigmoid, tanh, matvec,
+                   layout=None, packed=None,
+                   interpret=None) -> DeltaLstmStepOut:
+    """Fixed-point i/f/g/o + cell update via the int8 single-pallas_call
+    kernel (:mod:`repro.kernels.delta_q8`, the G=4 instantiation).
+
+    Same mode resolution as :func:`_step_fused`: compiled Pallas on TPU
+    (int8 HBM operand), the bit-identical pure-jnp oracle elsewhere (with
+    the code->f32 conversion hoisted to pack time). State convention:
+    ``m_init="zero"`` — ``M`` is the unscaled code-domain accumulator and
+    the quantized bias lives in the packed layout; ``c`` lives on the
+    saturating Q8.8 accumulator grid.
+    """
+    from repro.kernels import delta_q8 as _q8
+    from repro.kernels import ops as _ops
+    if matvec is not None:
+        raise ValueError("fused_q8 carries code-domain delta memories; "
+                         "a matvec= override cannot preserve its state "
+                         "semantics (use backend='dense' instead)")
+    if not _default_acts(sigmoid, tanh):
+        raise ValueError("fused_q8 hard-codes the Q8.8/Q1.n LUT "
+                         "activation pipeline; pass backend='dense' "
+                         "with QAT act fns for training-time emulation")
+    if layout is None:
+        layout = _q8.pack_delta_weights_q8(params.w_x, params.w_h,
+                                           b=params.b, gates=4)
+    # The Delta Unit sees the Q8.8-quantized input stream (layer >= 2
+    # inputs are already on-grid hidden states; re-rounding is exact).
+    x = layout.quantize_act(x)
+    dx_out = delta_encode(x, state.x_mem, theta_x)
+    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+    use_ref = _ops._FORCE_REF or (interpret is None
+                                  and _ops._interpret_default())
+    h_dim, i_dim = params.hidden_size, params.input_size
+    lead = state.h.shape[:-1]
+    args = (layout, state.m.reshape(-1, 4 * h_dim),
+            state.h.reshape(-1, h_dim), state.c.reshape(-1, h_dim),
+            dx_out.delta.reshape(-1, i_dim), dh_out.delta.reshape(-1, h_dim))
+    if use_ref:
+        m_new, h_new, c_new = _q8.deltalstm_q8_step_ref(*args)
+    else:
+        m_new, h_new, c_new = _q8.deltalstm_q8_step(
+            *args, interpret=bool(interpret))
+    h_new = h_new.reshape(*lead, h_dim)
+    new_state = DeltaLstmLayerState(
+        h=h_new, c=c_new.reshape(*lead, h_dim), x_mem=dx_out.state,
+        h_mem=dh_out.state, m=m_new.reshape(*lead, 4 * h_dim))
+    return DeltaLstmStepOut(h=h_new, state=new_state, delta_x=dx_out.delta,
+                            delta_h=dh_out.delta)
+
+
 # -- per-backend stack packers (registered BackendSpec.pack fns) ------------
 
 def _pack_none(params, block):
@@ -206,12 +269,23 @@ def _pack_fused(params, block):
                     for p in params], None
 
 
+def _pack_fused_q8(params, block):
+    # quantize-and-pack: the returned stack is the dequantized fake-quant
+    # view, so oracles / state init see the same grids the kernel streams.
+    from repro.quant.export import quantize_delta_stack
+    qparams, layouts = quantize_delta_stack(params, cell="lstm", block=block)
+    return qparams, layouts, None
+
+
 register_backend(BackendSpec(
     name="dense", cell="lstm", pack=_pack_none, step=_step_dense,
     m_init="bias", weight_bits=32, supports_custom_acts=True))
 register_backend(BackendSpec(
     name="fused", cell="lstm", pack=_pack_fused, step=_step_fused,
     m_init="bias", weight_bits=32, supports_custom_acts=False))
+register_backend(BackendSpec(
+    name="fused_q8", cell="lstm", pack=_pack_fused_q8, step=_step_fused_q8,
+    m_init="zero", weight_bits=8, supports_custom_acts=False))
 
 
 def lstm_stack_m_init(backend: str) -> str:

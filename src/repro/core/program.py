@@ -6,7 +6,8 @@ steps against that fixed program. :func:`compile_delta_program` is the
 software analogue — it resolves a :class:`~repro.core.backends.BackendSpec`
 from the registry for any registered **cell family** (``"gru"`` or
 ``"lstm"`` builtin), packs every layer's weights once (quantizing them for
-``fused_q8``), and returns an immutable :class:`DeltaProgram`:
+``fused_q8`` — for either cell family, ``compile`` of a trained fp32/QAT
+stack IS the int8 export), and returns an immutable :class:`DeltaProgram`:
 
 * the program is a **pytree** (layers / layouts / packs / head are leaves,
   the backend and cell names are static), so it passes through ``jit``,

@@ -1,0 +1,655 @@
+"""Cell-agnostic quantized delta-kernel core (paper Sec. IV-A, Figs. 6/7).
+
+EdgeDRNN serves every cell family from ONE fixed-point pipeline: the Delta
+Unit encodes on the Q8.8 activation grid, the MxV streams an int8 weight
+volume from DRAM (skipping unfired columns), the PEs accumulate integer
+partial sums, and the activation stage dequantizes + walks the Q8.8-input /
+Q1.n-output LUT nonlinearities. Nothing in that pipeline is specific to the
+3-gate GRU — only the *routing* of partial sums into delta memories and the
+final gate equations differ per cell. This module is that shared core:
+
+* :class:`_GruBlockGeometry` — the Fig. 6 block/pad/seam arithmetic every
+  packed layout (fp32 and int8, GRU and LSTM) must agree on;
+* :func:`pack_cat_volume` — the concatenated-column ``[G, Hp, Ip+Hk]``
+  pack, gate-count-parameterized;
+* :func:`_prep_step_operands` — the per-step Delta-Unit prologue (pad,
+  x/h concat, single fired-block compaction) shared by every fused kernel;
+* :class:`QuantDeltaLayout` — ONE quantized layout for any gate count:
+  int8 codes ``[G, Hp, Ip+Hk]``, per-gate-row scales ``[G, Hp]``, the
+  activation-grid bias expanded to the four delta memories, and the
+  Q8.8/LUT grid constants baked at pack time;
+* :func:`pack_delta_weights_q8` — the gate-count-parametric quantizing
+  packer (``gates=3`` reproduces the historical GRU pack bit for bit;
+  ``gates=4`` is the LSTM volume);
+* the int8 Pallas kernels + bit-identical jnp oracles for both builtin
+  cells: :func:`deltagru_q8_step` / :func:`deltagru_q8_step_ref` (G=3,
+  seam-routed split-candidate memories, Fig. 7 GRU activation) and
+  :func:`deltalstm_q8_step` / :func:`deltalstm_q8_step_ref` (G=4, all
+  four memories take both streams, i/f/g/o + saturating Q8.8 cell state).
+
+Fixed-point semantics (identical for both cells, matching the hardware):
+
+* deltas arrive on the Q8.8 activation grid, so every ``delta x code``
+  product is an exact dyadic rational in fp32;
+* the delta memories ``M`` carry **unscaled code-domain partial sums**
+  (the PE's integer accumulator): all cross-step and cross-block
+  additions are exact, which makes the Pallas kernel, the jnp reference
+  and any other summation order *bit-identical*;
+* the activation stage dequantizes in-register (``b + scale * M``) and
+  pushes through the Q8.8-input / Q1.n-output LUT grid of
+  :mod:`repro.quant.lut`, rounding new states back onto Q8.8. The LSTM
+  cell state ``c`` lives on the (wide) Q8.8 accumulator grid: the
+  recurrence ``c = f * c_prev + i * g`` re-rounds onto the grid each
+  step and **saturates** at the rails (clip, never wrap) — the int16
+  accumulator behaviour of the hardware.
+
+GRU-pinned spellings (``QuantGruLayout``, ``pack_spmv_weights_q8``) are
+re-exported from :mod:`repro.kernels.deltagru_seq`, LSTM spellings from
+:mod:`repro.kernels.deltalstm_seq`; both are thin aliases of this module.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+# Delta memories per layer. Both builtin cells carry four: the GRU splits
+# its candidate gate across the x/h seam (M_r, M_u, M_xc, M_hc — 3 gate
+# rows, 4 memories), the LSTM has one per gate (M_i, M_f, M_g, M_o). The
+# shared prologue and the [B, 4H] state convention lean on this.
+N_MEM = 4
+
+
+class _GruBlockGeometry:
+    """Shared block geometry of the Fig. 6 concatenated layout.
+
+    Mixin over any layout dataclass carrying ``input_size``,
+    ``hidden_size``, ``block_h``, ``block_k`` — the fp32 and int8 packs
+    (of every cell family) must agree on this arithmetic or their
+    kernels' seams diverge. (The name predates the LSTM family; the
+    geometry was always cell-agnostic.)
+    """
+
+    @property
+    def ip(self) -> int:          # padded input k-extent
+        return self.input_size + (-self.input_size) % self.block_k
+
+    @property
+    def hk(self) -> int:          # padded hidden k-extent
+        return self.hidden_size + (-self.hidden_size) % self.block_k
+
+    @property
+    def hp(self) -> int:          # padded hidden (output) extent
+        return self.hidden_size + (-self.hidden_size) % self.block_h
+
+    @property
+    def nbk_x(self) -> int:
+        return self.ip // self.block_k
+
+    @property
+    def nbk(self) -> int:
+        return (self.ip + self.hk) // self.block_k
+
+    @property
+    def nbo(self) -> int:
+        return self.hp // self.block_h
+
+
+def pack_cat_volume(w_x: Array, w_h: Array, gates: int, block_h: int,
+                    block_k: int) -> Array:
+    """The Fig. 6 concatenated-column pack, gate-count-parameterized.
+
+    ``w_x: [gH, I]``, ``w_h: [gH, H]`` -> ``[g, Hp, Ip + Hk]``: gate-major
+    rows, hidden dim padded to ``block_h``, input columns then hidden
+    columns each padded to ``block_k`` (block-aligned x/h seam). This is
+    the ONE copy of the seam/pad arithmetic every cell's packer must agree
+    on — the GRU (g=3) and LSTM (g=4) layouts, fp32 and int8, all call it.
+    """
+    i_dim, h_dim = w_x.shape[-1], w_h.shape[-1]
+    hp = h_dim + (-h_dim) % block_h
+    ip = i_dim + (-i_dim) % block_k
+    hk = h_dim + (-h_dim) % block_k
+    wxg = jnp.pad(w_x.reshape(gates, h_dim, i_dim),
+                  ((0, 0), (0, hp - h_dim), (0, ip - i_dim)))
+    whg = jnp.pad(w_h.reshape(gates, h_dim, h_dim),
+                  ((0, 0), (0, hp - h_dim), (0, hk - h_dim)))
+    return jnp.concatenate([wxg, whg], axis=2)
+
+
+def _prep_step_operands(lay: _GruBlockGeometry, m_prev: Array, h_prev: Array,
+                        dx: Array, dh: Array):
+    """Shared per-step prologue of every fused kernel: pad the operands to
+    the block grid, concatenate the deltas across the x/h seam, and run the
+    single fired-block compaction (the Delta Unit's job — elementwise,
+    activation-sized, never weight-sized)."""
+    b = dx.shape[0]
+    h_dim, hp = lay.hidden_size, lay.hp
+    d_cat = jnp.concatenate([
+        jnp.pad(dx, ((0, 0), (0, lay.ip - lay.input_size))),
+        jnp.pad(dh, ((0, 0), (0, lay.hk - h_dim)))], axis=1)
+    m4 = jnp.pad(m_prev.reshape(b, N_MEM, h_dim),
+                 ((0, 0), (0, 0), (0, hp - h_dim)))
+    hprev = jnp.pad(h_prev, ((0, 0), (0, hp - h_dim)))
+    fired = jnp.any(d_cat.reshape(b, lay.nbk, lay.block_k) != 0, axis=(0, 2))
+    n_active = jnp.sum(fired).astype(jnp.int32).reshape((1,))
+    active_ids = jnp.nonzero(fired, size=lay.nbk,
+                             fill_value=0)[0].astype(jnp.int32)
+    return d_cat, m4, hprev, n_active, active_ids
+
+
+def _grid_round(v, scale: float, vmin: float, vmax: float):
+    """Round onto a Qm.n grid, then clip — the exact op sequence of
+    :func:`repro.quant.fake_quant.quantize`, shared by the Pallas kernel
+    bodies and the jnp references so all of them round identically.
+    The clip is what makes the fixed-point accumulators *saturate* at the
+    rails instead of wrapping."""
+    q = jnp.round(v * scale) / scale
+    return jnp.clip(q, vmin, vmax)
+
+
+# ---------------------------------------------------------------------------
+# The quantized layout (any gate count)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class QuantDeltaLayout(_GruBlockGeometry):
+    """One delta-RNN layer packed for an int8 fused kernel, any gate count.
+
+    ``w_q`` is the Fig. 6 ``[gates, Hp, Ip + Hk]`` volume as **int8 codes**
+    (the kernel's HBM operand — 1 byte/element); ``scales: [gates, Hp]``
+    holds the per-gate-row symmetric dequant scales; ``b4: [4, Hp]`` is the
+    bias quantized onto the activation grid and expanded to the four delta
+    memories (GRU: ``b_r, b_u, b_c, 0``; LSTM: ``b_i, b_f, b_g, b_o``) —
+    consumed at the activation stage, never accumulated (the M state for
+    the q8 backends is the PE's unscaled integer accumulator).
+    ``w_codes_f32`` is an optional pre-converted fp32 copy of the codes for
+    the off-TPU jnp emulation path, built at pack time so the per-step scan
+    body does no int8->f32 conversion.
+
+    ``gates`` is static pytree metadata (3 = GRU, 4 = LSTM): one class
+    serves every cell family, so the exporter, the program compiler and the
+    serving engine never branch on layout *types*. The activation/LUT grid
+    constants (``act_*``, ``lut_*``) are plain Python floats fixed at pack
+    time: the jitted steps close over them, adding zero per-timestep host
+    work.
+    """
+
+    w_q: Array                  # int8 [gates, Hp, Ip+Hk]
+    scales: Array               # f32  [gates, Hp]
+    b4: Array                   # f32  [4, Hp] (activation-grid bias)
+    input_size: int
+    hidden_size: int
+    block_h: int
+    block_k: int
+    act_scale: float            # Q8.8 grid: 256.0
+    act_min: float
+    act_max: float
+    lut_scale: float            # Q1.n LUT output grid: 2**n
+    lut_min: float
+    lut_max: float
+    w_codes_f32: Array | None = None
+    gates: int = 3
+
+    def quantize_act(self, x: Array) -> Array:
+        """Round onto the activation (Q8.8) grid — the Delta Unit's input."""
+        return _grid_round(x, self.act_scale, self.act_min, self.act_max)
+
+    def dequantized(self):
+        """The matching fp32 fused layout carrying the same quantized
+        values (:class:`~repro.kernels.deltagru_seq.FusedGruLayout` for
+        ``gates=3``, :class:`~repro.kernels.deltalstm_seq.FusedLstmLayout`
+        for ``gates=4``)."""
+        if self.gates == 3:
+            from repro.kernels.deltagru_seq import FusedGruLayout as Lay
+        elif self.gates == 4:
+            from repro.kernels.deltalstm_seq import FusedLstmLayout as Lay
+        else:
+            raise ValueError(f"no fused fp32 layout registered for "
+                             f"gates={self.gates}")
+        w = self.w_q.astype(jnp.float32) * self.scales[:, :, None]
+        return Lay(w=w, input_size=self.input_size,
+                   hidden_size=self.hidden_size,
+                   block_h=self.block_h, block_k=self.block_k)
+
+
+jax.tree_util.register_pytree_node(
+    QuantDeltaLayout,
+    lambda l: ((l.w_q, l.scales, l.b4, l.w_codes_f32),
+               (l.input_size, l.hidden_size, l.block_h, l.block_k,
+                l.act_scale, l.act_min, l.act_max,
+                l.lut_scale, l.lut_min, l.lut_max, l.gates)),
+    lambda aux, ch: QuantDeltaLayout(
+        w_q=ch[0], scales=ch[1], b4=ch[2], w_codes_f32=ch[3],
+        input_size=aux[0], hidden_size=aux[1], block_h=aux[2],
+        block_k=aux[3], act_scale=aux[4], act_min=aux[5], act_max=aux[6],
+        lut_scale=aux[7], lut_min=aux[8], lut_max=aux[9], gates=aux[10]))
+
+
+def pack_delta_weights_q8(w_x: Array, w_h: Array, b: Array | None = None,
+                          *, gates: int = 3,
+                          block_h: int = 128, block_k: int = 128,
+                          act_frac_bits: int = 8, act_int_bits: int = 8,
+                          lut_frac_bits: int = 4,
+                          with_ref_codes: bool | None = None
+                          ) -> QuantDeltaLayout:
+    """Quantize + pack one layer into the int8 Fig. 6 runtime layout.
+
+    Gate-count-parametric: ``w_x: [gH, I]``, ``w_h: [gH, H]`` with
+    ``g = gates``. Per-gate-row symmetric quantization:
+    ``scale[g, o] = absmax(w[g, o, :]) / 127`` over the concatenated
+    (x then h) row, codes clipped to ``[-127, 127]`` so the grid is
+    symmetric. Rows that are entirely zero (including Hp padding rows) get
+    scale ``1/127`` and all-zero codes.
+
+    The bias rows are quantized onto the activation grid and expanded to
+    the four delta memories: gate rows first, zero rows after — for the
+    GRU (g=3) this is exactly the ``(b_r, b_u, b_c, 0)`` split-candidate
+    convention; for the LSTM (g=4) it is one bias row per gate.
+
+    ``with_ref_codes=None`` auto-builds the fp32 code copy off-TPU only
+    (the jnp emulation path needs it hoisted out of the scan; a TPU run
+    streams the int8 volume directly and never materializes it).
+    """
+    gh, i_dim = w_x.shape
+    h_dim = w_h.shape[-1]
+    if gh != gates * h_dim or w_h.shape[0] != gates * h_dim:
+        raise ValueError(
+            f"pack_delta_weights_q8(gates={gates}) expects w_x [{gates}H, I]"
+            f" / w_h [{gates}H, H]; got w_x {tuple(w_x.shape)}, w_h "
+            f"{tuple(w_h.shape)} (hidden={h_dim}) — wrong cell family?")
+    hp = h_dim + (-h_dim) % block_h
+    w3 = pack_cat_volume(w_x.astype(jnp.float32), w_h.astype(jnp.float32),
+                         gates, block_h, block_k)      # [g, Hp, Ip+Hk]
+    absmax = jnp.max(jnp.abs(w3), axis=2)              # [g, Hp]
+    scales = jnp.where(absmax > 0, absmax, 1.0) / 127.0
+    codes = jnp.clip(jnp.round(w3 / scales[:, :, None]), -127.0, 127.0)
+    w_q = codes.astype(jnp.int8)
+
+    act_scale = float(2 ** act_frac_bits)
+    act_min = -float(2 ** act_int_bits)
+    act_max = float(2 ** act_int_bits) - 1.0 / act_scale
+    lut_scale = float(2 ** lut_frac_bits)
+    lut_min, lut_max = -2.0, 2.0 - 1.0 / lut_scale     # Q1.n output grid
+
+    if b is None:
+        b4 = jnp.zeros((N_MEM, hp), jnp.float32)
+    else:
+        bg = b.astype(jnp.float32).reshape(gates, h_dim)
+        bg = jnp.clip(jnp.round(bg * act_scale) / act_scale, act_min, act_max)
+        b4 = jnp.pad(bg, ((0, N_MEM - gates), (0, hp - h_dim)))
+    if with_ref_codes is None:
+        with_ref_codes = jax.default_backend() != "tpu"
+    return QuantDeltaLayout(
+        w_q=w_q, scales=scales, b4=b4, input_size=i_dim, hidden_size=h_dim,
+        block_h=block_h, block_k=block_k,
+        act_scale=act_scale, act_min=act_min, act_max=act_max,
+        lut_scale=lut_scale, lut_min=lut_min, lut_max=lut_max,
+        w_codes_f32=codes if with_ref_codes else None, gates=gates)
+
+
+def _ref_code_slices(layout: QuantDeltaLayout):
+    """fp32 code views of the x / h column ranges for the jnp oracles."""
+    h_dim = layout.hidden_size
+    codes = (layout.w_codes_f32 if layout.w_codes_f32 is not None
+             else layout.w_q.astype(jnp.float32))
+    cx = codes[:, :h_dim, :layout.input_size]             # [g, H, I]
+    ch = codes[:, :h_dim, layout.ip:layout.ip + h_dim]    # [g, H, H]
+    return cx, ch
+
+
+# ---------------------------------------------------------------------------
+# GRU instantiation (gates=3, seam-routed split-candidate memories)
+# ---------------------------------------------------------------------------
+
+def _q8_gru_kernel(n_active_ref, active_ids_ref, d_ref, w_ref, s_ref, b_ref,
+                   m_ref, h_ref, m_out_ref, h_out_ref, acc_ref, *, nbk: int,
+                   nbk_x: int, act_scale: float, act_min: float,
+                   act_max: float, lut_scale: float, lut_min: float,
+                   lut_max: float):
+    """One (o-block, k-step) cell of the int8 fused GRU layer step.
+
+    ``w_ref`` holds int8 codes (the only weight-sized HBM operand); they
+    are widened to fp32 in-register and the raw ``delta x code`` products
+    accumulate *unscaled* (the PE's integer accumulator — every addition
+    is exact for on-grid deltas). The candidate gate's partials route to
+    ``M_xc`` / ``M_hc`` on the x/h seam. The final k-step dequantizes
+    (``b + scale * acc``) and runs the Fig. 7 pipeline on the Q8.8-input /
+    Q1.n-output LUT grids, rounding the new ``h`` back onto Q8.8.
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i < n_active_ref[0])
+    def _accumulate():
+        d = d_ref[...]                               # [B, BK] on the Q8.8 grid
+        w = w_ref[...].astype(jnp.float32)           # int8 codes -> f32
+        p = jax.lax.dot_general(d, w, (((1,), (2,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        is_x = active_ids_ref[i] < nbk_x
+        acc_ref[:, 0, :] += p[:, 0, :]               # M_r codes
+        acc_ref[:, 1, :] += p[:, 1, :]               # M_u codes
+        pc = p[:, 2, :]
+        acc_ref[:, 2, :] += jnp.where(is_x, pc, 0.0)   # M_xc codes
+        acc_ref[:, 3, :] += jnp.where(is_x, 0.0, pc)   # M_hc codes
+
+    @pl.when(i == nbk - 1)
+    def _activate():
+        def q88(v):
+            return _grid_round(v, act_scale, act_min, act_max)
+
+        def lut(v):
+            return _grid_round(v, lut_scale, lut_min, lut_max)
+
+        m_new = m_ref[...].astype(jnp.float32) + acc_ref[...]  # code domain
+        s = s_ref[...].astype(jnp.float32)                     # [3, BH]
+        s4 = jnp.concatenate([s, s[2:3]], axis=0)              # c scale x2
+        msc = b_ref[...][None] + m_new * s4[None]              # dequantized
+        h_prev = h_ref[...].astype(jnp.float32)
+        r = lut(jax.nn.sigmoid(q88(msc[:, 0])))
+        u = lut(jax.nn.sigmoid(q88(msc[:, 1])))
+        c = lut(jnp.tanh(q88(msc[:, 2] + r * msc[:, 3])))
+        h_new = q88((1.0 - u) * c + u * h_prev)
+        m_out_ref[...] = m_new.astype(m_out_ref.dtype)
+        h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "input_size", "hidden_size", "block_h", "block_k", "act_scale",
+    "act_min", "act_max", "lut_scale", "lut_min", "lut_max", "interpret"))
+def _fused_q8_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
+                   h_prev: Array, dx: Array, dh: Array, *, input_size: int,
+                   hidden_size: int, block_h: int, block_k: int,
+                   act_scale: float, act_min: float, act_max: float,
+                   lut_scale: float, lut_min: float, lut_max: float,
+                   interpret: bool):
+    """One int8 fused GRU layer step on already-encoded (on-grid) deltas.
+
+    ``m_prev: [B, 4H]`` (code-domain accumulator), ``h_prev: [B, H]``,
+    ``dx: [B, I]``, ``dh: [B, H]`` -> ``(m_new: [B, 4H], h_new: [B, H])``.
+    """
+    lay = QuantDeltaLayout(w_q, scales, b4, input_size, hidden_size, block_h,
+                           block_k, act_scale, act_min, act_max, lut_scale,
+                           lut_min, lut_max, gates=3)
+    b = dx.shape[0]
+    h_dim, hp = hidden_size, lay.hp
+    nbk = lay.nbk
+    d_cat, m4, hprev, n_active, active_ids = _prep_step_operands(
+        lay, m_prev, h_prev, dx, dh)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(lay.nbo, nbk),
+        in_specs=[
+            pl.BlockSpec((b, block_k),
+                         lambda o, i, n, ids: (0, ids[i])),        # d_cat
+            pl.BlockSpec((3, block_h, block_k),
+                         lambda o, i, n, ids: (0, o, ids[i])),     # w_q (int8)
+            pl.BlockSpec((3, block_h),
+                         lambda o, i, n, ids: (0, o)),             # scales
+            pl.BlockSpec((4, block_h),
+                         lambda o, i, n, ids: (0, o)),             # b4
+            pl.BlockSpec((b, 4, block_h),
+                         lambda o, i, n, ids: (0, 0, o)),          # m_prev
+            pl.BlockSpec((b, block_h),
+                         lambda o, i, n, ids: (0, o)),             # h_prev
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 4, block_h), lambda o, i, n, ids: (0, 0, o)),
+            pl.BlockSpec((b, block_h), lambda o, i, n, ids: (0, o)),
+        ],
+        scratch_shapes=[pltpu.VMEM((b, 4, block_h), jnp.float32)],
+    )
+    m_new, h_new = pl.pallas_call(
+        functools.partial(_q8_gru_kernel, nbk=nbk, nbk_x=lay.nbk_x,
+                          act_scale=act_scale, act_min=act_min,
+                          act_max=act_max, lut_scale=lut_scale,
+                          lut_min=lut_min, lut_max=lut_max),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 4, hp), m_prev.dtype),
+            jax.ShapeDtypeStruct((b, hp), h_prev.dtype),
+        ],
+        interpret=interpret,
+    )(n_active, active_ids, d_cat, w_q, scales, b4, m4, hprev)
+    return (m_new[:, :, :h_dim].reshape(b, 4 * h_dim), h_new[:, :h_dim])
+
+
+def deltagru_q8_step(layout: QuantDeltaLayout, m_prev: Array, h_prev: Array,
+                     dx: Array, dh: Array, *, interpret: bool = True):
+    """Public int8 GRU single-step entry on encoded deltas (see
+    :func:`_fused_q8_step`)."""
+    return _fused_q8_step(layout.w_q, layout.scales, layout.b4, m_prev,
+                          h_prev, dx, dh, input_size=layout.input_size,
+                          hidden_size=layout.hidden_size,
+                          block_h=layout.block_h, block_k=layout.block_k,
+                          act_scale=layout.act_scale, act_min=layout.act_min,
+                          act_max=layout.act_max, lut_scale=layout.lut_scale,
+                          lut_min=layout.lut_min, lut_max=layout.lut_max,
+                          interpret=interpret)
+
+
+def deltagru_q8_step_ref(layout: QuantDeltaLayout, m_prev: Array,
+                         h_prev: Array, dx: Array, dh: Array):
+    """Pure-jnp oracle of the int8 GRU step (also the no-Pallas fallback).
+
+    Bit-identical to the kernel: the code-domain accumulation is exact in
+    fp32 for on-grid deltas and realistic magnitudes (products and partial
+    sums are dyadic rationals well inside the 24-bit mantissa), so the
+    summation order cannot matter; the dequant/LUT stage then performs the
+    same pointwise op sequence as the kernel.
+    """
+    b = dx.shape[0]
+    h_dim = layout.hidden_size
+    cx, ch = _ref_code_slices(layout)
+    px = jnp.einsum("bi,ghi->bgh", dx.astype(jnp.float32), cx)
+    ph = jnp.einsum("bi,ghi->bgh", dh.astype(jnp.float32), ch)
+    m = m_prev.reshape(b, 4, h_dim).astype(jnp.float32)
+    m_r = m[:, 0] + (px[:, 0] + ph[:, 0])
+    m_u = m[:, 1] + (px[:, 1] + ph[:, 1])
+    m_xc = m[:, 2] + px[:, 2]
+    m_hc = m[:, 3] + ph[:, 2]
+
+    def q88(v):
+        return _grid_round(v, layout.act_scale, layout.act_min,
+                           layout.act_max)
+
+    def lut(v):
+        return _grid_round(v, layout.lut_scale, layout.lut_min,
+                           layout.lut_max)
+
+    s = layout.scales[:, :h_dim]
+    b4 = layout.b4[:, :h_dim]
+    sc_r = b4[0] + m_r * s[0]
+    sc_u = b4[1] + m_u * s[1]
+    sc_xc = b4[2] + m_xc * s[2]
+    sc_hc = b4[3] + m_hc * s[2]
+    r = lut(jax.nn.sigmoid(q88(sc_r)))
+    u = lut(jax.nn.sigmoid(q88(sc_u)))
+    c = lut(jnp.tanh(q88(sc_xc + r * sc_hc)))
+    h_new = q88((1.0 - u) * c + u * h_prev.astype(jnp.float32))
+    m_new = jnp.stack([m_r, m_u, m_xc, m_hc], 1).reshape(b, 4 * h_dim)
+    return m_new.astype(m_prev.dtype), h_new.astype(h_prev.dtype)
+
+
+# ---------------------------------------------------------------------------
+# LSTM instantiation (gates=4, no seam routing, saturating Q8.8 cell state)
+# ---------------------------------------------------------------------------
+
+def _q8_lstm_kernel(n_active_ref, active_ids_ref, d_ref, w_ref, s_ref, b_ref,
+                    m_ref, c_ref, m_out_ref, h_out_ref, c_out_ref, acc_ref,
+                    *, nbk: int, act_scale: float, act_min: float,
+                    act_max: float, lut_scale: float, lut_min: float,
+                    lut_max: float):
+    """One (o-block, k-step) cell of the int8 fused LSTM layer step.
+
+    Same integer-accumulator semantics as the GRU kernel, but every fired
+    block feeds all four delta memories (no candidate split, so no seam
+    routing) and the activation stage is the i/f/g/o + cell-state
+    pipeline: gates on the Q1.n LUT grid, cell state ``c`` re-rounded onto
+    the Q8.8 accumulator grid every step with **saturation** at the rails
+    (the clip in :func:`_grid_round` — an int16 accumulator clips, it does
+    not wrap). Like the fp32 LSTM kernel there is no ``h_prev`` operand:
+    ``h = o * tanh(c)`` reads only the cell state.
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i < n_active_ref[0])
+    def _accumulate():
+        d = d_ref[...]                               # [B, BK] on the Q8.8 grid
+        w = w_ref[...].astype(jnp.float32)           # int8 codes -> f32
+        acc_ref[...] += jax.lax.dot_general(d, w, (((1,), (2,)), ((), ())),
+                                            preferred_element_type=jnp.float32)
+
+    @pl.when(i == nbk - 1)
+    def _activate():
+        def q88(v):
+            return _grid_round(v, act_scale, act_min, act_max)
+
+        def lut(v):
+            return _grid_round(v, lut_scale, lut_min, lut_max)
+
+        m_new = m_ref[...].astype(jnp.float32) + acc_ref[...]  # code domain
+        s = s_ref[...].astype(jnp.float32)                     # [4, BH]
+        msc = b_ref[...][None] + m_new * s[None]               # dequantized
+        c_prev = c_ref[...].astype(jnp.float32)
+        gi = lut(jax.nn.sigmoid(q88(msc[:, 0])))
+        gf = lut(jax.nn.sigmoid(q88(msc[:, 1])))
+        gg = lut(jnp.tanh(q88(msc[:, 2])))
+        go = lut(jax.nn.sigmoid(q88(msc[:, 3])))
+        c_new = q88(gf * c_prev + gi * gg)        # saturating Q8.8 accumulator
+        h_new = q88(go * lut(jnp.tanh(c_new)))
+        m_out_ref[...] = m_new.astype(m_out_ref.dtype)
+        h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+        c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "input_size", "hidden_size", "block_h", "block_k", "act_scale",
+    "act_min", "act_max", "lut_scale", "lut_min", "lut_max", "interpret"))
+def _fused_q8_lstm_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
+                        h_prev: Array, c_prev: Array, dx: Array, dh: Array,
+                        *, input_size: int, hidden_size: int, block_h: int,
+                        block_k: int, act_scale: float, act_min: float,
+                        act_max: float, lut_scale: float, lut_min: float,
+                        lut_max: float, interpret: bool):
+    """One int8 fused LSTM layer step on already-encoded (on-grid) deltas.
+
+    ``m_prev: [B, 4H]`` (code-domain accumulator), ``c_prev: [B, H]`` (on
+    the Q8.8 grid), ``dx: [B, I]``, ``dh: [B, H]`` ->
+    ``(m_new: [B, 4H], h_new: [B, H], c_new: [B, H])``.
+    """
+    lay = QuantDeltaLayout(w_q, scales, b4, input_size, hidden_size, block_h,
+                           block_k, act_scale, act_min, act_max, lut_scale,
+                           lut_min, lut_max, gates=4)
+    b = dx.shape[0]
+    h_dim, hp = hidden_size, lay.hp
+    nbk = lay.nbk
+    # the shared prologue also pads h_prev; the LSTM activation never
+    # reads it (h = o * tanh(c)), so it is simply not handed to the kernel
+    d_cat, m4, _, n_active, active_ids = _prep_step_operands(
+        lay, m_prev, h_prev, dx, dh)
+    cprev = jnp.pad(c_prev, ((0, 0), (0, hp - h_dim)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(lay.nbo, nbk),
+        in_specs=[
+            pl.BlockSpec((b, block_k),
+                         lambda o, i, n, ids: (0, ids[i])),        # d_cat
+            pl.BlockSpec((4, block_h, block_k),
+                         lambda o, i, n, ids: (0, o, ids[i])),     # w_q (int8)
+            pl.BlockSpec((4, block_h),
+                         lambda o, i, n, ids: (0, o)),             # scales
+            pl.BlockSpec((4, block_h),
+                         lambda o, i, n, ids: (0, o)),             # b4
+            pl.BlockSpec((b, 4, block_h),
+                         lambda o, i, n, ids: (0, 0, o)),          # m_prev
+            pl.BlockSpec((b, block_h),
+                         lambda o, i, n, ids: (0, o)),             # c_prev
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 4, block_h), lambda o, i, n, ids: (0, 0, o)),
+            pl.BlockSpec((b, block_h), lambda o, i, n, ids: (0, o)),
+            pl.BlockSpec((b, block_h), lambda o, i, n, ids: (0, o)),
+        ],
+        scratch_shapes=[pltpu.VMEM((b, 4, block_h), jnp.float32)],
+    )
+    m_new, h_new, c_new = pl.pallas_call(
+        functools.partial(_q8_lstm_kernel, nbk=nbk,
+                          act_scale=act_scale, act_min=act_min,
+                          act_max=act_max, lut_scale=lut_scale,
+                          lut_min=lut_min, lut_max=lut_max),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 4, hp), m_prev.dtype),
+            jax.ShapeDtypeStruct((b, hp), h_prev.dtype),
+            jax.ShapeDtypeStruct((b, hp), c_prev.dtype),
+        ],
+        interpret=interpret,
+    )(n_active, active_ids, d_cat, w_q, scales, b4, m4, cprev)
+    return (m_new[:, :, :h_dim].reshape(b, 4 * h_dim), h_new[:, :h_dim],
+            c_new[:, :h_dim])
+
+
+def deltalstm_q8_step(layout: QuantDeltaLayout, m_prev: Array, h_prev: Array,
+                      c_prev: Array, dx: Array, dh: Array, *,
+                      interpret: bool = True):
+    """Public int8 LSTM single-step entry on encoded deltas (see
+    :func:`_fused_q8_lstm_step`)."""
+    return _fused_q8_lstm_step(
+        layout.w_q, layout.scales, layout.b4, m_prev, h_prev, c_prev, dx, dh,
+        input_size=layout.input_size, hidden_size=layout.hidden_size,
+        block_h=layout.block_h, block_k=layout.block_k,
+        act_scale=layout.act_scale, act_min=layout.act_min,
+        act_max=layout.act_max, lut_scale=layout.lut_scale,
+        lut_min=layout.lut_min, lut_max=layout.lut_max, interpret=interpret)
+
+
+def deltalstm_q8_step_ref(layout: QuantDeltaLayout, m_prev: Array,
+                          h_prev: Array, c_prev: Array, dx: Array,
+                          dh: Array):
+    """Pure-jnp oracle of the int8 LSTM step (also the no-Pallas fallback).
+
+    Bit-identical to the kernel for the same reason as the GRU oracle: the
+    code-domain accumulation is exact in fp32 for on-grid deltas, and the
+    dequant / LUT / cell-state stage is the same pointwise op sequence.
+    """
+    b = dx.shape[0]
+    h_dim = layout.hidden_size
+    cx, ch = _ref_code_slices(layout)
+    px = jnp.einsum("bi,ghi->bgh", dx.astype(jnp.float32), cx)
+    ph = jnp.einsum("bi,ghi->bgh", dh.astype(jnp.float32), ch)
+    m = m_prev.reshape(b, 4, h_dim).astype(jnp.float32) + (px + ph)
+
+    def q88(v):
+        return _grid_round(v, layout.act_scale, layout.act_min,
+                           layout.act_max)
+
+    def lut(v):
+        return _grid_round(v, layout.lut_scale, layout.lut_min,
+                           layout.lut_max)
+
+    s = layout.scales[:, :h_dim]
+    b4 = layout.b4[:, :h_dim]
+    gi = lut(jax.nn.sigmoid(q88(b4[0] + m[:, 0] * s[0])))
+    gf = lut(jax.nn.sigmoid(q88(b4[1] + m[:, 1] * s[1])))
+    gg = lut(jnp.tanh(q88(b4[2] + m[:, 2] * s[2])))
+    go = lut(jax.nn.sigmoid(q88(b4[3] + m[:, 3] * s[3])))
+    c_new = q88(gf * c_prev.astype(jnp.float32) + gi * gg)
+    h_new = q88(go * lut(jnp.tanh(c_new)))
+    m_new = m.reshape(b, 4 * h_dim)
+    return (m_new.astype(m_prev.dtype), h_new.astype(h_prev.dtype),
+            c_new.astype(c_prev.dtype))

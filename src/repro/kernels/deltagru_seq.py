@@ -31,27 +31,13 @@ dispatch, packing each layer's layout once outside the scan.
 Quantized variant (``backend="fused_q8"``, paper Sec. IV-A + Fig. 6/7)
 ----------------------------------------------------------------------
 
-:func:`pack_spmv_weights_q8` packs the same ``[3, Hp, Ip+Hk]`` volume as
-**int8 codes** with per-gate-row scales, so the kernel's HBM weight operand
-is 1 byte/element — the 4x bytes-per-column cut that, together with delta
-column skipping, sets the paper's effective-throughput numbers. The
-fixed-point semantics follow the hardware:
-
-* deltas arrive on the Q8.8 activation grid (the driver quantizes the
-  input stream; hidden states are produced on-grid), so every
-  ``delta x code`` product is an exact dyadic rational in fp32;
-* the delta memories ``M`` carry **unscaled code-domain partial sums**
-  (the PE's integer accumulator): all cross-step and cross-block
-  additions are exact, which makes the Pallas kernel, the jnp reference
-  and any other summation order *bit-identical*;
-* at the activation stage the accumulator is dequantized in-register
-  (``b + scale * M``, one multiply + one add per element) and pushed
-  through the Q8.8-input / Q1.n-output LUT grid of
-  :mod:`repro.quant.lut`, then the new ``h`` is rounded back onto Q8.8.
-
-All LUT/grid constants (activation scale, LUT scale, clip bounds, the
-quantized bias row) are baked into the :class:`QuantGruLayout` at pack
-time — the per-step path does no table or format construction.
+The int8 pipeline — block geometry, quantizing packer, code-domain
+integer-accumulator kernel, Q8.8/Q1.n LUT activation stage — lives in the
+**cell-agnostic core** :mod:`repro.kernels.delta_q8` (it serves the LSTM
+family too); this module re-exports the GRU-pinned spellings
+(:class:`QuantGruLayout`, :func:`pack_spmv_weights_q8`,
+:func:`deltagru_q8_step`, :func:`deltagru_q8_step_ref`) so every
+historical import keeps working.
 """
 from __future__ import annotations
 
@@ -63,40 +49,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Shared cell-agnostic core: block geometry, concatenated-column pack,
+# per-step Delta-Unit prologue, and the whole int8 pipeline. Names are
+# re-exported here for compatibility — new code should import them from
+# repro.kernels.delta_q8 directly.
+from repro.kernels.delta_q8 import (  # noqa: F401  (re-exports)
+    QuantDeltaLayout, _grid_round, _GruBlockGeometry, _prep_step_operands,
+    deltagru_q8_step, deltagru_q8_step_ref, pack_cat_volume,
+    pack_delta_weights_q8)
+
 Array = jax.Array
 
-
-class _GruBlockGeometry:
-    """Shared block geometry of the Fig. 6 concatenated layout.
-
-    Mixin over any layout dataclass carrying ``input_size``,
-    ``hidden_size``, ``block_h``, ``block_k`` — the fp32 and int8 packs
-    must agree on this arithmetic or their kernels' seams diverge.
-    """
-
-    @property
-    def ip(self) -> int:          # padded input k-extent
-        return self.input_size + (-self.input_size) % self.block_k
-
-    @property
-    def hk(self) -> int:          # padded hidden k-extent
-        return self.hidden_size + (-self.hidden_size) % self.block_k
-
-    @property
-    def hp(self) -> int:          # padded hidden (output) extent
-        return self.hidden_size + (-self.hidden_size) % self.block_h
-
-    @property
-    def nbk_x(self) -> int:
-        return self.ip // self.block_k
-
-    @property
-    def nbk(self) -> int:
-        return (self.ip + self.hk) // self.block_k
-
-    @property
-    def nbo(self) -> int:
-        return self.hp // self.block_h
+# GRU-pinned alias: gates defaults to 3 on the shared layout, so the
+# historical class name keeps meaning exactly what it always did.
+QuantGruLayout = QuantDeltaLayout
 
 
 @dataclass(frozen=True)
@@ -129,27 +95,6 @@ jax.tree_util.register_pytree_node(
                                    block_k=aux[3]))
 
 
-def pack_cat_volume(w_x: Array, w_h: Array, gates: int, block_h: int,
-                    block_k: int) -> Array:
-    """The Fig. 6 concatenated-column pack, gate-count-parameterized.
-
-    ``w_x: [gH, I]``, ``w_h: [gH, H]`` -> ``[g, Hp, Ip + Hk]``: gate-major
-    rows, hidden dim padded to ``block_h``, input columns then hidden
-    columns each padded to ``block_k`` (block-aligned x/h seam). This is
-    the ONE copy of the seam/pad arithmetic every cell's packer must agree
-    on — the GRU (g=3) and LSTM (g=4) layouts both call it.
-    """
-    i_dim, h_dim = w_x.shape[-1], w_h.shape[-1]
-    hp = h_dim + (-h_dim) % block_h
-    ip = i_dim + (-i_dim) % block_k
-    hk = h_dim + (-h_dim) % block_k
-    wxg = jnp.pad(w_x.reshape(gates, h_dim, i_dim),
-                  ((0, 0), (0, hp - h_dim), (0, ip - i_dim)))
-    whg = jnp.pad(w_h.reshape(gates, h_dim, h_dim),
-                  ((0, 0), (0, hp - h_dim), (0, hk - h_dim)))
-    return jnp.concatenate([wxg, whg], axis=2)
-
-
 def pack_gru_layer(w_x: Array, w_h: Array, block_h: int = 128,
                    block_k: int = 128) -> FusedGruLayout:
     """Pack ``w_x: [3H, I]`` and ``w_h: [3H, H]`` into the fused layout."""
@@ -160,27 +105,6 @@ def pack_gru_layer(w_x: Array, w_h: Array, block_h: int = 128,
                           block_k=block_k),
         input_size=i_dim, hidden_size=h_dim,
         block_h=block_h, block_k=block_k)
-
-
-def _prep_step_operands(lay: _GruBlockGeometry, m_prev: Array, h_prev: Array,
-                        dx: Array, dh: Array):
-    """Shared per-step prologue of both fused kernels: pad the operands to
-    the block grid, concatenate the deltas across the x/h seam, and run the
-    single fired-block compaction (the Delta Unit's job — elementwise,
-    activation-sized, never weight-sized)."""
-    b = dx.shape[0]
-    h_dim, hp = lay.hidden_size, lay.hp
-    d_cat = jnp.concatenate([
-        jnp.pad(dx, ((0, 0), (0, lay.ip - lay.input_size))),
-        jnp.pad(dh, ((0, 0), (0, lay.hk - h_dim)))], axis=1)
-    m4 = jnp.pad(m_prev.reshape(b, 4, h_dim),
-                 ((0, 0), (0, 0), (0, hp - h_dim)))
-    hprev = jnp.pad(h_prev, ((0, 0), (0, hp - h_dim)))
-    fired = jnp.any(d_cat.reshape(b, lay.nbk, lay.block_k) != 0, axis=(0, 2))
-    n_active = jnp.sum(fired).astype(jnp.int32).reshape((1,))
-    active_ids = jnp.nonzero(fired, size=lay.nbk,
-                             fill_value=0)[0].astype(jnp.int32)
-    return d_cat, m4, hprev, n_active, active_ids
 
 
 def _kernel(n_active_ref, active_ids_ref, d_ref, w_ref, m_ref, h_ref,
@@ -303,305 +227,18 @@ def deltagru_seq_step_ref(layout: FusedGruLayout, m_prev: Array,
     return m_new.astype(m_prev.dtype), h_new.astype(h_prev.dtype)
 
 
-# ---------------------------------------------------------------------------
-# Quantized (int8 weights / Q8.8 activations / LUT nonlinearities) variant
-# ---------------------------------------------------------------------------
-
-def _grid_round(v, scale: float, vmin: float, vmax: float):
-    """Round onto a Qm.n grid, then clip — the exact op sequence of
-    :func:`repro.quant.fake_quant.quantize`, shared by the Pallas kernel
-    body and the jnp reference so both round identically."""
-    q = jnp.round(v * scale) / scale
-    return jnp.clip(q, vmin, vmax)
-
-
-@dataclass(frozen=True)
-class QuantGruLayout(_GruBlockGeometry):
-    """One DeltaGRU layer packed for the int8 fused kernel.
-
-    ``w_q`` is the Fig. 6 ``[3, Hp, Ip + Hk]`` volume as **int8 codes**
-    (the kernel's HBM operand — 1 byte/element); ``scales: [3, Hp]`` holds
-    the per-gate-row symmetric dequant scales; ``b4: [4, Hp]`` is the bias
-    quantized onto the activation grid and expanded to the four delta
-    memories (``b_r, b_u, b_c, 0``) — consumed at the activation stage,
-    never accumulated (the M state for this backend is the PE's unscaled
-    integer accumulator). ``w_codes_f32`` is an optional pre-converted
-    fp32 copy of the codes for the off-TPU jnp emulation path, built at
-    pack time so the per-step scan body does no int8->f32 conversion.
-
-    The activation/LUT grid constants (``act_*``, ``lut_*``) are plain
-    Python floats fixed at pack time: the jitted step closes over them,
-    adding zero per-timestep host work.
-    """
-
-    w_q: Array                  # int8 [3, Hp, Ip+Hk]
-    scales: Array               # f32  [3, Hp]
-    b4: Array                   # f32  [4, Hp] (activation-grid bias)
-    input_size: int
-    hidden_size: int
-    block_h: int
-    block_k: int
-    act_scale: float            # Q8.8 grid: 256.0
-    act_min: float
-    act_max: float
-    lut_scale: float            # Q1.n LUT output grid: 2**n
-    lut_min: float
-    lut_max: float
-    w_codes_f32: Array | None = None
-
-    def quantize_act(self, x: Array) -> Array:
-        """Round onto the activation (Q8.8) grid — the Delta Unit's input."""
-        return _grid_round(x, self.act_scale, self.act_min, self.act_max)
-
-    def dequantized(self) -> FusedGruLayout:
-        """fp32 :class:`FusedGruLayout` carrying the same quantized values."""
-        w = self.w_q.astype(jnp.float32) * self.scales[:, :, None]
-        return FusedGruLayout(w=w, input_size=self.input_size,
-                              hidden_size=self.hidden_size,
-                              block_h=self.block_h, block_k=self.block_k)
-
-
-jax.tree_util.register_pytree_node(
-    QuantGruLayout,
-    lambda l: ((l.w_q, l.scales, l.b4, l.w_codes_f32),
-               (l.input_size, l.hidden_size, l.block_h, l.block_k,
-                l.act_scale, l.act_min, l.act_max,
-                l.lut_scale, l.lut_min, l.lut_max)),
-    lambda aux, ch: QuantGruLayout(
-        w_q=ch[0], scales=ch[1], b4=ch[2], w_codes_f32=ch[3],
-        input_size=aux[0], hidden_size=aux[1], block_h=aux[2],
-        block_k=aux[3], act_scale=aux[4], act_min=aux[5], act_max=aux[6],
-        lut_scale=aux[7], lut_min=aux[8], lut_max=aux[9]))
-
-
 def pack_spmv_weights_q8(w_x: Array, w_h: Array, b: Array | None = None,
                          block_h: int = 128, block_k: int = 128,
                          act_frac_bits: int = 8, act_int_bits: int = 8,
                          lut_frac_bits: int = 4,
                          with_ref_codes: bool | None = None) -> QuantGruLayout:
-    """Quantize + pack one layer into the int8 Fig. 6 runtime layout.
-
-    Per-gate-row symmetric quantization: ``scale[g, o] = absmax(w[g, o, :])
-    / 127`` over the concatenated (x then h) row, codes clipped to
-    ``[-127, 127]`` so the grid is symmetric. Rows that are entirely zero
-    (including Hp padding rows) get scale ``1/127`` and all-zero codes.
-
-    ``with_ref_codes=None`` auto-builds the fp32 code copy off-TPU only
-    (the jnp emulation path needs it hoisted out of the scan; a TPU run
-    streams the int8 volume directly and never materializes it).
-    """
-    three_h, i_dim = w_x.shape
-    h_dim = w_h.shape[-1]
-    assert three_h == 3 * h_dim and w_h.shape[0] == 3 * h_dim
-    hp = h_dim + (-h_dim) % block_h
-    ip = i_dim + (-i_dim) % block_k
-    hk = h_dim + (-h_dim) % block_k
-    wx3 = jnp.pad(w_x.reshape(3, h_dim, i_dim).astype(jnp.float32),
-                  ((0, 0), (0, hp - h_dim), (0, ip - i_dim)))
-    wh3 = jnp.pad(w_h.reshape(3, h_dim, h_dim).astype(jnp.float32),
-                  ((0, 0), (0, hp - h_dim), (0, hk - h_dim)))
-    w3 = jnp.concatenate([wx3, wh3], axis=2)          # [3, Hp, Ip+Hk]
-    absmax = jnp.max(jnp.abs(w3), axis=2)             # [3, Hp]
-    scales = jnp.where(absmax > 0, absmax, 1.0) / 127.0
-    codes = jnp.clip(jnp.round(w3 / scales[:, :, None]), -127.0, 127.0)
-    w_q = codes.astype(jnp.int8)
-
-    act_scale = float(2 ** act_frac_bits)
-    act_min = -float(2 ** act_int_bits)
-    act_max = float(2 ** act_int_bits) - 1.0 / act_scale
-    lut_scale = float(2 ** lut_frac_bits)
-    lut_min, lut_max = -2.0, 2.0 - 1.0 / lut_scale    # Q1.n output grid
-
-    if b is None:
-        b4 = jnp.zeros((4, hp), jnp.float32)
-    else:
-        b3 = b.astype(jnp.float32).reshape(3, h_dim)
-        b3 = jnp.clip(jnp.round(b3 * act_scale) / act_scale, act_min, act_max)
-        b4 = jnp.pad(jnp.concatenate(
-            [b3, jnp.zeros((1, h_dim), jnp.float32)]),
-            ((0, 0), (0, hp - h_dim)))
-    if with_ref_codes is None:
-        with_ref_codes = jax.default_backend() != "tpu"
-    return QuantGruLayout(
-        w_q=w_q, scales=scales, b4=b4, input_size=i_dim, hidden_size=h_dim,
-        block_h=block_h, block_k=block_k,
-        act_scale=act_scale, act_min=act_min, act_max=act_max,
-        lut_scale=lut_scale, lut_min=lut_min, lut_max=lut_max,
-        w_codes_f32=codes if with_ref_codes else None)
-
-
-def _q8_kernel(n_active_ref, active_ids_ref, d_ref, w_ref, s_ref, b_ref,
-               m_ref, h_ref, m_out_ref, h_out_ref, acc_ref, *, nbk: int,
-               nbk_x: int, act_scale: float, act_min: float, act_max: float,
-               lut_scale: float, lut_min: float, lut_max: float):
-    """One (o-block, k-step) cell of the int8 fused layer step.
-
-    ``w_ref`` holds int8 codes (the only weight-sized HBM operand); they
-    are widened to fp32 in-register and the raw ``delta x code`` products
-    accumulate *unscaled* (the PE's integer accumulator — every addition
-    is exact for on-grid deltas). The final k-step dequantizes
-    (``b + scale * acc``) and runs the Fig. 7 pipeline on the Q8.8-input /
-    Q1.n-output LUT grids, rounding the new ``h`` back onto Q8.8.
-    """
-    i = pl.program_id(1)
-
-    @pl.when(i == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    @pl.when(i < n_active_ref[0])
-    def _accumulate():
-        d = d_ref[...]                               # [B, BK] on the Q8.8 grid
-        w = w_ref[...].astype(jnp.float32)           # int8 codes -> f32
-        p = jax.lax.dot_general(d, w, (((1,), (2,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        is_x = active_ids_ref[i] < nbk_x
-        acc_ref[:, 0, :] += p[:, 0, :]               # M_r codes
-        acc_ref[:, 1, :] += p[:, 1, :]               # M_u codes
-        pc = p[:, 2, :]
-        acc_ref[:, 2, :] += jnp.where(is_x, pc, 0.0)   # M_xc codes
-        acc_ref[:, 3, :] += jnp.where(is_x, 0.0, pc)   # M_hc codes
-
-    @pl.when(i == nbk - 1)
-    def _activate():
-        def q88(v):
-            return _grid_round(v, act_scale, act_min, act_max)
-
-        def lut(v):
-            return _grid_round(v, lut_scale, lut_min, lut_max)
-
-        m_new = m_ref[...].astype(jnp.float32) + acc_ref[...]  # code domain
-        s = s_ref[...].astype(jnp.float32)                     # [3, BH]
-        s4 = jnp.concatenate([s, s[2:3]], axis=0)              # c scale x2
-        msc = b_ref[...][None] + m_new * s4[None]              # dequantized
-        h_prev = h_ref[...].astype(jnp.float32)
-        r = lut(jax.nn.sigmoid(q88(msc[:, 0])))
-        u = lut(jax.nn.sigmoid(q88(msc[:, 1])))
-        c = lut(jnp.tanh(q88(msc[:, 2] + r * msc[:, 3])))
-        h_new = q88((1.0 - u) * c + u * h_prev)
-        m_out_ref[...] = m_new.astype(m_out_ref.dtype)
-        h_out_ref[...] = h_new.astype(h_out_ref.dtype)
-
-
-@functools.partial(jax.jit, static_argnames=(
-    "input_size", "hidden_size", "block_h", "block_k", "act_scale",
-    "act_min", "act_max", "lut_scale", "lut_min", "lut_max", "interpret"))
-def _fused_q8_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
-                   h_prev: Array, dx: Array, dh: Array, *, input_size: int,
-                   hidden_size: int, block_h: int, block_k: int,
-                   act_scale: float, act_min: float, act_max: float,
-                   lut_scale: float, lut_min: float, lut_max: float,
-                   interpret: bool):
-    """One int8 fused layer step on already-encoded (on-grid) deltas.
-
-    ``m_prev: [B, 4H]`` (code-domain accumulator), ``h_prev: [B, H]``,
-    ``dx: [B, I]``, ``dh: [B, H]`` -> ``(m_new: [B, 4H], h_new: [B, H])``.
-    """
-    lay = QuantGruLayout(w_q, scales, b4, input_size, hidden_size, block_h,
-                         block_k, act_scale, act_min, act_max, lut_scale,
-                         lut_min, lut_max)
-    b = dx.shape[0]
-    h_dim, hp = hidden_size, lay.hp
-    nbk = lay.nbk
-    d_cat, m4, hprev, n_active, active_ids = _prep_step_operands(
-        lay, m_prev, h_prev, dx, dh)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(lay.nbo, nbk),
-        in_specs=[
-            pl.BlockSpec((b, block_k),
-                         lambda o, i, n, ids: (0, ids[i])),        # d_cat
-            pl.BlockSpec((3, block_h, block_k),
-                         lambda o, i, n, ids: (0, o, ids[i])),     # w_q (int8)
-            pl.BlockSpec((3, block_h),
-                         lambda o, i, n, ids: (0, o)),             # scales
-            pl.BlockSpec((4, block_h),
-                         lambda o, i, n, ids: (0, o)),             # b4
-            pl.BlockSpec((b, 4, block_h),
-                         lambda o, i, n, ids: (0, 0, o)),          # m_prev
-            pl.BlockSpec((b, block_h),
-                         lambda o, i, n, ids: (0, o)),             # h_prev
-        ],
-        out_specs=[
-            pl.BlockSpec((b, 4, block_h), lambda o, i, n, ids: (0, 0, o)),
-            pl.BlockSpec((b, block_h), lambda o, i, n, ids: (0, o)),
-        ],
-        scratch_shapes=[pltpu.VMEM((b, 4, block_h), jnp.float32)],
-    )
-    m_new, h_new = pl.pallas_call(
-        functools.partial(_q8_kernel, nbk=nbk, nbk_x=lay.nbk_x,
-                          act_scale=act_scale, act_min=act_min,
-                          act_max=act_max, lut_scale=lut_scale,
-                          lut_min=lut_min, lut_max=lut_max),
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((b, 4, hp), m_prev.dtype),
-            jax.ShapeDtypeStruct((b, hp), h_prev.dtype),
-        ],
-        interpret=interpret,
-    )(n_active, active_ids, d_cat, w_q, scales, b4, m4, hprev)
-    return (m_new[:, :, :h_dim].reshape(b, 4 * h_dim), h_new[:, :h_dim])
-
-
-def deltagru_q8_step(layout: QuantGruLayout, m_prev: Array, h_prev: Array,
-                     dx: Array, dh: Array, *, interpret: bool = True):
-    """Public int8 single-step entry on encoded deltas (see
-    :func:`_fused_q8_step`)."""
-    return _fused_q8_step(layout.w_q, layout.scales, layout.b4, m_prev,
-                          h_prev, dx, dh, input_size=layout.input_size,
-                          hidden_size=layout.hidden_size,
-                          block_h=layout.block_h, block_k=layout.block_k,
-                          act_scale=layout.act_scale, act_min=layout.act_min,
-                          act_max=layout.act_max, lut_scale=layout.lut_scale,
-                          lut_min=layout.lut_min, lut_max=layout.lut_max,
-                          interpret=interpret)
-
-
-def deltagru_q8_step_ref(layout: QuantGruLayout, m_prev: Array,
-                         h_prev: Array, dx: Array, dh: Array):
-    """Pure-jnp oracle of the int8 fused step (also the no-Pallas fallback).
-
-    Bit-identical to the kernel: the code-domain accumulation is exact in
-    fp32 for on-grid deltas and realistic magnitudes (products and partial
-    sums are dyadic rationals well inside the 24-bit mantissa), so the
-    summation order cannot matter; the dequant/LUT stage then performs the
-    same pointwise op sequence as the kernel.
-    """
-    b = dx.shape[0]
-    h_dim = layout.hidden_size
-    codes = (layout.w_codes_f32 if layout.w_codes_f32 is not None
-             else layout.w_q.astype(jnp.float32))
-    cx = codes[:, :h_dim, :layout.input_size]            # [3, H, I]
-    ch = codes[:, :h_dim, layout.ip:layout.ip + h_dim]   # [3, H, H]
-    px = jnp.einsum("bi,ghi->bgh", dx.astype(jnp.float32), cx)
-    ph = jnp.einsum("bi,ghi->bgh", dh.astype(jnp.float32), ch)
-    m = m_prev.reshape(b, 4, h_dim).astype(jnp.float32)
-    m_r = m[:, 0] + (px[:, 0] + ph[:, 0])
-    m_u = m[:, 1] + (px[:, 1] + ph[:, 1])
-    m_xc = m[:, 2] + px[:, 2]
-    m_hc = m[:, 3] + ph[:, 2]
-
-    def q88(v):
-        return _grid_round(v, layout.act_scale, layout.act_min,
-                           layout.act_max)
-
-    def lut(v):
-        return _grid_round(v, layout.lut_scale, layout.lut_min,
-                           layout.lut_max)
-
-    s = layout.scales[:, :h_dim]
-    b4 = layout.b4[:, :h_dim]
-    sc_r = b4[0] + m_r * s[0]
-    sc_u = b4[1] + m_u * s[1]
-    sc_xc = b4[2] + m_xc * s[2]
-    sc_hc = b4[3] + m_hc * s[2]
-    r = lut(jax.nn.sigmoid(q88(sc_r)))
-    u = lut(jax.nn.sigmoid(q88(sc_u)))
-    c = lut(jnp.tanh(q88(sc_xc + r * sc_hc)))
-    h_new = q88((1.0 - u) * c + u * h_prev.astype(jnp.float32))
-    m_new = jnp.stack([m_r, m_u, m_xc, m_hc], 1).reshape(b, 4 * h_dim)
-    return m_new.astype(m_prev.dtype), h_new.astype(h_prev.dtype)
+    """GRU-pinned spelling of the cell-agnostic quantizing packer
+    (:func:`repro.kernels.delta_q8.pack_delta_weights_q8` with
+    ``gates=3``); kept so the historical GRU export path reads the same."""
+    return pack_delta_weights_q8(
+        w_x, w_h, b=b, gates=3, block_h=block_h, block_k=block_k,
+        act_frac_bits=act_frac_bits, act_int_bits=act_int_bits,
+        lut_frac_bits=lut_frac_bits, with_ref_codes=with_ref_codes)
 
 
 # The lax.scan sequence/stack drivers over these kernels live in

@@ -27,6 +27,13 @@ The ``lax.scan`` sequence/stack drivers live in
 :func:`repro.core.deltalstm.deltalstm_sequence` (``backend="fused"``),
 packing each layer's layout once outside the scan, exactly like the GRU
 drivers.
+
+Quantized variant (``backend="fused_q8"``): the int8 4-gate pipeline —
+``[4, Hp, Ip+Hk]`` int8 codes, code-domain integer accumulators, Q8.8/Q1.n
+LUT activations, saturating Q8.8 cell state — lives in the cell-agnostic
+core :mod:`repro.kernels.delta_q8`; this module re-exports the LSTM
+spellings (:class:`QuantLstmLayout`, :func:`pack_lstm_weights_q8`,
+:func:`deltalstm_q8_step`, :func:`deltalstm_q8_step_ref`).
 """
 from __future__ import annotations
 
@@ -38,9 +45,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.deltagru_seq import _GruBlockGeometry, _prep_step_operands
+from repro.kernels.delta_q8 import (  # noqa: F401  (re-exports)
+    QuantDeltaLayout, _GruBlockGeometry, _prep_step_operands,
+    deltalstm_q8_step, deltalstm_q8_step_ref, pack_cat_volume,
+    pack_delta_weights_q8)
 
 Array = jax.Array
+
+# LSTM-pinned alias of the shared quantized layout (``gates=4`` instances;
+# see :mod:`repro.kernels.delta_q8` for the int8 pipeline itself).
+QuantLstmLayout = QuantDeltaLayout
+
+
+def pack_lstm_weights_q8(w_x: Array, w_h: Array, b: Array | None = None,
+                         block_h: int = 128, block_k: int = 128,
+                         act_frac_bits: int = 8, act_int_bits: int = 8,
+                         lut_frac_bits: int = 4,
+                         with_ref_codes: bool | None = None
+                         ) -> QuantDeltaLayout:
+    """LSTM spelling of the cell-agnostic quantizing packer
+    (:func:`repro.kernels.delta_q8.pack_delta_weights_q8`, ``gates=4``)."""
+    return pack_delta_weights_q8(
+        w_x, w_h, b=b, gates=4, block_h=block_h, block_k=block_k,
+        act_frac_bits=act_frac_bits, act_int_bits=act_int_bits,
+        lut_frac_bits=lut_frac_bits, with_ref_codes=with_ref_codes)
 
 
 @dataclass(frozen=True)
@@ -77,8 +105,7 @@ def pack_lstm_layer(w_x: Array, w_h: Array, block_h: int = 128,
                     block_k: int = 128) -> FusedLstmLayout:
     """Pack ``w_x: [4H, I]`` and ``w_h: [4H, H]`` into the fused layout
     (the same seam/pad arithmetic as the GRU packer, shared via
-    :func:`~repro.kernels.deltagru_seq.pack_cat_volume`)."""
-    from repro.kernels.deltagru_seq import pack_cat_volume
+    :func:`~repro.kernels.delta_q8.pack_cat_volume`)."""
     i_dim, h_dim = w_x.shape[-1], w_h.shape[-1]
     assert w_x.shape[0] == 4 * h_dim and w_h.shape[0] == 4 * h_dim
     return FusedLstmLayout(

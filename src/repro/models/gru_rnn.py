@@ -91,7 +91,8 @@ def gru_model_forward(params, cfg: GruTaskConfig, xs: Array, *,
     QAT (training-time fake quant) and ``fused_q8`` (inference-time real
     int8) are two sides of the same recipe: train with ``qat=EDGEDRNN_QAT``
     on ``dense``, then export with
-    :func:`repro.quant.export.quantize_gru_model` and run the returned
+    :func:`repro.quant.export.quantize_delta_model` (cell-agnostic;
+    ``quantize_gru_model`` is the GRU spelling) and run the returned
     program."""
     if program is not None:
         if backend is not None or layouts is not None:

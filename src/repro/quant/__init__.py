@@ -1,10 +1,14 @@
 """Fixed-point quantization: training-side fake quant (Sec. IV-A) and the
-inference-side exporter into the ``fused_q8`` packed int8 runtime format
-(:func:`repro.quant.export.quantize_stack`)."""
+cell-agnostic inference-side exporter into the ``fused_q8`` packed int8
+runtime format (:func:`repro.quant.export.quantize_delta_stack` /
+:func:`repro.quant.export.quantize_delta_model`; ``quantize_stack`` and
+``quantize_gru_model`` are the GRU-pinned spellings)."""
 from repro.quant.fake_quant import QFormat, fake_quant, quantize, dequantize
 from repro.quant.lut import LutNonlinearity, lut_sigmoid, lut_tanh
-from repro.quant.export import quantize_gru_model, quantize_stack
+from repro.quant.export import (quantize_delta_model, quantize_delta_stack,
+                                quantize_gru_model, quantize_stack)
 
 __all__ = ["QFormat", "fake_quant", "quantize", "dequantize",
            "LutNonlinearity", "lut_sigmoid", "lut_tanh",
+           "quantize_delta_stack", "quantize_delta_model",
            "quantize_stack", "quantize_gru_model"]

@@ -1,57 +1,86 @@
-"""Export trained GRU stacks into the packed int8 runtime format.
+"""Export trained delta-RNN stacks into the packed int8 runtime format.
 
 This is the bridge from the training-side QAT fiction (fp32 tensors that
 merely *carry* a Qm.n grid, :mod:`repro.quant.fake_quant`) to the inference
-hot path: :func:`quantize_stack` converts a trained fp32 or QAT
-``GruLayerParams`` stack into
+hot path, for ANY registered cell family: :func:`quantize_delta_stack`
+converts a trained fp32 or QAT layer stack into
 
-* per-layer :class:`~repro.kernels.deltagru_seq.QuantGruLayout` packs —
-  the Fig. 6 ``[3, Hp, Ip+Hk]`` weight volume as **int8 codes** plus
+* per-layer :class:`~repro.kernels.delta_q8.QuantDeltaLayout` packs — the
+  Fig. 6 ``[gates, Hp, Ip+Hk]`` weight volume as **int8 codes** plus
   per-gate-row scales and the activation-grid bias, i.e. exactly what the
-  ``backend="fused_q8"`` kernel streams from HBM; and
+  ``backend="fused_q8"`` kernels stream from HBM (3 gate rows for GRU,
+  4 for LSTM); and
 * a matching "fake-quant view" parameter stack whose fp32 values are the
   dequantized codes (for oracles, dense-backend comparisons and state
   init), with biases rounded onto the Q8.8 activation grid.
 
-Entry points: :func:`quantize_stack` (a list of ``GruLayerParams``; the
-layer-level exporter, returns the loose ``(qparams, layouts)`` pair) and
-:func:`quantize_gru_model` (the ``init_gru_model`` params dict; returns a
-ready-to-run :class:`~repro.core.program.DeltaGruProgram` — the output
-head stays fp32 inside it, matching the paper's FPGA/ARM split where the
-classifier runs on the CPU).
+Entry points:
+
+* :func:`quantize_delta_stack` — a list of per-layer params
+  (``GruLayerParams`` / ``LstmLayerParams``) + ``cell=``; returns the
+  loose ``(qparams, layouts)`` pair.
+* :func:`quantize_delta_model` — an ``init_gru_model`` /
+  ``init_lstm_model`` params dict (cell inferred from its ``"gru"`` /
+  ``"lstm"`` key, or forced with ``cell=``); returns a ready-to-run
+  ``backend="fused_q8"`` :class:`~repro.core.program.DeltaProgram`. The
+  output head stays fp32 inside it, matching the paper's FPGA/ARM split
+  where the classifier runs on the CPU.
+* :func:`quantize_stack` / :func:`quantize_gru_model` — the historical
+  GRU-pinned spellings (thin aliases). ``quantize_gru_model`` now rejects
+  a non-GRU model dict loudly: the old code would have mis-packed an
+  LSTM's 4 gate rows as 3.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.deltagru_seq import QuantGruLayout, pack_spmv_weights_q8
+from repro.core.sparsity import CELL_GATES
+from repro.kernels.delta_q8 import QuantDeltaLayout, pack_delta_weights_q8
 
 
-def quantize_stack(params, block: int = 128, act_frac_bits: int = 8,
-                   act_int_bits: int = 8, lut_frac_bits: int = 4,
-                   with_ref_codes: bool | None = None):
-    """Quantize a trained GRU stack into the packed q8 runtime format.
+def quantize_delta_stack(params, cell: str = "gru", block: int = 128,
+                         act_frac_bits: int = 8, act_int_bits: int = 8,
+                         lut_frac_bits: int = 4,
+                         with_ref_codes: bool | None = None):
+    """Quantize a trained delta-RNN stack into the packed q8 runtime format.
 
     Args:
-      params: sequence of :class:`repro.core.deltagru.GruLayerParams`
-        (fp32 or QAT-trained — QAT weights are already near the int8 grid,
-        so requantization is a no-op up to fp rounding).
+      params: sequence of per-layer params of the given cell family
+        (:class:`repro.core.deltagru.GruLayerParams` /
+        :class:`repro.core.deltalstm.LstmLayerParams`, fp32 or QAT-trained
+        — QAT weights are already near the int8 grid, so requantization is
+        a no-op up to fp rounding).
+      cell: cell family (``"gru"`` / ``"lstm"``) — sets the gate-row count
+        of the packed volume. A stack whose gate rows don't match the
+        cell's gate count is rejected (packing 4 gate rows as 3 would
+        silently scramble every gate past the first).
       block: kernel block size (``block_h == block_k``).
       act_frac_bits / act_int_bits: activation grid (paper: Q8.8).
       lut_frac_bits: LUT output grid (paper default: Q1.4).
-      with_ref_codes: see :func:`pack_spmv_weights_q8` (None = auto).
+      with_ref_codes: see :func:`pack_delta_weights_q8` (None = auto).
 
     Returns:
       ``(qparams, layouts)`` — the fake-quant view stack and the per-layer
-      :class:`QuantGruLayout` packs. Pass BOTH to the runtime
-      (``deltagru_sequence(qparams, ..., backend="fused_q8",
-      layouts=layouts)`` or ``GruStreamEngine(..., layouts=layouts)``) so
-      state init and the kernel see the same quantized grids.
+      :class:`QuantDeltaLayout` packs. Pass BOTH to the runtime (e.g.
+      ``deltalstm_sequence(qparams, ..., backend="fused_q8",
+      layouts=layouts)``) so state init and the kernel see the same
+      quantized grids — or skip the pair entirely and compile:
+      ``compile_delta_program(params, cell=cell, backend="fused_q8")``.
     """
+    if cell not in CELL_GATES:
+        raise ValueError(f"unknown cell family {cell!r}; known gate "
+                         f"counts: {CELL_GATES}")
+    gates = CELL_GATES[cell]
     qparams, layouts = [], []
-    for p in params:
-        lay = pack_spmv_weights_q8(
-            p.w_x, p.w_h, b=p.b, block_h=block, block_k=block,
+    for li, p in enumerate(params):
+        h = p.w_h.shape[-1]
+        if p.w_x.shape[0] != gates * h:
+            raise ValueError(
+                f"cell={cell!r} expects [{gates}H, I] gate rows; layer "
+                f"{li} has w_x {tuple(p.w_x.shape)} for hidden size {h} — "
+                "wrong cell family? (pass cell='lstm' for 4-gate stacks)")
+        lay = pack_delta_weights_q8(
+            p.w_x, p.w_h, b=p.b, gates=gates, block_h=block, block_k=block,
             act_frac_bits=act_frac_bits, act_int_bits=act_int_bits,
             lut_frac_bits=lut_frac_bits, with_ref_codes=with_ref_codes)
         layouts.append(lay)
@@ -61,25 +90,63 @@ def quantize_stack(params, block: int = 128, act_frac_bits: int = 8,
     return qparams, layouts
 
 
-def quantize_gru_model(params: dict, interpret: bool | None = None, **kw):
-    """Quantize an ``init_gru_model`` params dict (head left fp32).
+def quantize_stack(params, block: int = 128, act_frac_bits: int = 8,
+                   act_int_bits: int = 8, lut_frac_bits: int = 4,
+                   with_ref_codes: bool | None = None):
+    """GRU-pinned spelling of :func:`quantize_delta_stack` (the historical
+    layer-level exporter; identical semantics with ``cell="gru"``)."""
+    return quantize_delta_stack(
+        params, cell="gru", block=block, act_frac_bits=act_frac_bits,
+        act_int_bits=act_int_bits, lut_frac_bits=lut_frac_bits,
+        with_ref_codes=with_ref_codes)
 
-    Returns a ready-to-run ``backend="fused_q8"``
-    :class:`~repro.core.program.DeltaGruProgram` (head included): hand it
-    straight to ``GruStreamEngine(program, task)`` or call
+
+def quantize_delta_model(params: dict, cell: str | None = None,
+                         interpret: bool | None = None, **kw):
+    """Quantize a model params dict of any cell family (head left fp32).
+
+    ``cell=None`` infers the family from the dict's ``"gru"`` / ``"lstm"``
+    key. Returns a ready-to-run ``backend="fused_q8"``
+    :class:`~repro.core.program.DeltaProgram` (head included): hand it
+    straight to ``DeltaStreamEngine(program, task)`` or call
     ``program.sequence(...)``. The dequantized fake-quant view stack is
-    ``program.layers`` and the packed layouts ``program.layouts`` — the
-    pieces the old loose ``(qparams_dict, layouts)`` return unpacked.
+    ``program.layers`` and the packed layouts ``program.layouts``.
     """
-    from repro.core.program import DeltaGruProgram
-    qstack, layouts = quantize_stack(params["gru"], **kw)
-    return DeltaGruProgram(
+    from repro.core.program import DeltaProgram, infer_cell
+    if cell is None:
+        cell = infer_cell(params)
+    if not isinstance(params, dict) or cell not in params:
+        keys = sorted(params) if isinstance(params, dict) else type(params)
+        raise ValueError(
+            f"quantize_delta_model(cell={cell!r}) needs a model params "
+            f"dict with a {cell!r} stack; got {keys} — for a bare layer "
+            "stack use quantize_delta_stack(params, cell=...)")
+    qstack, layouts = quantize_delta_stack(params[cell], cell=cell, **kw)
+    return DeltaProgram(
         layers=tuple(qstack), layouts=tuple(layouts), packs=None,
         head=params.get("head"), head_b=params.get("head_b"),
-        backend="fused_q8", interpret=interpret)
+        backend="fused_q8", interpret=interpret, cell=cell)
 
 
-def _dequant_slice(lay: QuantGruLayout, which: str):
+def quantize_gru_model(params: dict, interpret: bool | None = None, **kw):
+    """GRU-pinned spelling of :func:`quantize_delta_model`.
+
+    A non-GRU model dict (e.g. ``init_lstm_model``'s) raises instead of
+    mis-packing 3-of-4 gate rows — use ``quantize_delta_model`` (which
+    infers the cell) for other families.
+    """
+    if isinstance(params, dict) and "gru" not in params:
+        keys = sorted(params)
+        raise ValueError(
+            f"quantize_gru_model quantizes init_gru_model params dicts "
+            f"(a 'gru' stack); got keys {keys} — this spelling would "
+            "mis-pack a 4-gate stack as 3 gate rows; use "
+            "quantize_delta_model(params) instead")
+    return quantize_delta_model(params, cell="gru", interpret=interpret,
+                                **kw)
+
+
+def _dequant_slice(lay: QuantDeltaLayout, which: str):
     h, i = lay.hidden_size, lay.input_size
     codes = lay.w_q.astype(jnp.float32)
     if which == "x":
@@ -87,9 +154,9 @@ def _dequant_slice(lay: QuantGruLayout, which: str):
     else:
         sl = codes[:, :h, lay.ip:lay.ip + h]
     w = sl * lay.scales[:, :h, None]
-    return w.reshape(3 * h, sl.shape[-1])
+    return w.reshape(lay.gates * h, sl.shape[-1])
 
 
-def _bias_view(lay: QuantGruLayout):
+def _bias_view(lay: QuantDeltaLayout):
     h = lay.hidden_size
-    return lay.b4[:3, :h].reshape(3 * h)
+    return lay.b4[:lay.gates, :h].reshape(lay.gates * h)

@@ -7,8 +7,9 @@ ring caches with per-slot lengths for continuous batching).
 inference with live temporal-sparsity accounting and the Eq. 7 latency
 model, i.e. a software EdgeDRNN. The **primary entry point is a compiled
 program** of ANY registered cell family — build one with
-:func:`repro.core.program.compile_delta_program` (GRU or LSTM;
-:func:`repro.core.program.compile_deltagru` and
+:func:`repro.core.program.compile_delta_program` (GRU or LSTM) or
+:func:`repro.quant.export.quantize_delta_model` (the int8 export of
+either family; :func:`repro.core.program.compile_deltagru` and
 :func:`repro.quant.export.quantize_gru_model` are the GRU spellings) and
 hand it to ``DeltaStreamEngine(program, task)`` — cell, backend, packed
 layouts, and the delta-memory state convention all travel inside the
@@ -22,9 +23,10 @@ The engine supports the dual thresholds (including per-layer
 :class:`~repro.core.thresholds.ThresholdPolicy` overrides, threaded into
 the jitted step), the dynamic-threshold controller (paper Sec. VI future
 work), every backend registered for the program's cell
-(GRU: ``dense | blocksparse | fused | fused_q8`` — the last streams int8
-packed weights and runs the paper's fixed-point pipeline; LSTM:
-``dense | fused``), chunked ``step_many`` streaming, and a batched
+(GRU: ``dense | blocksparse | fused | fused_q8``; LSTM:
+``dense | fused | fused_q8`` — the ``fused_q8`` paths stream int8 packed
+weights and run the paper's fixed-point pipeline via the cell-agnostic
+:mod:`repro.kernels.delta_q8` core), chunked ``step_many`` streaming, and a batched
 multi-stream mode (``n_streams`` independent streams through one kernel —
 ONE weight fetch per step serves all streams). On top of the slots sits a
 **session API** for heavy traffic:
@@ -322,7 +324,19 @@ class DeltaStreamEngine:
         scrambled frames across streams whenever a wrong-but-divisible
         shape (e.g. a single ``[I]`` vector on a multi-stream engine) was
         handed in.
+
+        A host numpy frame is SNAPSHOTTED on entry with a *synchronous*
+        ``np.array`` copy. ``jnp.asarray`` zero-copy aliases a host
+        buffer on CPU backends — and even ``jnp.array``'s ingestion is
+        deferred past the async step dispatch — so an aliased input that
+        the caller mutates before the device reads it (exactly what a
+        scheduler reusing one frame buffer per tick does) would
+        nondeterministically corrupt the stream under load. Device
+        arrays are immutable and skip the copy, keeping the zero-sync
+        hot path.
         """
+        if isinstance(x, np.ndarray):
+            x = np.array(x, np.float32)
         x = jnp.asarray(x, jnp.float32)
         i_dim = self.dims.input_size
         if x.ndim == 1 and self.n_streams == 1:
@@ -345,8 +359,13 @@ class DeltaStreamEngine:
 
         ``xs: [T, I]`` or ``[T, n_streams, I]``; returns ``[T, O]`` /
         ``[T, n_streams, O]``. Zero per-timestep Python dispatch — the whole
-        chunk, including stats/controller updates, runs on-device.
+        chunk, including stats/controller updates, runs on-device. A host
+        numpy chunk is snapshotted on entry (see :meth:`step` — jax's
+        deferred ingestion of a caller-owned buffer races with the async
+        dispatch).
         """
+        if isinstance(xs, np.ndarray):
+            xs = np.array(xs, np.float32)
         xs = jnp.asarray(xs, jnp.float32)
         squeeze = xs.ndim == 2
         if squeeze:

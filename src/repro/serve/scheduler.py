@@ -210,7 +210,15 @@ class GruStreamBatcher:
         x = self._idle_x
         for sid, req in active:
             x[sid] = req.frames[req.cursor]
-        out = jnp.reshape(self.engine.step(x), (self.engine.n_streams, -1))
+        # Hand the engine a SNAPSHOT (numpy copy, synchronous), never the
+        # persistent per-tick buffer: the engine's step is dispatched
+        # asynchronously and jax's host->device ingestion of a numpy
+        # buffer is itself deferred, so an aliased buffer mutated by the
+        # NEXT tick's frame writes nondeterministically bled future frames
+        # into the in-flight step under load (the batcher parity tests
+        # flaked with exactly that cross-tick corruption).
+        out = jnp.reshape(self.engine.step(x.copy()),
+                          (self.engine.n_streams, -1))
         finished = []
         host_carry = None
         for sid, req in active:

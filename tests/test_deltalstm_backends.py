@@ -43,7 +43,8 @@ def _stack_and_xs(key=0, i=10, h=24, layers=2, t=14, b=2, scale=0.5):
 
 class TestLstmRegistry:
     def test_fused_registered(self):
-        assert set(("dense", "fused")) <= set(backend_names("lstm"))
+        assert set(("dense", "fused", "fused_q8")) <= set(
+            backend_names("lstm"))
 
     def test_spec_fields(self):
         spec = get_backend("fused", cell="lstm")
@@ -51,11 +52,15 @@ class TestLstmRegistry:
         assert spec.weight_bits == 32
         assert not spec.supports_custom_acts
         assert get_backend("dense", cell="lstm").supports_custom_acts
+        q8 = get_backend("fused_q8", cell="lstm")
+        assert q8.m_init == "zero" and q8.weight_bits == 8
+        assert not q8.supports_custom_acts
 
     def test_stack_m_init_reads_registry(self):
         assert lstm_stack_m_init("fused") == "bias"
+        assert lstm_stack_m_init("fused_q8") == "zero"
         with pytest.raises(ValueError, match="unknown lstm backend"):
-            lstm_stack_m_init("fused_q8")
+            lstm_stack_m_init("blocksparse")
 
 
 class TestLstmCrossBackendEquivalence:

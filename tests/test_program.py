@@ -52,7 +52,7 @@ class TestRegistry:
         with pytest.raises(ValueError, match="unknown gru backend"):
             get_backend("spmd")
         with pytest.raises(ValueError, match="unknown lstm backend"):
-            get_backend("fused_q8", cell="lstm")
+            get_backend("blocksparse", cell="lstm")
 
     def test_duplicate_registration_rejected(self):
         with pytest.raises(ValueError, match="already registered"):

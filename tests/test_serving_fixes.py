@@ -17,6 +17,16 @@ Plus the batcher slot-recycling accounting-isolation property: a stream
 admitted into a just-freed slot must not inherit its predecessor's
 ``fired_*`` / ``lat_s`` / ``w_bytes``, including through the
 shared-``host_carry`` multi-harvest path of ``close_stream``.
+
+And the input-buffer aliasing race (found via flaky batcher parity): on
+CPU backends ``jnp.asarray`` zero-copy *aliases* a host numpy buffer and
+jax's ingestion of it is deferred past the (async) step dispatch, so a
+caller that reuses one frame buffer per tick — exactly what
+``GruStreamBatcher`` does — nondeterministically bled FUTURE frames into
+in-flight steps under load. The engine now snapshots frames on entry and
+the batcher hands over a synchronous numpy copy; the tests below mutate
+the caller's buffer immediately after dispatch and demand bit-identical
+results to an unmutated control.
 """
 import jax
 import jax.numpy as jnp
@@ -271,3 +281,66 @@ class TestBatcherSlotRecyclingIsolation:
                                                    abs=1e-5)
             assert st["mean_weight_bytes_per_step"] == pytest.approx(
                 want["mean_weight_bytes_per_step"], rel=1e-4)
+
+
+class TestInputBufferAliasing:
+    """The engine must snapshot caller frames on entry: jax's host-buffer
+    ingestion is deferred past the async step dispatch, so an aliased
+    numpy buffer the caller reuses (the batcher's per-tick frame buffer)
+    raced with the device read — future frames bled into in-flight steps
+    nondeterministically, under load. These tests mutate the caller's
+    buffer immediately after dispatch; any alias makes them flake."""
+
+    def _engine(self, key=0, n_streams=1):
+        task = GruTaskConfig(8, 16, 2, 3, task="regression",
+                             theta_x=0.02, theta_h=0.02)
+        params = init_gru_model(jax.random.PRNGKey(key), task)
+        prog = compile_deltagru(params, backend="fused")
+        return DeltaStreamEngine(prog, task, n_streams=n_streams), task
+
+    def test_step_snapshots_frame_buffer(self):
+        eng, _ = self._engine()
+        rng = np.random.default_rng(0)
+        frames = rng.normal(size=(12, 8)).astype(np.float32)
+        buf = np.empty((8,), np.float32)        # one reused caller buffer
+        outs = []
+        for t in range(12):
+            buf[:] = frames[t]
+            outs.append(eng.step(buf))
+            buf[:] = 1e6                        # caller clobbers immediately
+        got = np.asarray(jnp.stack(outs))
+        ctrl, _ = self._engine()
+        want = np.stack([np.asarray(ctrl.step(frames[t].copy()))
+                         for t in range(12)])
+        np.testing.assert_array_equal(got, want)
+
+    def test_step_many_snapshots_chunk_buffer(self):
+        eng, _ = self._engine(key=1)
+        rng = np.random.default_rng(1)
+        frames = rng.normal(size=(16, 8)).astype(np.float32)
+        buf = frames.copy()
+        out = eng.step_many(buf)
+        buf[:] = -1e6                           # clobber during async dispatch
+        got = np.asarray(out)
+        ctrl, _ = self._engine(key=1)
+        want = np.asarray(ctrl.step_many(frames))
+        np.testing.assert_array_equal(got, want)
+
+    def test_batcher_ticks_do_not_bleed_future_frames(self):
+        """Per-tick buffer reuse inside the batcher (the original flake):
+        batcher session outputs must match a dedicated engine even though
+        every tick rewrites the same [n_streams, I] frame buffer."""
+        eng, task = self._engine(key=2, n_streams=2)
+        prog = eng.program
+        cb = GruStreamBatcher(eng)
+        rng = np.random.default_rng(2)
+        seqs = [rng.normal(size=(t, 8)).astype(np.float32)
+                for t in (6, 9, 5, 8)]
+        uids = [cb.submit(s) for s in seqs]
+        done = cb.run_until_drained()
+        by_uid = {r.uid: r for r in done}
+        for uid, s in zip(uids, seqs):
+            solo = DeltaStreamEngine(prog, task)
+            want = np.asarray(solo.step_many(s))
+            np.testing.assert_allclose(np.stack(by_uid[uid].outputs), want,
+                                       atol=1e-5)
