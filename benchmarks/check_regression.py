@@ -23,6 +23,15 @@ gate always compares apples to apples), then:
   in fp32; fused_q8 Pallas kernel vs its jnp oracle, bit-exact, plus the
   quantization-budget rail vs the fp32 dense reference) — those
   assertions are folded into the failure list;
+* gates the batched stream-tile sweep (``BENCH_batch_sweep.json``) the
+  same way: <= 1.5x wall per (backend, batch) row on the tile backends
+  (``fused_batch``, ``fused_q8_batch``), tile-bytes model exact on the
+  baseline machine class / 2% elsewhere, and a machine-independent HARD
+  invariant evaluated on the fresh record's unrounded matched-firing
+  fields: a replicated tile's weight fetch must EQUAL the batch-1 fetch
+  (union compaction collapses identical streams), so weight bytes per
+  stream per step at B=8 is *strictly below* the batch-1 baseline at
+  matched firing — the whole point of serving a tile per weight pass;
 * wall-time comparison is only meaningful on the machine class that
   produced the baseline: when ``device``/``machine`` metadata disagree the
   gate downgrades wall checks to a warning and keeps the bytes gate.
@@ -132,6 +141,76 @@ def _gate_q8_matched_bytes(name, fresh, failures):
                   f"0.25x fused at matched firing ({q8m:.0f} B/step)")
 
 
+def _batch_row_key(row):
+    return (row["backend"], row["batch"])
+
+
+def _gate_batch_walltime(base, fresh, failures):
+    base_rows = {_batch_row_key(r): r for r in base["rows"]}
+    for row in fresh["rows"]:
+        b = base_rows.get(_batch_row_key(row))
+        if b is None:
+            continue
+        ratio = row["us_per_step"] / max(b["us_per_step"], 1e-9)
+        line = (f"batch {row['backend']} B={row['batch']}: "
+                f"{b['us_per_step']:.1f} -> {row['us_per_step']:.1f} us/step "
+                f"({ratio:.2f}x)")
+        if ratio > MAX_WALL_RATIO:
+            failures.append(f"WALL REGRESSION {line}")
+        else:
+            print(f"ok   {line}")
+
+
+def _gate_batch_bytes(base, fresh, failures, strict=True):
+    rel_tol = 0.0 if strict else 0.02
+    base_rows = {_batch_row_key(r): r for r in base["rows"]}
+    for row in fresh["rows"]:
+        b = base_rows.get(_batch_row_key(row))
+        if b is None:
+            continue
+        drift = abs(row["tile_bytes_per_step"] - b["tile_bytes_per_step"])
+        if drift > rel_tol * max(b["tile_bytes_per_step"], 1.0):
+            failures.append(
+                f"BYTES MODEL DRIFT batch {row['backend']} "
+                f"B={row['batch']}: {b['tile_bytes_per_step']} -> "
+                f"{row['tile_bytes_per_step']} (regenerate baseline if "
+                "intentional)")
+        else:
+            print(f"ok   batch {row['backend']} B={row['batch']}: "
+                  f"tile bytes/step={row['tile_bytes_per_step']:.0f}")
+
+
+def _gate_batch_matched_bytes(fresh, failures):
+    """HARD machine-independent invariant of the tile fetch, on the fresh
+    record's UNROUNDED matched-firing fields: when one walk is replicated
+    across the tile, union compaction collapses the identical streams, so
+    the tile fetch must EQUAL the batch-1 fetch exactly — and bytes per
+    stream per step at B=8 must then sit strictly below the batch-1
+    baseline (it is exactly batch1/8). Any violation is a compaction or
+    bytes-model bug, not measurement noise."""
+    for row in fresh["rows"]:
+        be, b = row["backend"], row["batch"]
+        tm = row.get("tile_bytes_matched")
+        b1 = row.get("batch1_bytes_matched")
+        ps = row.get("bytes_per_stream_matched")
+        if tm is None or b1 is None or ps is None:
+            failures.append(f"BATCH MATCHED BYTES {be} B={b}: record is "
+                            "missing the matched-firing fields")
+            continue
+        if tm != b1:
+            failures.append(
+                f"BATCH MATCHED BYTES {be} B={b}: replicated tile fetches "
+                f"{tm} B/step vs {b1} at B=1 (union compaction must "
+                "collapse identical streams to the batch-1 fetch)")
+        elif b > 1 and not ps < b1:
+            failures.append(
+                f"BATCH MATCHED BYTES {be} B={b}: {ps} bytes/stream/step "
+                f"is not strictly below the batch-1 baseline {b1}")
+        else:
+            print(f"ok   batch {be} B={b}: matched-firing bytes/stream "
+                  f"{ps:.0f} (batch-1 fetch {b1:.0f})")
+
+
 def main() -> int:
     from benchmarks import kernel_bench as kb
 
@@ -239,6 +318,26 @@ def main() -> int:
                     "lstm_q8 baseline was recorded on a different machine "
                     "class; wall-time gate skipped, bytes model enforced "
                     "at 2% tolerance")
+
+    from benchmarks import fig13_batch_sweep as fbs
+    base_batch = _load(fbs.BENCH_BATCH_JSON)
+    if base_batch is not None:
+        c = base_batch["config"]
+        _, fresh_batch = fbs.bench_batch_record(
+            t=c["t"], i=c["input"], h=c["hidden"], layers=c["layers"],
+            theta=c["theta"], batches=tuple(c["batches"]))
+        same_machine = _comparable(base_batch["config"],
+                                   fresh_batch["config"])
+        _gate_batch_bytes(base_batch, fresh_batch, failures,
+                          strict=same_machine)
+        _gate_batch_matched_bytes(fresh_batch, failures)
+        if same_machine:
+            _gate_batch_walltime(base_batch, fresh_batch, failures)
+        else:
+            warnings.append(
+                "batch-sweep baseline was recorded on a different machine "
+                "class; wall-time gate skipped, tile-bytes model enforced "
+                "at 2% tolerance")
 
     for w in warnings:
         print(f"warn {w}")

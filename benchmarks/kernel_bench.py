@@ -10,7 +10,7 @@ ideal; unstructured sparsity shows the block-granularity gap.
 Part 2 (``run_seq``) times whole-sequence DeltaGRU execution per backend —
 the seed's per-step Python dispatch loop (one jit call + host sync per
 timestep, what ``GruStreamEngine.step`` used to do) against the scanned
-``dense`` / ``blocksparse`` / ``fused`` / ``fused_q8`` paths — at several
+``dense`` / ``fused`` / ``fused_q8`` paths — at several
 temporal sparsity levels, and writes a ``BENCH_deltagru_seq.json`` record
 (with device/platform/dtype metadata) so the perf trajectory is
 machine-readable and comparable across PRs and machines.
@@ -67,9 +67,16 @@ BENCH_LSTM_Q8_JSON = os.path.join(os.path.dirname(__file__),
 
 # Derived from the backend registry (the single source of truth): a newly
 # registered backend is automatically swept, benched, and regression-gated
-# instead of silently skipped by a stale hand-maintained tuple.
-SEQ_BACKENDS = list_backends("gru")
-LSTM_BACKENDS = list_backends("lstm")
+# instead of silently skipped by a stale hand-maintained tuple. The
+# ``*_batch`` tile backends are excluded here — at the batch-1 config of
+# these records they are the identical compute (same kernels, tile
+# contract only); their economics only show up with many streams, which
+# is what ``benchmarks/fig13_batch_sweep.py`` measures into its own
+# ``BENCH_batch_sweep.json`` record.
+SEQ_BACKENDS = tuple(b for b in list_backends("gru")
+                     if not b.endswith("_batch"))
+LSTM_BACKENDS = tuple(b for b in list_backends("lstm")
+                      if not b.endswith("_batch"))
 
 
 def record_meta() -> dict:
@@ -192,22 +199,15 @@ def _seq_fn(params, xs, theta, backend, layouts=None):
 
 
 def _time_backends(params, qparams, layouts_q8, xs, theta):
-    """Wall time per scanned backend at one theta.
-
-    The fast paths (dense / fused / fused_q8) are interleaved with many
-    reps — they are the comparison the acceptance gates care about; the
-    interpret-mode blocksparse path is ~50x slower and only needs a rough
-    number, so it is timed separately with few reps.
-    """
-    fast = ("dense", "fused", "fused_q8")
+    """Wall time per scanned backend at one theta, fully interleaved
+    (round-robin reps so machine-load drift biases every backend equally).
+    Every swept backend is a fast scanned path now that the ~50x-slower
+    interpret-mode ``blocksparse`` was retired from the registry."""
     seqs = [_seq_fn(qparams, xs, theta, be, layouts=layouts_q8)
             if be == "fused_q8" else _seq_fn(params, xs, theta, be)
-            for be in fast]
+            for be in SEQ_BACKENDS]
     walls = _time_calls([(lambda s=s: s(xs)) for s in seqs], reps=60)
-    times = dict(zip(fast, walls))
-    bs = _seq_fn(params, xs, theta, "blocksparse")
-    times["blocksparse"] = _time_call(lambda: bs(xs), reps=3)
-    return {be: times[be] for be in SEQ_BACKENDS}
+    return dict(zip(SEQ_BACKENDS, walls))
 
 
 def run_seq(t=64, i=128, h=256, layers=2,
@@ -271,8 +271,7 @@ def bench_seq_record(t=64, i=128, h=256, layers=2,
         "config": {"t": t, "input": i, "hidden": h, "layers": layers,
                    "batch": 1,
                    # off-TPU the kernel backends auto-route per kernels/ops
-                   # conventions (fused/fused_q8 -> jnp ref, blocksparse ->
-                   # interpret)
+                   # conventions (fused/fused_q8 -> jnp ref)
                    **record_meta()},
         "created_unix": int(time.time()),
         "rows": rows,
@@ -347,19 +346,18 @@ def _bytes_per_step(params, counts, backend, block=128, cell="gru"):
             total += g * h_dim * (i_dim + h_dim) * wb
             continue
         fbx, fbh = counts[li]
-        if backend == "blocksparse":
-            opg = g * h_dim + (-g * h_dim) % block     # delta_spmv row pad
-            total += (fbx + fbh) * block * opg * wb
-        else:                                          # fused / fused_q8
-            hp = h_dim + (-h_dim) % block
-            total += (fbx + fbh) * block * g * hp * wb
+        # fused family (incl. the *_batch tile variants): fired k-blocks
+        # of the concatenated volume, g rows per padded column
+        hp = h_dim + (-h_dim) % block
+        total += (fbx + fbh) * block * g * hp * wb
     return float(total)
 
 
 def run_q8(t=64, i=128, h=256, layers=2,
            thetas=(0.0, 0.05, 0.2), write=True,
            times_by_theta=None) -> list[str]:
-    """Bytes-streamed + effective-GOp/s shootout across all four backends."""
+    """Bytes-streamed + effective-GOp/s shootout across the batch-1
+    backends."""
     lines, record = bench_q8_record(t=t, i=i, h=h, layers=layers,
                                     thetas=thetas,
                                     times_by_theta=times_by_theta)

@@ -72,10 +72,11 @@ def main(argv=None) -> None:
             print(f"{name}.FAILED,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
     # machine-readable perf-trajectory records written by the suites
+    from benchmarks.fig13_batch_sweep import BENCH_BATCH_JSON
     from benchmarks.kernel_bench import (BENCH_JSON, BENCH_LSTM_JSON,
                                          BENCH_LSTM_Q8_JSON, BENCH_Q8_JSON)
     for p in (BENCH_JSON, BENCH_Q8_JSON, BENCH_LSTM_JSON,
-              BENCH_LSTM_Q8_JSON):
+              BENCH_LSTM_Q8_JSON, BENCH_BATCH_JSON):
         if os.path.exists(p):
             print(f"bench_json,0,{p}", file=sys.stderr)
     if failures:

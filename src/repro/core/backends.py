@@ -19,12 +19,15 @@ by hand through ``backend=`` / ``layouts=`` / ``packs=`` /
   (``supports_custom_acts`` — the fused kernels hard-code the Fig. 7
   pipeline).
 
-The registry is keyed on ``(cell, name)`` so it is cell-agnostic: the four
+The registry is keyed on ``(cell, name)`` so it is cell-agnostic: the
 DeltaGRU backends register themselves when :mod:`repro.core.deltagru`
-imports, and :mod:`repro.core.deltalstm` registers its ``dense`` and
-``fused`` paths under ``cell="lstm"``. Lookups lazily import the builtin
-cell modules, so ``get_backend("fused")`` works without the caller having
-touched ``deltagru`` first.
+imports, and :mod:`repro.core.deltalstm` registers the same names under
+``cell="lstm"``. Lookups lazily import the builtin cell modules, so
+``get_backend("fused")`` works without the caller having touched
+``deltagru`` first. Each cell family carries batched multi-stream
+variants (``fused_batch`` / ``fused_q8_batch``) whose
+``weight_fetch="tile"`` marks the one-weight-pass-per-stream-tile
+economics the serving engine routes onto when ``n_streams > 1``.
 
 :func:`repro.core.program.compile_delta_program` builds on this: it
 resolves a spec once for any cell family, packs once, and returns a
@@ -45,7 +48,7 @@ class BackendSpec:
     """One execution path for a delta-RNN cell.
 
     Attributes:
-      name: registry key (``"dense" | "blocksparse" | "fused" | ...``).
+      name: registry key (``"dense" | "fused" | "fused_batch" | ...``).
       cell: which recurrent cell family the spec executes (``"gru"``,
         ``"lstm"``, ...). Specs of different cells never collide.
       pack: ``pack(layer_params, block) -> (layers, layouts, packs)`` —
@@ -70,6 +73,13 @@ class BackendSpec:
         model derives K (PE count) and DRAM traffic from it.
       supports_custom_acts: whether user ``sigmoid=`` / ``tanh=``
         overrides are honoured (kernel backends hard-code Fig. 7).
+      weight_fetch: DRAM weight-traffic granularity the Eq. 7 bytes model
+        prices. ``"stream"`` — one weight-volume fetch per stream per
+        step (the batch-1 EdgeDRNN economics; N streams pay N fetches).
+        ``"tile"`` — the batched kernels: one fetch serves the whole
+        ``[B, ...]`` stream tile, compacted on the **union** of fired
+        columns across the tile, so bytes/stream falls sublinearly with B
+        (see :func:`repro.core.perf_model.tile_dram_traffic_bytes_per_timestep`).
     """
 
     name: str
@@ -79,6 +89,7 @@ class BackendSpec:
     m_init: str = "bias"
     weight_bits: int = 32
     supports_custom_acts: bool = True
+    weight_fetch: str = "stream"
 
 
 def register_backend(spec: BackendSpec) -> BackendSpec:
@@ -103,11 +114,51 @@ def _ensure_builtins() -> None:
     import repro.core.deltalstm   # noqa: F401  (registers lstm backends)
 
 
+def require_stream_tile(x, name: str) -> None:
+    """Tile-contract guard for the ``*_batch`` backends.
+
+    The batched kernels price ONE weight fetch per stream tile, so their
+    inputs must carry an explicit leading stream axis (``[B, ..., I]``).
+    Accepting a bare ``[I]`` vector would silently bill single-stream
+    traffic at tile rates; callers with one stream should use the
+    per-stream parent backend (or pass ``[1, I]`` to mean a 1-tile).
+    """
+    if getattr(x, "ndim", 0) < 2:
+        raise ValueError(
+            f"{name} computes a [B, ...] tile of streams per step (one "
+            f"weight pass serves the whole tile); got a {getattr(x, 'ndim', 0)}-D "
+            f"input — add a leading stream axis, or use the per-stream "
+            f"{name.removesuffix('_batch')!r} backend")
+
+
+# (cell, name) -> replacement: backends that USED to ship and were
+# deliberately retired. Looking one up names its successor instead of the
+# generic unknown-name rejection, so stale configs fail loudly and
+# actionably.
+REMOVED_BACKENDS = {
+    ("gru", "blocksparse"): "fused",
+}
+
+
 def get_backend(name: str, cell: str = "gru") -> BackendSpec:
-    """Look up a registered spec; unknown names raise with the known set."""
+    """Look up a registered spec; unknown names raise with the known set.
+
+    Retired backends (``REMOVED_BACKENDS``) raise naming their
+    replacement — ``blocksparse`` was deregistered after benching ~45x
+    slower than ``fused`` (two separately-compacted delta_spmv calls per
+    step vs one fused pallas_call); its kernel survives in
+    :mod:`repro.kernels.delta_spmv` as an ablation, but it is no longer a
+    servable path.
+    """
     _ensure_builtins()
     spec = _REGISTRY.get((cell, name))
     if spec is None:
+        repl = REMOVED_BACKENDS.get((cell, name))
+        if repl is not None:
+            raise ValueError(
+                f"{cell} backend {name!r} was removed; use {repl!r} "
+                f"instead (same math, one fused pallas_call per layer "
+                f"step instead of two separately-compacted spmv calls)")
         known = backend_names(cell)
         raise ValueError(
             f"unknown {cell} backend {name!r}; registered backends: {known}")

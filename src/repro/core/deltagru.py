@@ -30,9 +30,6 @@ is a registered :class:`repro.core.backends.BackendSpec`):
 
 * ``"dense"`` — plain XLA matmuls; the oracle. Zeros in the deltas are
   multiplied, not skipped.
-* ``"blocksparse"`` — two :func:`repro.kernels.ops.delta_spmv` calls per
-  step (input + recurrent gate blocks): fired-k-block-only weight fetch,
-  separate compaction per matvec (the seed's kernel path, now wired in).
 * ``"fused"`` — :mod:`repro.kernels.deltagru_seq`: ONE pallas_call per
   layer step over the concatenated ``[3H, I+H]`` Fig. 6 layout with a
   single compaction, activation pipeline included; sequences run under
@@ -44,13 +41,28 @@ is a registered :class:`repro.core.backends.BackendSpec`):
   applied at the activation stage, not folded into ``M``), and the Q8.8
   -> Q1.4 LUT sigmoid/tanh grid in-kernel. Quantize a trained stack with
   :func:`repro.quant.export.quantize_stack` and pass its layouts.
+* ``"fused_batch"`` / ``"fused_q8_batch"`` — the batched multi-stream
+  tile contracts over the same kernels: one weight pass serves a
+  ``[B, ...]`` tile of streams per layer step, compacting fired blocks on
+  the **union** of fired columns across the tile. A stream whose delta
+  slice in a union-fired block is all-zero contributes exactly ±0.0
+  partial products, so the batched paths are bit-identical (fp32) /
+  code-exact (q8) to their per-stream parents at every θ — only the
+  DRAM pricing changes (``weight_fetch="tile"``: one fetch per tile
+  instead of one per stream). They reject streamless ``[I]`` inputs.
 
-The first three are numerically equivalent to the Eq. 3 recurrence
-(exactly at block granularity; the equivalence suite pins fused ==
-blocksparse == dense == the Eq. 1 oracle at ``theta == 0``).
-``fused_q8`` instead bit-matches the fake-quant fixed-point reference on
-the declared Qm.n grids (``tests/test_quant_backends.py``) and reduces to
-a quantized plain GRU at ``theta == 0``.
+``dense`` and the fused fp32 paths are numerically equivalent to the
+Eq. 3 recurrence (the equivalence suite pins fused == dense == the Eq. 1
+oracle at ``theta == 0``). ``fused_q8`` instead bit-matches the
+fake-quant fixed-point reference on the declared Qm.n grids
+(``tests/test_quant_backends.py``) and reduces to a quantized plain GRU
+at ``theta == 0``.
+
+(The historical ``"blocksparse"`` path — two separately-compacted
+:func:`repro.kernels.ops.delta_spmv` calls per step — was retired after
+benching ~45x slower than ``fused``; looking it up names ``fused`` as
+the replacement. The spmv kernel itself survives in
+:mod:`repro.kernels.delta_spmv` as an ablation.)
 """
 from __future__ import annotations
 
@@ -60,7 +72,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.backends import (BackendSpec, get_backend, list_backends,
-                                 register_backend)
+                                 register_backend, require_stream_tile)
 from repro.core.delta import DeltaState, delta_encode, init_delta_state
 from repro.core.thresholds import layer_theta
 
@@ -174,41 +186,6 @@ class DeltaGruStepOut(NamedTuple):
     delta_h: Array   # the (sparse) encoded hidden delta actually used
 
 
-def _blocksparse_matvec(params: "GruLayerParams", packed=None,
-                        interpret: bool | None = None,
-                        block_o: int = 128, block_k: int = 128) -> Callable:
-    """``matvec(which, v)`` over arbitrary batch dims via the Pallas
-    delta-spmv, where ``which`` is an explicit ``"x"`` / ``"h"`` selector.
-
-    ``packed``, when given, is ``(w_x_packed, w_h_packed)`` from
-    :func:`repro.kernels.delta_spmv.pack_spmv_weights`; the selector picks
-    both the raw weight and its pre-padded pack, which keeps the per-call
-    ``jnp.pad`` out of the hot loop. (An earlier revision selected the pack
-    by ``w is params.w_x`` identity — a tracer-fragility trap: any
-    transform that re-wraps the weight array silently fell back to the
-    wrong operand.)
-    """
-    from repro.kernels import ops
-
-    def mv(which, v):
-        if which not in ("x", "h"):
-            raise ValueError(f"selector must be 'x' or 'h', got {which!r}")
-        w = params.w_x if which == "x" else params.w_h
-        lead = v.shape[:-1]
-        v2 = v.reshape(-1, v.shape[-1])
-        if packed is not None:
-            wp = packed[0] if which == "x" else packed[1]
-            out = ops.delta_spmv(wp, v2, block_o=block_o, block_k=block_k,
-                                 interpret=interpret, packed=True,
-                                 out_dim=w.shape[0])
-        else:
-            out = ops.delta_spmv(w, v2, block_o=block_o, block_k=block_k,
-                                 interpret=interpret)
-        return out.reshape(*lead, w.shape[0]).astype(v.dtype)
-
-    return mv
-
-
 def _fused_layer_step(params: GruLayerParams, state: DeltaGruLayerState,
                       dx_out, dh_out, layout=None,
                       interpret: bool | None = None):
@@ -318,21 +295,6 @@ def _step_dense(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
                             lambda v: mv(params.w_h, v), sigmoid, tanh)
 
 
-def _step_blocksparse(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
-                      matvec, layout, packed, interpret):
-    dx_out = delta_encode(x, state.x_mem, theta_x)
-    dh_out = delta_encode(state.h, state.h_mem, theta_h)
-    if matvec is not None:
-        return _accumulate_step(state, dx_out, dh_out,
-                                lambda v: matvec(params.w_x, v),
-                                lambda v: matvec(params.w_h, v),
-                                sigmoid, tanh)
-    bs = _blocksparse_matvec(params, packed=packed, interpret=interpret)
-    return _accumulate_step(state, dx_out, dh_out,
-                            lambda v: bs("x", v), lambda v: bs("h", v),
-                            sigmoid, tanh)
-
-
 def _step_fused(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
                 matvec, layout, packed, interpret):
     if matvec is not None:
@@ -376,17 +338,41 @@ def _step_fused_q8(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
                                 layout=layout, interpret=interpret)
 
 
+def _step_fused_batch(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
+                      matvec, layout, packed, interpret):
+    """Batched multi-stream tile contract over the fused fp32 kernel.
+
+    The fused kernel already compacts fired blocks on the **union** of
+    fired columns across its flattened leading axis
+    (:func:`repro.kernels.delta_q8._prep_step_operands` /
+    the fp32 twin in :mod:`repro.kernels.deltagru_seq`), with each
+    stream's own delta vector as the multiplicand — a stream that did not
+    fire a union-fired block contributes exact ±0.0 partial products, so
+    the tile result is bit-identical to running the streams one at a
+    time. This wrapper's job is the CONTRACT: require the stream axis, so
+    the ``weight_fetch="tile"`` pricing (one weight pass per tile) is
+    only ever attached to genuinely batched execution.
+    """
+    require_stream_tile(x, "fused_batch")
+    return _step_fused(params, state, x, theta_x, theta_h, sigmoid=sigmoid,
+                       tanh=tanh, matvec=matvec, layout=layout,
+                       packed=packed, interpret=interpret)
+
+
+def _step_fused_q8_batch(params, state, x, theta_x, theta_h, *, sigmoid,
+                         tanh, matvec, layout, packed, interpret):
+    """Batched tile contract over the int8 kernel (code-exact: the integer
+    accumulator adds exact zero codes for non-fired streams)."""
+    require_stream_tile(x, "fused_q8_batch")
+    return _step_fused_q8(params, state, x, theta_x, theta_h,
+                          sigmoid=sigmoid, tanh=tanh, matvec=matvec,
+                          layout=layout, packed=packed, interpret=interpret)
+
+
 # -- per-backend stack packers (registered BackendSpec.pack fns) ------------
 
 def _pack_none(params, block):
     return params, None, None
-
-
-def _pack_blocksparse(params, block):
-    from repro.kernels.delta_spmv import pack_spmv_weights
-    return params, None, [(pack_spmv_weights(p.w_x, block, block),
-                           pack_spmv_weights(p.w_h, block, block))
-                          for p in params]
 
 
 def _pack_fused(params, block):
@@ -408,15 +394,22 @@ register_backend(BackendSpec(
     name="dense", cell="gru", pack=_pack_none, step=_step_dense,
     m_init="bias", weight_bits=32, supports_custom_acts=True))
 register_backend(BackendSpec(
-    name="blocksparse", cell="gru", pack=_pack_blocksparse,
-    step=_step_blocksparse, m_init="bias", weight_bits=32,
-    supports_custom_acts=True))
-register_backend(BackendSpec(
     name="fused", cell="gru", pack=_pack_fused, step=_step_fused,
     m_init="bias", weight_bits=32, supports_custom_acts=False))
 register_backend(BackendSpec(
     name="fused_q8", cell="gru", pack=_pack_fused_q8, step=_step_fused_q8,
     m_init="zero", weight_bits=8, supports_custom_acts=False))
+# Batched multi-stream tiles: same pack fns (and therefore the same
+# packed layouts / m_init conventions) as their per-stream parents, so
+# DeltaProgram.with_backend can swap between the pair without repacking.
+register_backend(BackendSpec(
+    name="fused_batch", cell="gru", pack=_pack_fused,
+    step=_step_fused_batch, m_init="bias", weight_bits=32,
+    supports_custom_acts=False, weight_fetch="tile"))
+register_backend(BackendSpec(
+    name="fused_q8_batch", cell="gru", pack=_pack_fused_q8,
+    step=_step_fused_q8_batch, m_init="zero", weight_bits=8,
+    supports_custom_acts=False, weight_fetch="tile"))
 
 # Legacy alias, now DERIVED from the registry instead of hand-maintained:
 # a backend registered after import still shows up via list_backends("gru");
@@ -441,8 +434,9 @@ def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
         precedence over ``backend`` (rejected by ``fused_q8``, whose state
         lives in the code domain).
       backend: any registered GRU backend name (builtin:
-        ``"dense" | "blocksparse" | "fused" | "fused_q8"``, see module
-        docstring). Unknown names raise.
+        ``"dense" | "fused" | "fused_q8" | "fused_batch" |
+        "fused_q8_batch"``, see module docstring). Unknown names raise;
+        retired names raise naming their replacement.
       layout: optional pre-packed :class:`FusedGruLayout` (fused) or
         :class:`QuantGruLayout` (fused_q8) for the kernel backends
         (packed/quantized on the fly otherwise — sequence entry points
@@ -457,12 +451,13 @@ def deltagru_step(params: GruLayerParams, state: DeltaGruLayerState, x: Array,
     points handle this automatically when they build the initial state,
     and the :class:`~repro.core.program.DeltaGruProgram` API makes the
     mismatch unrepresentable.
-      packed: optional ``(w_x_packed, w_h_packed)`` pair for the
-        blocksparse backend (see :func:`pack_spmv_weights`).
+      packed: legacy kwarg (pre-padded spmv operand pairs); unused by the
+        builtin backends since ``blocksparse`` was retired, kept for
+        registered third-party specs.
       interpret: Pallas mode for the kernel backends. ``None`` (default)
         auto-selects: compiled kernels on TPU, the pure-jnp references
-        elsewhere (fused) / interpret (blocksparse). ``True`` forces
-        interpret-mode emulation — the kernel-correctness path.
+        elsewhere. ``True`` forces interpret-mode emulation — the
+        kernel-correctness path.
     """
     spec = get_backend(backend, cell="gru")
     return spec.step(params, state, x, theta_x, theta_h, sigmoid=sigmoid,
@@ -502,7 +497,7 @@ def deltagru_stack_step(params: Sequence[GruLayerParams],
     tuple/list (one entry per layer — the
     :meth:`~repro.core.thresholds.ThresholdPolicy.layer_thetas` spelling);
     ``layouts`` / ``packs`` are optional per-layer pre-packed weights for
-    the fused / blocksparse backends (see :func:`pack_stack`).
+    the kernel backends (see :func:`pack_stack`).
     """
     new_layers = []
     deltas = []
@@ -525,7 +520,6 @@ def pack_stack(params: Sequence[GruLayerParams], backend: str,
     Legacy entry point: dispatches to the registered spec's ``pack`` and
     drops its (possibly rewritten) parameter stack, returning only
     ``(layouts, packs)`` — per-layer fused layouts for the fused backends,
-    per-layer ``(w_x_packed, w_h_packed)`` pairs for ``"blocksparse"``,
     ``(None, None)`` for ``"dense"``. This hoists the per-call ``jnp.pad``
     out of the scan body: inside a sequence the pads would otherwise
     re-run every timestep. Prefer

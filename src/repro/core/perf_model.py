@@ -171,6 +171,75 @@ def dram_traffic_bytes_per_timestep(dims: GruDims, gamma_dx: float,
 
 
 # ---------------------------------------------------------------------------
+# Batched stream tiles: one weight pass serves B streams (union firing).
+# ---------------------------------------------------------------------------
+
+def union_sparsity(gamma, batch: int):
+    """Temporal sparsity surviving a union over ``batch`` independent
+    streams.
+
+    A weight column is skipped by a batched tile kernel only when EVERY
+    stream in the tile kept it silent; with independent streams each
+    silent with probability ``gamma``, that is ``gamma ** batch`` — the
+    union firing fraction ``1 - gamma**B`` grows with B, which is exactly
+    why bytes/stream falls *sublinearly* rather than as ``1/B``. Pure
+    arithmetic (traced-safe); feed MEASURED union gammas instead when you
+    have them (streams are rarely perfectly independent).
+    """
+    return gamma ** batch
+
+
+def tile_dram_traffic_bytes_per_timestep(dims: GruDims, gamma_dx_union,
+                                         gamma_dh_union,
+                                         w_weight_bits: int = 8):
+    """Eq. 7 bytes term for a batched tile: weight bytes fetched ONCE per
+    ``[B, ...]`` stream tile per timestep.
+
+    The batched kernels (``weight_fetch="tile"``) compact fired blocks on
+    the union of fired columns across the tile, so the fetch volume is
+    the ordinary :func:`dram_traffic_bytes_per_timestep` evaluated at the
+    **union** gammas — and per-stream traffic is this divided by B.
+    Traced-safe (the serving engine accumulates it on-device from
+    measured union firing fractions).
+    """
+    return dram_traffic_bytes_per_timestep(dims, gamma_dx_union,
+                                           gamma_dh_union, w_weight_bits)
+
+
+def estimate_batched_tile(dims: GruDims, gamma_dx: float, gamma_dh: float,
+                          batch: int,
+                          spec: AcceleratorSpec = EDGEDRNN) -> dict:
+    """Analytic batched bytes/op pricing from per-stream gammas.
+
+    Independent-streams model: per-stream sparsity ``gamma`` unions down
+    to ``gamma**B`` across the tile (:func:`union_sparsity`); one weight
+    pass at the union firing then serves every stream, so
+
+    * tile latency  = Eq. 7 latency at the union gammas (the weight
+      stream is the bottleneck and is shared),
+    * tile bytes    = Eq. 7 traffic at the union gammas,
+    * bytes/stream  = tile bytes / B  (sublinear in B: the numerator
+      grows with the union firing),
+    * throughput    = B steps retired per tile pass.
+    """
+    gx_u = union_sparsity(gamma_dx, batch)
+    gh_u = union_sparsity(gamma_dh, batch)
+    lat = stack_latency_s(dims, gx_u, gh_u, spec)
+    tile_bytes = tile_dram_traffic_bytes_per_timestep(
+        dims, gx_u, gh_u, w_weight_bits=spec.w_weight_bits)
+    ops = dims.params_per_timestep_ops * batch
+    return {
+        "batch": batch,
+        "gamma_dx_union": gx_u,
+        "gamma_dh_union": gh_u,
+        "tile_latency_s": lat,
+        "tile_weight_bytes": tile_bytes,
+        "weight_bytes_per_stream": tile_bytes / batch,
+        "throughput_ops": ops / lat if lat > 0 else float("inf"),
+    }
+
+
+# ---------------------------------------------------------------------------
 # TPU v5e translation: same law, different constants.
 # ---------------------------------------------------------------------------
 

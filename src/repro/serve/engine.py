@@ -23,12 +23,16 @@ The engine supports the dual thresholds (including per-layer
 :class:`~repro.core.thresholds.ThresholdPolicy` overrides, threaded into
 the jitted step), the dynamic-threshold controller (paper Sec. VI future
 work), every backend registered for the program's cell
-(GRU: ``dense | blocksparse | fused | fused_q8``; LSTM:
-``dense | fused | fused_q8`` — the ``fused_q8`` paths stream int8 packed
-weights and run the paper's fixed-point pipeline via the cell-agnostic
-:mod:`repro.kernels.delta_q8` core), chunked ``step_many`` streaming, and a batched
-multi-stream mode (``n_streams`` independent streams through one kernel —
-ONE weight fetch per step serves all streams). On top of the slots sits a
+(both cells: ``dense | fused | fused_q8 | fused_batch | fused_q8_batch``
+— the ``fused_q8*`` paths stream int8 packed weights and run the paper's
+fixed-point pipeline via the cell-agnostic :mod:`repro.kernels.delta_q8`
+core), chunked ``step_many`` streaming, and a batched multi-stream mode:
+with ``n_streams > 1`` the engine **auto-routes** a ``fused`` /
+``fused_q8`` program onto its ``*_batch`` tile sibling
+(:meth:`~repro.core.program.DeltaProgram.with_backend` — same packed
+weights, bit-identical outputs) so ONE weight fetch per step serves the
+whole stream tile, and the Eq. 7 accounting gains tile-level terms
+priced on the **union** firing across streams. On top of the slots sits a
 **session API** for heavy traffic:
 :meth:`~DeltaStreamEngine.open_stream` claims a free slot and
 masked-resets only that stream's state,
@@ -111,13 +115,24 @@ class LmEngine:
 
 @dataclass
 class StreamStats:
-    """Aggregate (stream-averaged) accounting, one device sync per read."""
+    """Aggregate (stream-averaged) accounting, one device sync per read.
+
+    The ``ufired_*`` / ``tile_*`` fields are the batched-tile terms:
+    union firing across the stream tile and the Eq. 7 latency/bytes of
+    the ONE weight pass that serves it (meaningful on
+    ``weight_fetch="tile"`` backends; for a single stream they equal the
+    per-stream terms).
+    """
 
     steps: int = 0
     fired_x: float = 0.0
     fired_h: float = 0.0
     est_latency_s: float = 0.0
     w_bytes: float = 0.0
+    ufired_x: float = 0.0
+    ufired_h: float = 0.0
+    tile_est_latency_s: float = 0.0
+    tile_w_bytes: float = 0.0
 
     @property
     def gamma_dx(self) -> float:
@@ -126,6 +141,14 @@ class StreamStats:
     @property
     def gamma_dh(self) -> float:
         return 1.0 - self.fired_h / max(self.steps, 1)
+
+    @property
+    def union_gamma_dx(self) -> float:
+        return 1.0 - self.ufired_x / max(self.steps, 1)
+
+    @property
+    def union_gamma_dh(self) -> float:
+        return 1.0 - self.ufired_h / max(self.steps, 1)
 
 
 class DeltaStreamEngine:
@@ -154,7 +177,15 @@ class DeltaStreamEngine:
         kernel (the heavy-traffic mode: weights are fetched once per step
         for all slots). ``step``/``step_many`` then take ``[N, I]`` /
         ``[T, N, I]``. Slots double as serving sessions via
-        :meth:`open_stream` / :meth:`close_stream`.
+        :meth:`open_stream` / :meth:`close_stream`. When a pack-compatible
+        ``*_batch`` tile backend is registered for the program's backend
+        (``fused`` / ``fused_q8`` both cells), ``n_streams > 1`` routes
+        the program onto it — outputs are bit-identical, and
+        :meth:`report` additionally prices the tile economics: one weight
+        fetch per step at the UNION firing across streams, with
+        ``weight_bytes_per_stream_per_step = tile bytes / n_streams``.
+        The per-stream session accounting keeps its historical meaning
+        (what each stream would cost served alone on a batch-1 device).
 
     The Eq. 7 latency model prices the *streamed weight width* of the
     program's backend (:func:`repro.core.perf_model.spec_for_backend`):
@@ -194,6 +225,18 @@ class DeltaStreamEngine:
                 "DeltaStreamEngine needs a program with a classifier head; "
                 "compile from an init_gru_model / init_lstm_model params "
                 "dict")
+        # Multi-stream routing: a tile of streams should pay ONE weight
+        # fetch per step, so swap onto the pack-compatible "*_batch"
+        # sibling when one is registered (same packed layouts, same math
+        # — outputs stay bit-identical). Backends with no batched sibling
+        # (e.g. "dense") keep per-stream pricing.
+        if (n_streams > 1
+                and program.spec.weight_fetch != "tile"):
+            try:
+                program = program.with_backend(program.backend + "_batch")
+            except ValueError:
+                pass
+        self._tile_fetch = program.spec.weight_fetch == "tile"
         self.program = program
         self.params = list(program.layers)   # legacy attr (the cell stack)
         self.head = (program.head, program.head_b)
@@ -255,6 +298,20 @@ class DeltaStreamEngine:
             wb = dram_traffic_bytes_per_timestep(
                 self.dims, 1.0 - fx, 1.0 - fh,
                 w_weight_bits=self.accel.w_weight_bits)
+            # tile economics: a column is fetched when ANY stream fired
+            # it — the batched kernels compact on this union, so the
+            # shared weight pass is priced at the union firing fractions
+            ufx = jnp.mean(jnp.stack(
+                [jnp.mean(jnp.any(dx != 0, axis=0).astype(jnp.float32))
+                 for dx, _ in deltas]))
+            ufh = jnp.mean(jnp.stack(
+                [jnp.mean(jnp.any(dh != 0, axis=0).astype(jnp.float32))
+                 for _, dh in deltas]))
+            tile_lat = stack_latency_s(self.dims, 1.0 - ufx, 1.0 - ufh,
+                                       self.accel)
+            tile_wb = dram_traffic_bytes_per_timestep(
+                self.dims, 1.0 - ufx, 1.0 - ufh,
+                w_weight_bits=self.accel.w_weight_bits)
             new_carry = {
                 # per-stream accumulators ([N]): session accounting; these
                 # are zeroed slotwise by open_stream's masked reset
@@ -269,6 +326,13 @@ class DeltaStreamEngine:
                 "agg_fired_h": carry["agg_fired_h"] + jnp.mean(fh),
                 "agg_lat_s": carry["agg_lat_s"] + jnp.mean(lat),
                 "agg_w_bytes": carry["agg_w_bytes"] + jnp.mean(wb),
+                # tile-level lifetime aggregates (scalars): union firing
+                # + the once-per-tile weight pass it prices; reported
+                # only on tile-fetch backends but carried uniformly
+                "agg_ufired_x": carry["agg_ufired_x"] + ufx,
+                "agg_ufired_h": carry["agg_ufired_h"] + ufh,
+                "agg_tile_lat_s": carry["agg_tile_lat_s"] + tile_lat,
+                "agg_tile_w_bytes": carry["agg_tile_w_bytes"] + tile_wb,
                 "theta_h": theta_h,
             }
             return out, new_state, new_carry
@@ -470,6 +534,10 @@ class DeltaStreamEngine:
             fired_h=float(host["agg_fired_h"]),
             est_latency_s=float(host["agg_lat_s"]),
             w_bytes=float(host["agg_w_bytes"]),
+            ufired_x=float(host["agg_ufired_x"]),
+            ufired_h=float(host["agg_ufired_h"]),
+            tile_est_latency_s=float(host["agg_tile_lat_s"]),
+            tile_w_bytes=float(host["agg_tile_w_bytes"]),
         )
 
     def reset(self):
@@ -484,6 +552,10 @@ class DeltaStreamEngine:
             "agg_fired_h": jnp.float32(0.0),
             "agg_lat_s": jnp.float32(0.0),
             "agg_w_bytes": jnp.float32(0.0),
+            "agg_ufired_x": jnp.float32(0.0),
+            "agg_ufired_h": jnp.float32(0.0),
+            "agg_tile_lat_s": jnp.float32(0.0),
+            "agg_tile_w_bytes": jnp.float32(0.0),
             "theta_h": jnp.float32(self.thresholds.theta_h),
         }
         self._n_steps = 0
@@ -506,7 +578,19 @@ class DeltaStreamEngine:
             "backend": self.backend,
             "cell": self.cell,
             "n_streams": self.n_streams,
+            "weight_fetch": "tile" if self._tile_fetch else "stream",
         }
+        if self._tile_fetch:
+            # the batched-tile economics: ONE weight pass per step serves
+            # the whole stream tile, priced at the union firing; the
+            # per-stream fields above keep their served-alone meaning
+            steps = max(s.steps, 1)
+            rep["union_gamma_dx"] = s.union_gamma_dx
+            rep["union_gamma_dh"] = s.union_gamma_dh
+            rep["tile_est_latency_us"] = 1e6 * s.tile_est_latency_s / steps
+            rep["tile_weight_bytes_per_step"] = s.tile_w_bytes / steps
+            rep["weight_bytes_per_stream_per_step"] = (
+                s.tile_w_bytes / steps / self.n_streams)
         if self._per_layer:
             # the scalar fields would report the (unapplied) global policy
             # values — under a per-layer policy the tuples are the truth

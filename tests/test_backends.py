@@ -1,10 +1,10 @@
 """Cross-backend DeltaGRU equivalence + zero-sync engine regression.
 
-The three execution paths (dense XLA, blocksparse two-call delta_spmv,
-fused single-kernel sequence path) must agree with each other and — at
-``theta == 0`` — with the plain-GRU Eq. 1 oracle. The streaming engine's
-on-device gamma/latency accounting must reproduce the seed's host-side
-accounting exactly.
+The execution paths (dense XLA, fused single-kernel sequence path, and
+the batched ``fused_batch`` stream-tile variant) must agree with each
+other and — at ``theta == 0`` — with the plain-GRU Eq. 1 oracle. The
+streaming engine's on-device gamma/latency accounting must reproduce the
+seed's host-side accounting exactly.
 """
 import jax
 import jax.numpy as jnp
@@ -22,9 +22,11 @@ from repro.serve.engine import GruStreamEngine
 
 # (backend, extra kwargs): "fused" auto-routes to the jnp ref off-TPU, so
 # the interpret=True rows are what actually exercise the Pallas kernel here.
-KERNEL_PATHS = [("blocksparse", {}), ("fused", {}),
-                ("fused", {"interpret": True})]
-KERNEL_BACKENDS = ("blocksparse", "fused")
+# fused_batch is the same kernel behind the stream-tile contract; all the
+# sequences here carry a [T, B, I] batch axis, so it is a drop-in row.
+KERNEL_PATHS = [("fused", {}), ("fused", {"interpret": True}),
+                ("fused_batch", {}), ("fused_batch", {"interpret": True})]
+KERNEL_BACKENDS = ("fused", "fused_batch")
 
 
 def _stack_and_xs(key, i, h, layers, t, b, dtype=jnp.float32, scale=0.5):

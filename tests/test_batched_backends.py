@@ -1,0 +1,382 @@
+"""Batched stream-tile backends: one weight pass serves a [B, ...] tile.
+
+The contract under test, per backend pair:
+
+* ``fused_batch`` / ``fused_q8_batch`` are registered for BOTH cells with
+  ``weight_fetch="tile"`` and the same pack fn / ``m_init`` as their
+  per-stream siblings, so :meth:`DeltaProgram.with_backend` can swap a
+  compiled program onto the tile variant without repacking — and rejects
+  every pack-incompatible hop.
+* The batched step is the SAME math as the per-stream fused step on the
+  same tile — ``assert_array_equal``, jnp-ref and Pallas-interpret, GRU
+  and LSTM, theta = 0 and dual thresholds — it only adds the stream-tile
+  contract (a streamless ``[I]`` input is rejected with a pointer at the
+  per-stream spelling).
+* Union compaction must not leak between streams: at a FIXED tile width,
+  swapping the companion streams (which changes the set of fired columns
+  the tile fetches) leaves a stream's outputs bit-identical in fp32 and
+  code-exact in q8. (True bitwise batch-vs-solo equality in fp32 is not
+  a property XLA offers — matmul row results shift by ~1 ulp with the
+  number of rows — so cross-width fp32 parity is asserted at float
+  tolerance while the q8 grid absorbs the jitter and stays exact.)
+* The serving engine auto-routes multi-stream sessions onto the tile
+  variants, keeps per-stream served-alone accounting unchanged, and adds
+  tile-level union-firing economics to ``report()``.
+* ``blocksparse`` is gone: the registry names its replacement instead of
+  pretending the name never existed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.backends import backend_names, get_backend
+from repro.core.deltagru import (deltagru_sequence, deltagru_step,
+                                 init_deltagru_state, init_gru_layer,
+                                 init_gru_stack)
+from repro.core.deltalstm import deltalstm_sequence, init_lstm_stack
+from repro.core.perf_model import estimate_batched_tile, union_sparsity
+from repro.core.program import compile_delta_program, compile_deltagru
+from repro.core.sparsity import GruDims
+from repro.models.gru_rnn import GruTaskConfig, init_gru_model
+from repro.quant.export import quantize_stack
+from repro.serve.engine import GruStreamEngine
+from repro.serve.scheduler import GruStreamBatcher
+
+THETAS = [(0.0, 0.0), (0.05, 0.1)]
+
+
+def _gru_stack_and_xs(key=0, i=14, h=32, layers=2, t=16, b=4, scale=0.5):
+    params = init_gru_stack(jax.random.PRNGKey(key), i, h, layers)
+    xs = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(key), 1),
+                           (t, b, i)) * scale
+    return params, xs
+
+
+class TestRegistry:
+    @pytest.mark.parametrize("cell", ["gru", "lstm"])
+    def test_tile_backends_registered_for_both_cells(self, cell):
+        names = set(backend_names(cell))
+        assert {"fused_batch", "fused_q8_batch"} <= names
+
+    @pytest.mark.parametrize("cell", ["gru", "lstm"])
+    @pytest.mark.parametrize("base,batched", [("fused", "fused_batch"),
+                                              ("fused_q8", "fused_q8_batch")])
+    def test_tile_spec_mirrors_per_stream_sibling(self, cell, base, batched):
+        s, b = get_backend(base, cell=cell), get_backend(batched, cell=cell)
+        assert s.weight_fetch == "stream"
+        assert b.weight_fetch == "tile"
+        # the pack-compatibility with_backend relies on
+        assert b.pack is s.pack
+        assert b.m_init == s.m_init
+        assert b.weight_bits == s.weight_bits
+
+    def test_blocksparse_tombstone_names_replacement(self):
+        with pytest.raises(ValueError, match="removed; use 'fused'"):
+            get_backend("blocksparse")
+        assert "blocksparse" not in backend_names("gru")
+        # the tombstone is gru-keyed: lstm never had the backend
+        with pytest.raises(ValueError, match="unknown lstm backend"):
+            get_backend("blocksparse", cell="lstm")
+
+
+class TestWithBackend:
+    @pytest.mark.parametrize("base,batched", [("fused", "fused_batch"),
+                                              ("fused_q8", "fused_q8_batch")])
+    def test_pack_compatible_swap_reuses_layouts(self, base, batched):
+        params, xs = _gru_stack_and_xs()
+        prog = compile_deltagru(params, backend=base)
+        swapped = prog.with_backend(batched)
+        assert swapped.backend == batched
+        assert swapped.layouts is prog.layouts          # no repack
+        got, _, _ = swapped.sequence(xs, 0.05, 0.1)
+        want, _, _ = prog.sequence(xs, 0.05, 0.1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_same_backend_is_identity(self):
+        params, _ = _gru_stack_and_xs()
+        prog = compile_deltagru(params, backend="fused")
+        assert prog.with_backend("fused") is prog
+
+    @pytest.mark.parametrize("base,bad", [("fused", "fused_q8_batch"),
+                                          ("dense", "fused_batch"),
+                                          ("fused_q8", "fused_batch")])
+    def test_pack_incompatible_swap_rejected(self, base, bad):
+        params, _ = _gru_stack_and_xs()
+        prog = compile_deltagru(params, backend=base)
+        with pytest.raises(ValueError, match="packs weights differently"):
+            prog.with_backend(bad)
+
+
+class TestStreamTileContract:
+    @pytest.mark.parametrize("batched", ["fused_batch", "fused_q8_batch"])
+    def test_streamless_input_rejected_with_pointer(self, batched):
+        p = init_gru_layer(jax.random.PRNGKey(0), 8, 16)
+        st = init_deltagru_state(p, ())
+        with pytest.raises(ValueError, match="leading stream axis"):
+            deltagru_step(p, st, jnp.ones((8,)), 0.0, 0.0, backend=batched)
+
+    def test_width_one_tile_accepted(self):
+        """B=1 is a legal tile — the engine routes on stream COUNT, the
+        kernel contract only demands the axis exist."""
+        params, xs = _gru_stack_and_xs(b=1)
+        got, _, _ = deltagru_sequence(params, xs, 0.05, 0.1,
+                                      backend="fused_batch")
+        want, _, _ = deltagru_sequence(params, xs, 0.05, 0.1,
+                                       backend="fused")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestTileParity:
+    @pytest.mark.parametrize("interpret", [None, True])
+    @pytest.mark.parametrize("tx,th", THETAS)
+    def test_gru_fp32_bit_identical_to_fused_on_same_tile(self, interpret,
+                                                          tx, th):
+        """Same [T, B, I] tile through fused vs fused_batch: bit-identical
+        (same kernel, same union compaction — the batched name adds only
+        the contract), in jnp-ref AND Pallas-interpret modes."""
+        params, xs = _gru_stack_and_xs(key=1, b=4)
+        want, _, st_f = deltagru_sequence(params, xs, tx, th,
+                                          backend="fused",
+                                          interpret=interpret)
+        got, _, st_b = deltagru_sequence(params, xs, tx, th,
+                                         backend="fused_batch",
+                                         interpret=interpret)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert float(st_b["gamma_dx"]) == float(st_f["gamma_dx"])
+        assert float(st_b["gamma_dh"]) == float(st_f["gamma_dh"])
+
+    @pytest.mark.parametrize("interpret", [None, True])
+    @pytest.mark.parametrize("tx,th", THETAS)
+    def test_lstm_fp32_bit_identical_to_fused_on_same_tile(self, interpret,
+                                                           tx, th):
+        params = init_lstm_stack(jax.random.PRNGKey(2), 12, 24, 2)
+        xs = jax.random.normal(jax.random.PRNGKey(3), (14, 3, 12)) * 0.5
+        want, _, _ = deltalstm_sequence(params, xs, tx, th, backend="fused",
+                                        interpret=interpret)
+        got, _, _ = deltalstm_sequence(params, xs, tx, th,
+                                       backend="fused_batch",
+                                       interpret=interpret)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("cell", ["gru", "lstm"])
+    def test_q8_code_exact_to_fused_q8_on_same_tile(self, cell):
+        if cell == "gru":
+            params, xs = _gru_stack_and_xs(key=4, b=3)
+        else:
+            params = init_lstm_stack(jax.random.PRNGKey(5), 12, 24, 2)
+            xs = jax.random.normal(jax.random.PRNGKey(6), (14, 3, 12)) * 0.5
+        want, _, _ = (deltagru_sequence if cell == "gru"
+                      else deltalstm_sequence)(
+            params, xs, 0.05, 0.1, backend="fused_q8")
+        got, _, _ = (deltagru_sequence if cell == "gru"
+                     else deltalstm_sequence)(
+            params, xs, 0.05, 0.1, backend="fused_q8_batch")
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestCompanionStreamIndependence:
+    """Union compaction widens the fetched column set with the tile — it
+    must never change any stream's MATH. At fixed tile width, replacing
+    the companion streams (heterogeneous firing: loud companions fire
+    blocks the quiet stream never touches) leaves the quiet stream's
+    outputs bit-identical in fp32 and code-exact in q8."""
+
+    def _tiles(self, key=7, t=16, b=3, i=14, scale_loud=3.0):
+        k = jax.random.PRNGKey(key)
+        quiet = jnp.cumsum(
+            jax.random.normal(jax.random.fold_in(k, 0), (t, 1, i)) * 0.02,
+            axis=0)
+        comp_a = jax.random.normal(jax.random.fold_in(k, 1),
+                                   (t, b - 1, i)) * scale_loud
+        comp_b = jax.random.normal(jax.random.fold_in(k, 2),
+                                   (t, b - 1, i)) * scale_loud
+        return (jnp.concatenate([quiet, comp_a], axis=1),
+                jnp.concatenate([quiet, comp_b], axis=1))
+
+    @pytest.mark.parametrize("interpret", [None, True])
+    def test_fp32_stream0_bitwise_under_companion_swap(self, interpret):
+        params = init_gru_stack(jax.random.PRNGKey(8), 14, 32, 2)
+        xs_a, xs_b = self._tiles()
+        ya, _, _ = deltagru_sequence(params, xs_a, 0.05, 0.1,
+                                     backend="fused_batch",
+                                     interpret=interpret)
+        yb, _, _ = deltagru_sequence(params, xs_b, 0.05, 0.1,
+                                     backend="fused_batch",
+                                     interpret=interpret)
+        np.testing.assert_array_equal(np.asarray(ya)[:, 0],
+                                      np.asarray(yb)[:, 0])
+        # the companions really did differ (the swap was not a no-op)
+        assert not np.array_equal(np.asarray(ya)[:, 1:],
+                                  np.asarray(yb)[:, 1:])
+
+    def test_q8_stream0_code_exact_under_companion_swap(self):
+        params = init_gru_stack(jax.random.PRNGKey(9), 14, 32, 2)
+        xs_a, xs_b = self._tiles(key=10)
+        ya, _, _ = deltagru_sequence(params, xs_a, 0.05, 0.1,
+                                     backend="fused_q8_batch")
+        yb, _, _ = deltagru_sequence(params, xs_b, 0.05, 0.1,
+                                     backend="fused_q8_batch")
+        np.testing.assert_array_equal(np.asarray(ya)[:, 0],
+                                      np.asarray(yb)[:, 0])
+
+    def test_q8_batch_code_exact_to_solo_streams(self):
+        """The Q8.8 grid absorbs XLA's cross-width reassociation jitter:
+        every stream of a heterogeneous tile is code-exact to the same
+        stream served alone."""
+        params, xs = _gru_stack_and_xs(key=11, b=4)
+        qparams, layouts = quantize_stack(params)
+        prog = compile_delta_program(qparams, backend="fused_q8_batch",
+                                     layouts=layouts)
+        solo = compile_delta_program(qparams, backend="fused_q8",
+                                     layouts=layouts)
+        got, _, _ = prog.sequence(xs, 0.05, 0.1)
+        for s in range(xs.shape[1]):
+            want, _, _ = solo.sequence(xs[:, s:s + 1], 0.05, 0.1)
+            np.testing.assert_array_equal(np.asarray(got)[:, s],
+                                          np.asarray(want)[:, 0])
+
+    def test_fp32_batch_close_to_solo_streams(self):
+        """fp32 batch-vs-solo is NOT a bitwise property (XLA matmul row
+        results move ~1 ulp with the row count), but it is tight."""
+        params, xs = _gru_stack_and_xs(key=12, b=4)
+        got, _, _ = deltagru_sequence(params, xs, 0.05, 0.1,
+                                      backend="fused_batch")
+        for s in range(xs.shape[1]):
+            want, _, _ = deltagru_sequence(params, xs[:, s:s + 1], 0.05, 0.1,
+                                           backend="fused")
+            np.testing.assert_allclose(np.asarray(got)[:, s],
+                                       np.asarray(want)[:, 0], atol=1e-5)
+
+
+class TestUnionPerfModel:
+    def test_union_sparsity_independent_streams(self):
+        assert union_sparsity(1.0, 8) == 1.0
+        assert union_sparsity(0.0, 8) == 0.0
+        assert union_sparsity(0.9, 2) == pytest.approx(0.81)
+        # union only ever fires MORE columns than one stream
+        for b in (1, 2, 8):
+            assert union_sparsity(0.7, b) <= 0.7
+
+    def test_estimate_batched_tile_amortizes_weight_bytes(self):
+        dims = GruDims(64, 128, 2)
+        e1 = estimate_batched_tile(dims, 0.9, 0.9, 1)
+        e8 = estimate_batched_tile(dims, 0.9, 0.9, 8)
+        # the tile fetch grows with the union...
+        assert e8["tile_weight_bytes"] > e1["tile_weight_bytes"]
+        # ...but never past dense, so bytes/stream falls strictly
+        assert e8["weight_bytes_per_stream"] < e1["tile_weight_bytes"]
+        assert e8["throughput_ops"] > e1["throughput_ops"]
+
+
+class TestEngineRouting:
+    def _task(self, theta=0.05):
+        return GruTaskConfig(8, 16, 2, 3, task="regression",
+                             theta_x=theta, theta_h=theta)
+
+    def test_multi_stream_routes_to_tile_backend(self):
+        task = self._task()
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        eng = GruStreamEngine(params, task, n_streams=3)
+        assert eng.backend == "fused_batch"
+        rep = eng.report()
+        assert rep["weight_fetch"] == "tile"
+
+    def test_q8_multi_stream_routes_to_q8_tile_backend(self):
+        task = self._task()
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        eng = GruStreamEngine(params, task, backend="fused_q8", n_streams=2)
+        assert eng.backend == "fused_q8_batch"
+
+    def test_single_stream_stays_per_stream(self):
+        task = self._task()
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        eng = GruStreamEngine(params, task)
+        assert eng.backend == "fused"
+        assert eng.report()["weight_fetch"] == "stream"
+
+    def test_dense_has_no_tile_sibling_and_stays_dense(self):
+        task = self._task()
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        eng = GruStreamEngine(params, task, backend="dense", n_streams=3)
+        assert eng.backend == "dense"
+        assert eng.report()["weight_fetch"] == "stream"
+
+    def test_tile_report_prices_union_firing(self):
+        """Tile economics in report(): the union fires at least as much as
+        the per-stream mean (union gamma <= mean gamma), the tile fetch
+        sits between one stream's fetch and N of them, and bytes/stream
+        beats the served-alone mean on heterogeneous traffic."""
+        task = self._task()
+        params = init_gru_model(jax.random.PRNGKey(1), task)
+        n, t = 3, 24
+        rng = np.random.default_rng(2)
+        xs = rng.normal(size=(t, n, 8)).astype(np.float32)
+        eng = GruStreamEngine(params, task, n_streams=n)
+        eng.step_many(xs)
+        rep = eng.report()
+        assert rep["steps"] == t
+        assert rep["union_gamma_dx"] <= rep["gamma_dx"] + 1e-6
+        assert rep["union_gamma_dh"] <= rep["gamma_dh"] + 1e-6
+        per_stream_mean = rep["mean_weight_bytes_per_step"]
+        tile = rep["tile_weight_bytes_per_step"]
+        assert per_stream_mean <= tile <= n * per_stream_mean + 1e-6
+        assert rep["weight_bytes_per_stream_per_step"] == pytest.approx(
+            tile / n, rel=1e-6)
+        # heterogeneous random streams don't fire identical columns, so
+        # sharing the fetch is a strict per-stream win
+        assert rep["weight_bytes_per_stream_per_step"] < per_stream_mean
+
+    def test_stream_engine_report_has_no_tile_fields(self):
+        task = self._task()
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        eng = GruStreamEngine(params, task)
+        eng.step(np.zeros(8, np.float32))
+        rep = eng.report()
+        for key in ("union_gamma_dx", "tile_weight_bytes_per_step",
+                    "weight_bytes_per_stream_per_step"):
+            assert key not in rep
+
+    def test_step_equals_step_many_on_routed_engine(self):
+        task = self._task()
+        params = init_gru_model(jax.random.PRNGKey(3), task)
+        n, t = 3, 12
+        rng = np.random.default_rng(4)
+        xs = rng.normal(size=(t, n, 8)).astype(np.float32)
+        e1 = GruStreamEngine(params, task, n_streams=n)
+        outs1 = np.stack([np.asarray(e1.step(x)) for x in xs])
+        e2 = GruStreamEngine(params, task, n_streams=n)
+        outs2 = np.asarray(e2.step_many(xs))
+        np.testing.assert_allclose(outs1, outs2, atol=1e-6)
+        r1, r2 = e1.report(), e2.report()
+        for key in ("steps", "gamma_dx", "gamma_dh", "union_gamma_dx",
+                    "union_gamma_dh", "tile_weight_bytes_per_step",
+                    "mean_est_latency_us"):
+            assert r1[key] == pytest.approx(r2[key], rel=1e-5), key
+
+    def test_batcher_slot_recycling_isolated_on_tile_backend(self):
+        """Slot recycling through the batcher on a ROUTED (tile-fetch)
+        engine: a quiet successor admitted into a loud predecessor's slot
+        reports only its own served-alone accounting, even though both
+        rode tiles whose union fetch the predecessor dominated."""
+        task = self._task()
+        params = init_gru_model(jax.random.PRNGKey(5), task)
+        eng = GruStreamEngine(params, task, n_streams=2)
+        assert eng.backend == "fused_batch"
+        cb = GruStreamBatcher(eng)
+        rng = np.random.default_rng(6)
+        loud = [(3.0 * rng.normal(size=(6, 8))).astype(np.float32)
+                for _ in range(2)]
+        quiet = np.cumsum(rng.normal(size=(6, 8)) * 0.02,
+                          axis=0).astype(np.float32)
+        uids = [cb.submit(s) for s in loud] + [cb.submit(quiet)]
+        by_uid = {r.uid: r for r in cb.run_until_drained()}
+        got = by_uid[uids[2]].stats
+        solo = GruStreamEngine(params, task)
+        solo.step_many(quiet)
+        want = solo.report()
+        assert got["steps"] == 6
+        assert got["gamma_dh"] == pytest.approx(want["gamma_dh"], abs=1e-5)
+        assert got["w_bytes"] == pytest.approx(
+            want["mean_weight_bytes_per_step"] * 6, rel=1e-3)
+        assert by_uid[uids[0]].stats["w_bytes"] > 3 * got["w_bytes"]

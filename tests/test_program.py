@@ -24,7 +24,8 @@ from repro.quant.export import quantize_gru_model
 from repro.serve.engine import GruStreamEngine
 from repro.serve.scheduler import GruStreamBatcher
 
-ALL_BACKENDS = ("dense", "blocksparse", "fused", "fused_q8")
+ALL_BACKENDS = ("dense", "fused", "fused_q8", "fused_batch",
+                "fused_q8_batch")
 
 
 def _stack_and_xs(key=0, i=10, h=24, layers=2, t=14, b=2):
@@ -42,7 +43,7 @@ class TestRegistry:
     def test_spec_fields(self):
         assert get_backend("fused_q8").m_init == "zero"
         assert get_backend("fused_q8").weight_bits == 8
-        for be in ("dense", "blocksparse", "fused"):
+        for be in ("dense", "fused", "fused_batch"):
             assert get_backend(be).m_init == "bias"
             assert get_backend(be).weight_bits == 32
         assert not get_backend("fused").supports_custom_acts
@@ -113,7 +114,7 @@ class TestCompileEquivalence:
         """Programs pass through jit as arguments (layers/layouts are
         leaves, backend is static)."""
         params, xs = _stack_and_xs()
-        for backend in ("fused", "fused_q8", "blocksparse"):
+        for backend in ("fused", "fused_q8", "fused_batch"):
             prog = compile_deltagru(params, backend=backend)
             fn = jax.jit(lambda p, xs: p.sequence(
                 xs, 0.05, 0.1, collect_sparsity=False)[0])
