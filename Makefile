@@ -1,12 +1,12 @@
 # EdgeDRNN reproduction — tier-1 + perf-gate entry points.
 export PYTHONPATH := src
 
-.PHONY: test bench bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick check-regression ci
+.PHONY: test bench bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick soak-quick check-regression ci
 
 test:            ## tier-1 suite
 	python -m pytest -x -q
 
-ci: test bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick check-regression  ## full gate: tier-1 + quick benches (GRU + LSTM parity + LSTM q8 parity/bytes + batched tile invariant) + perf regression
+ci: test bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick soak-quick check-regression  ## full gate: tier-1 + quick benches (GRU + LSTM parity + LSTM q8 parity/bytes + batched tile invariant + resilient-serving soak) + perf regression
 
 bench:           ## full paper tables/figures + kernel benches (rewrites BENCH_*.json)
 	python -m benchmarks.run
@@ -22,6 +22,9 @@ bench-lstm-q8-quick:  ## quantized DeltaLSTM parity/bytes quick path (hard fused
 
 bench-batch-quick:  ## measured batched-tile sweep quick path (hard matched-firing bytes/stream invariant, no baseline writes)
 	python -m benchmarks.fig13_batch_sweep --quick
+
+soak-quick:      ## resilient-serving chaos soak quick path (hard bitwise-parity + crash-recovery + dynamic-theta asserts, no baseline writes)
+	python -m benchmarks.soak_serving --quick
 
 check-regression:  ## gate fresh fused-path wall time / bytes model vs committed baselines
 	python -m benchmarks.check_regression

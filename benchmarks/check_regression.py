@@ -32,6 +32,14 @@ gate always compares apples to apples), then:
   (union compaction collapses identical streams), so weight bytes per
   stream per step at B=8 is *strictly below* the batch-1 baseline at
   matched firing — the whole point of serving a tile per weight pass;
+* gates the resilient-serving soak (``BENCH_soak.json``): the chaos run
+  is seeded and every policy trigger is tick-counted, so its completed/
+  shed/rejected/quarantined/recovered counts, restart count, bitwise
+  parity count, Θ trajectory peak and engine lifetime steps must
+  reproduce EXACTLY on any machine (the soak re-run itself hard-fails if
+  any completed stream's outputs drift bitwise from a clean reference or
+  any quarantine fails to recover); its p99 steady-state tick wall is
+  gated at 1.5x on the baseline's machine class;
 * wall-time comparison is only meaningful on the machine class that
   produced the baseline: when ``device``/``machine`` metadata disagree the
   gate downgrades wall checks to a warning and keeps the bytes gate.
@@ -211,6 +219,50 @@ def _gate_batch_matched_bytes(fresh, failures):
                   f"{ps:.0f} (batch-1 fetch {b1:.0f})")
 
 
+def _gate_soak(base, fresh, failures, same_machine):
+    """The resilient-serving soak gates on EXACT reproduction: every
+    policy trigger is tick-counted and the fault plan is seeded, so the
+    shed/rejected/quarantined/recovered/completed counts, restart count,
+    bitwise-parity count, Θ peak (Q8.8-gridded) and engine lifetime steps
+    must match the committed record on ANY machine. Only the wall-clock
+    p99 tick time is machine-bound (1.5x, same machine class only); the
+    wall-derived straggler/heartbeat flags are never gated."""
+    wall_keys = ("straggler_flags", "missed_heartbeats")
+
+    def counts(phase):
+        c = {k: v for k, v in phase["counters"].items()
+             if k not in wall_keys}
+        for k in ("statuses", "restarts", "parity_ok", "ticks",
+                  "engine_steps", "engine_poison_steps", "theta_peak"):
+            if k in phase:
+                c[k] = phase[k]
+        return c
+
+    for name in ("phase_a", "phase_b"):
+        b, f = counts(base[name]), counts(fresh[name])
+        if b != f:
+            diff = {k: (b.get(k), f.get(k))
+                    for k in sorted(set(b) | set(f)) if b.get(k) != f.get(k)}
+            failures.append(
+                f"SOAK DETERMINISM {name}: tick-exact counts moved vs the "
+                f"committed record: {diff} (regenerate baseline if "
+                "intentional)")
+        else:
+            print(f"ok   soak {name}: tick-exact counts reproduced "
+                  f"(completed={base[name]['counters']['completed']})")
+        if same_machine:
+            ratio = (fresh[name]["p99_tick_wall_s"]
+                     / max(base[name]["p99_tick_wall_s"], 1e-9))
+            line = (f"soak {name} p99 tick: "
+                    f"{base[name]['p99_tick_wall_s'] * 1e6:.0f} -> "
+                    f"{fresh[name]['p99_tick_wall_s'] * 1e6:.0f} us "
+                    f"({ratio:.2f}x)")
+            if ratio > MAX_WALL_RATIO:
+                failures.append(f"WALL REGRESSION {line}")
+            else:
+                print(f"ok   {line}")
+
+
 def main() -> int:
     from benchmarks import kernel_bench as kb
 
@@ -338,6 +390,30 @@ def main() -> int:
                 "batch-sweep baseline was recorded on a different machine "
                 "class; wall-time gate skipped, tile-bytes model enforced "
                 "at 2% tolerance")
+
+    from benchmarks import soak_serving as soak
+    base_soak = _load(soak.SOAK_JSON)
+    if base_soak is not None:
+        cfg = {k: base_soak["config"][k] for k in soak.CFG_KEYS
+               if k in base_soak["config"]}
+        try:
+            # bench_soak_record hard-fails on the recovery contract:
+            # bitwise parity of every completed stream vs its clean
+            # reference, exactly-one crash restore, every quarantine
+            # recovered, Θ rise + decay. A completed record certifies all
+            # of that; the gate then pins the counts to the baseline.
+            _, fresh_soak = soak.bench_soak_record(**cfg)
+        except AssertionError as e:
+            failures.append(f"SOAK RECOVERY {e}")
+        else:
+            same_machine = _comparable(base_soak["config"],
+                                       fresh_soak["config"])
+            if not same_machine:
+                warnings.append(
+                    "soak baseline was recorded on a different machine "
+                    "class; wall-time gate skipped, tick-exact count gate "
+                    "still enforced")
+            _gate_soak(base_soak, fresh_soak, failures, same_machine)
 
     for w in warnings:
         print(f"warn {w}")

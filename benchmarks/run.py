@@ -19,7 +19,7 @@ import traceback
 def _suites(quick: bool):
     from benchmarks import (fig9_threshold_sweep, fig10_11_dual_threshold,
                             fig13_batch_sweep, fig14_15_latency_traces,
-                            kernel_bench, table2_perfmodel,
+                            kernel_bench, soak_serving, table2_perfmodel,
                             table6_7_comparison)
     if quick:
         # the LSTM quick pass is its own `make ci` stage
@@ -34,6 +34,10 @@ def _suites(quick: bool):
         ("fig14_15", fig14_15_latency_traces.run),
         ("fig9", fig9_threshold_sweep.run),
         ("fig10_11", fig10_11_dual_threshold.run),
+        # rewrites BENCH_soak.json; the CI spelling of the quick pass is
+        # its own `make ci` stage (`python -m benchmarks.soak_serving
+        # --quick`), so it is NOT repeated in --quick here
+        ("soak", soak_serving.run),
     ]
     # roofline suites are additive: an import failure there (it pulls the
     # whole configs registry) must not take down the paper-table suites

@@ -1,0 +1,250 @@
+"""Resilient-serving soak: seeded chaos through the supervised engine.
+
+Drives :func:`repro.serve.resilience.serve_resumable` with a deterministic
+arrival schedule and a seeded :class:`repro.serve.faults.FaultPlan`
+(NaN/Inf sensor frames, one slot-state corruption, a stall, one mid-soak
+crash + checkpoint restore), then HARD-asserts the recovery contract
+before writing any numbers:
+
+* every completed stream's outputs are BITWISE a clean same-width
+  reference run of its sanitized frames (the chaos invariant: the device
+  frame guard is semantically host-side ``sanitize_frames``, rollback
+  replay is deterministic, crash replay restarts the recurrence from
+  frame 0) — ``parity_ok`` must equal the completed count;
+* the planned crash fired exactly once and the run restored from the
+  published checkpoint (``restarts == 1``);
+* every quarantine recovered in place (``recovered == quarantined``, and
+  at least the seeded poison streams hit the policy).
+
+A second fault-free phase floods the bounded queue with the overload
+controller enabled and records the dynamic-Θ trajectory (Θ_h rises under
+queue pressure, decays back to baseline on drain). Outputs there are NOT
+parity-checked — raising Θ legitimately changes them; the phase is gated
+on its (tick-deterministic) counters and Θ peak instead.
+
+Every policy trigger in both phases is counted in ticks, so all recorded
+counts — shed/rejected/quarantined/recovered/completed, restarts, Θ peak
+(Q8.8-gridded), engine lifetime steps — are exactly reproducible and
+``check_regression`` gates them as hard numbers; only the wall-clock p99
+tick time is machine-dependent (gated at 1.5x on the baseline's machine
+class). The wall-derived straggler/heartbeat flags are recorded but never
+gated.
+
+``python -m benchmarks.soak_serving`` rewrites ``BENCH_soak.json``;
+``--quick`` (the ``make soak-quick`` CI stage) runs a reduced schedule
+with the same hard asserts and writes nothing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+SOAK_JSON = os.path.join(os.path.dirname(__file__), "BENCH_soak.json")
+
+# the knobs a record's config block must pin for an exact re-run
+CFG_KEYS = ("t", "input", "hidden", "layers", "n_arrivals", "n_streams",
+            "seed", "fault_seed", "min_len", "max_len", "max_gap",
+            "poison_streams", "inf_streams", "poison_frames",
+            "corrupt_slot_at", "stall_ticks", "crash_at_tick",
+            "overload_arrivals", "overload_queue")
+
+DEFAULTS = dict(t=0, input=8, hidden=16, layers=2, n_arrivals=120,
+                n_streams=8, seed=1234, fault_seed=99, min_len=5,
+                max_len=30, max_gap=4, poison_streams=(17, 90),
+                inf_streams=(55,), poison_frames=4,
+                corrupt_slot_at=((40, 3),), stall_ticks=(25,),
+                crash_at_tick=60, overload_arrivals=60, overload_queue=4)
+
+
+def _steady_p99(walls):
+    """p99 tick wall over the steady-state ticks: the handful of ticks
+    that trigger XLA compilation (engine construction, post-crash
+    restore) run ~500x the jitted step and are a compiler property, not a
+    serving one — drop anything 50x over the median before taking p99."""
+    if not walls:
+        return 0.0
+    walls = sorted(walls)
+    med = walls[len(walls) // 2]
+    steady = [w for w in walls if w <= 50 * med] or walls
+    return steady[min(len(steady) - 1, int(0.99 * len(steady)))]
+
+
+def _arrivals(n, seed, min_len, max_len, max_gap, input_size):
+    rng = np.random.default_rng(seed)
+    out, t = [], 0
+    for _ in range(n):
+        frames = rng.standard_normal(
+            (int(rng.integers(min_len, max_len)), input_size)
+        ).astype(np.float32)
+        out.append((t, frames))
+        t += int(rng.integers(0, max_gap))
+    return out
+
+
+def bench_soak_record(**cfg):
+    from repro.models.gru_rnn import GruTaskConfig, init_gru_model
+    from repro.quant.export import quantize_delta_model
+    from repro.serve.engine import DeltaStreamEngine
+    from repro.serve.faults import FaultPlan, sanitize_frames
+    from repro.serve.resilience import ResiliencePolicy, serve_resumable
+
+    c = {**DEFAULTS, **cfg}
+    task = GruTaskConfig(c["input"], c["hidden"], c["layers"], 3,
+                         task="regression", theta_x=0.05, theta_h=0.05)
+    params = init_gru_model(jax.random.PRNGKey(0), task)
+    prog = quantize_delta_model(params)
+    arrivals = _arrivals(c["n_arrivals"], c["seed"], c["min_len"],
+                         c["max_len"], c["max_gap"], c["input"])
+    plan = FaultPlan(
+        seed=c["fault_seed"],
+        poison_streams=tuple(c["poison_streams"]),
+        inf_streams=tuple(c["inf_streams"]),
+        poison_frames=c["poison_frames"],
+        corrupt_slot_at=tuple((int(t), int(s))
+                              for t, s in c["corrupt_slot_at"]),
+        stall_ticks=tuple(c["stall_ticks"]), stall_s=0.02,
+        crash_at_tick=c["crash_at_tick"])
+
+    # -- phase A: chaos soak, overload OFF (outputs must be reference-
+    # exact, so Θ stays pinned at the baseline) --------------------------
+    with tempfile.TemporaryDirectory(prefix="soak_ckpt_") as ckpt_dir:
+        policy = ResiliencePolicy(
+            max_queue=64, deadline_ticks=60, quarantine_after=3,
+            on_quarantine="readmit", check_every=8, ckpt_dir=ckpt_dir,
+            ckpt_every=32)
+        results, srv, restarts = serve_resumable(
+            prog, task, arrivals, policy, n_streams=c["n_streams"],
+            fault_plan=plan)
+
+    statuses = {s: sum(1 for r in results.values() if r.status == s)
+                for s in ("ok", "shed", "rejected", "quarantined")}
+    counters = dict(srv.counters)
+    rep = srv.report()
+
+    # hard recovery contract (a completed record certifies these)
+    assert restarts == 1, \
+        f"planned crash at tick {c['crash_at_tick']} yielded " \
+        f"restarts={restarts} (expected exactly 1 checkpoint restore)"
+    assert counters["recovered"] == counters["quarantined"], \
+        f"quarantined={counters['quarantined']} but only " \
+        f"{counters['recovered']} recovered (readmit policy must recover " \
+        "every quarantine in place)"
+    assert counters["quarantined"] >= len(c["poison_streams"]) + \
+        len(c["inf_streams"]), \
+        f"only {counters['quarantined']} quarantines for " \
+        f"{len(c['poison_streams']) + len(c['inf_streams'])} seeded " \
+        "poison streams"
+    assert sum(statuses.values()) == c["n_arrivals"]
+
+    # bitwise chaos invariant: ok outputs == clean same-width reference
+    # run of the sanitized fed frames (same tile width pins the head
+    # matmul's XLA reassociation; slot position is bitwise-neutral)
+    ref = DeltaStreamEngine(prog, task, n_streams=c["n_streams"])
+    parity_ok = 0
+    for i, (_, frames) in enumerate(arrivals):
+        r = results[i]
+        if r.status != "ok":
+            continue
+        fed = sanitize_frames(plan.poison_stream(i, frames))
+        ref.reset()
+        sid = ref.open_stream()
+        xs = np.zeros((len(fed), c["n_streams"], c["input"]), np.float32)
+        xs[:, sid] = fed
+        want = np.asarray(ref.step_many(xs))[:, sid]
+        got = np.stack([np.asarray(o) for o in r.outputs])
+        assert np.array_equal(got, want), \
+            f"soak parity: arrival {i} ({r.status}, {len(fed)} frames) " \
+            "diverged from its clean same-width reference"
+        parity_ok += 1
+    assert parity_ok == statuses["ok"]
+
+    phase_a = {
+        "statuses": statuses,
+        "counters": counters,
+        "restarts": restarts,
+        "parity_ok": parity_ok,
+        "ticks": rep["ticks"],
+        "engine_steps": rep["engine"]["steps"],
+        "engine_poison_steps": rep["engine"]["poison_steps"],
+        "p99_tick_wall_s": _steady_p99(srv.tick_wall_s),
+    }
+
+    # -- phase B: fault-free overload flood, dynamic-Θ controller ON ------
+    flood = _arrivals(c["overload_arrivals"], c["seed"] + 1, c["min_len"],
+                      c["max_len"], 2, c["input"])
+    policy_b = ResiliencePolicy(
+        max_queue=256, deadline_ticks=None, check_every=4,
+        overload_queue=c["overload_queue"], theta_max=0.5)
+    results_b, srv_b, _ = serve_resumable(prog, task, flood, policy_b,
+                                          n_streams=c["n_streams"])
+    for _ in range(policy_b.check_every * 12):   # idle ticks: Θ decays
+        srv_b.tick()
+    rep_b = srv_b.report()
+    theta_base = float(srv_b._theta_base)
+    assert srv_b.theta_peak > theta_base, \
+        f"overload flood never raised Θ_h above baseline {theta_base}"
+    assert abs(srv_b.engine.theta_h - theta_base) < 1e-6, \
+        f"Θ_h did not decay back to baseline after drain: " \
+        f"{srv_b.engine.theta_h} vs {theta_base}"
+    assert all(r.status == "ok" for r in results_b.values())
+    phase_b = {
+        "counters": dict(srv_b.counters),
+        "theta_peak": srv_b.theta_peak,  # Q8.8-gridded -> exactly gateable
+        "theta_base": theta_base,
+        "ticks": rep_b["ticks"],
+        "engine_steps": rep_b["engine"]["steps"],
+        "p99_tick_wall_s": _steady_p99(srv_b.tick_wall_s),
+    }
+
+    from benchmarks.kernel_bench import record_meta
+    record = {"config": {**{k: c[k] for k in CFG_KEYS}, **record_meta()},
+              "phase_a": phase_a, "phase_b": phase_b}
+    lines = [
+        "soak_chaos,completed,%d" % statuses["ok"],
+        "soak_chaos,shed,%d" % statuses["shed"],
+        "soak_chaos,rejected,%d" % statuses["rejected"],
+        "soak_chaos,quarantined,%d" % counters["quarantined"],
+        "soak_chaos,recovered,%d" % counters["recovered"],
+        "soak_chaos,restarts,%d" % restarts,
+        "soak_chaos,parity_ok,%d" % parity_ok,
+        "soak_chaos,p99_tick_us,%.1f" % (phase_a["p99_tick_wall_s"] * 1e6),
+        "soak_overload,theta_peak,%.6f" % phase_b["theta_peak"],
+        "soak_overload,theta_raises,%d" % phase_b["counters"]["theta_raises"],
+        "soak_overload,p99_tick_us,%.1f" % (phase_b["p99_tick_wall_s"] * 1e6),
+    ]
+    return lines, record
+
+
+def run() -> list[str]:
+    """Full soak; rewrites the ``BENCH_soak.json`` baseline."""
+    lines, record = bench_soak_record()
+    with open(SOAK_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    lines.append(f"wrote {SOAK_JSON}")
+    return lines
+
+
+def run_quick() -> list[str]:
+    """Reduced CI pass (``make soak-quick``): the same hard parity /
+    recovery / Θ-trajectory asserts on a shorter schedule, no writes."""
+    lines, _ = bench_soak_record(
+        n_arrivals=48, poison_streams=(7, 20), inf_streams=(33,),
+        corrupt_slot_at=((24, 1),), stall_ticks=(15,), crash_at_tick=40,
+        overload_arrivals=24)
+    return lines
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced CI pass (hard asserts, no JSON writes)")
+    args = ap.parse_args()
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                    "src"))
+    print("\n".join(run_quick() if args.quick else run()))

@@ -22,12 +22,28 @@ import os
 import shutil
 import threading
 import time
+from dataclasses import dataclass
 from typing import Any
 
 import jax
 import numpy as np
 
 Array = jax.Array
+
+
+@dataclass
+class WriteHandle:
+    """Tracks one (possibly background) checkpoint write.
+
+    ``event`` is set when the write finishes — successfully OR not; a
+    failed write records its exception in ``error`` instead of dying
+    silently on the daemon thread. :meth:`CheckpointManager.wait` re-raises
+    it on the caller's thread.
+    """
+
+    event: threading.Event
+    error: BaseException | None = None
+    path: str | None = None
 
 
 def _tree_paths(tree):
@@ -43,9 +59,16 @@ def _checksum(arr: np.ndarray) -> str:
 
 
 def save(ckpt_dir: str, step: int, state, *, async_write: bool = False,
-         _done_event: threading.Event | None = None) -> str:
+         _done_event: threading.Event | None = None,
+         _handle: WriteHandle | None = None) -> str:
     """Save ``state`` (any pytree of arrays) for ``step``. Returns the path
-    (final path; with ``async_write`` the data lands shortly after)."""
+    (final path; with ``async_write`` the data lands shortly after).
+
+    ``_handle``: a :class:`WriteHandle` to report completion/failure
+    through — a background write that throws records the exception there
+    (and still sets the event) instead of evaporating with the daemon
+    thread; a synchronous write re-raises immediately.
+    """
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
 
@@ -71,13 +94,29 @@ def save(ckpt_dir: str, step: int, state, *, async_write: bool = False,
         with open(latest_tmp, "w") as f:
             f.write(os.path.basename(final))
         os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
-        if _done_event is not None:
-            _done_event.set()
+
+    def run_write():
+        try:
+            write()
+            if _handle is not None:
+                _handle.path = final
+        except BaseException as e:                 # noqa: BLE001
+            if _handle is not None:
+                _handle.error = e
+            else:
+                raise
+        finally:
+            if _handle is not None:
+                _handle.event.set()
+            if _done_event is not None:
+                _done_event.set()
 
     if async_write:
-        threading.Thread(target=write, daemon=True).start()
+        threading.Thread(target=run_write, daemon=True).start()
     else:
-        write()
+        run_write()
+        if _handle is not None and _handle.error is not None:
+            raise _handle.error
     return final
 
 
@@ -116,10 +155,22 @@ def restore(ckpt_dir: str, target_tree, step: int | None = None,
         arr = np.load(os.path.join(path, entry["file"]))
         if verify and _checksum(arr) != entry["sha"]:
             raise IOError(f"checksum mismatch for {p} in {path}")
+        tgt_arr = np.asarray(tgt)
+        if tuple(arr.shape) != tuple(tgt_arr.shape):
+            raise ValueError(
+                f"checkpoint leaf {p!r} has logical shape {arr.shape} but "
+                f"the restore target expects {tgt_arr.shape} — the "
+                "checkpoint was taken for a different model/engine "
+                "configuration")
+        # cast to the TARGET dtype on both branches: the sharded branch
+        # used to skip it, so restoring e.g. an old fp32 save onto an int8
+        # q8 layout silently kept the on-disk dtype and flowed wrong-width
+        # arrays into the kernels
+        arr = arr.astype(tgt_arr.dtype)
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         else:
-            out.append(jax.device_put(arr.astype(tgt.dtype)))
+            out.append(jax.device_put(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
@@ -133,22 +184,41 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         os.makedirs(ckpt_dir, exist_ok=True)
-        self._pending: list[threading.Event] = []
+        self._pending: list[WriteHandle] = []
 
     def maybe_save(self, step: int, state) -> bool:
         if step % self.every:
             return False
-        ev = threading.Event()
+        handle = WriteHandle(threading.Event())
         save(self.dir, step, state, async_write=self.async_write,
-             _done_event=ev)
-        self._pending.append(ev)
+             _handle=handle)
+        self._pending.append(handle)
         self._gc()
         return True
 
-    def wait(self, timeout: float = 60.0):
-        for ev in self._pending:
-            ev.wait(timeout)
-        self._pending.clear()
+    def wait(self, timeout: float = 60.0) -> bool:
+        """Block until every pending async write has published.
+
+        Returns ``True`` when all pending writes landed; ``False`` when one
+        timed out (it stays pending for the next ``wait``). A write that
+        FAILED re-raises its exception here, on the caller's thread — the
+        old implementation discarded ``Event.wait``'s return value and
+        swallowed background-thread exceptions, so a hung or failed write
+        passed silently and the "checkpoint" a restart would rely on never
+        existed.
+        """
+        still_pending: list[WriteHandle] = []
+        first_error: BaseException | None = None
+        for handle in self._pending:
+            if not handle.event.wait(timeout):
+                still_pending.append(handle)
+                continue
+            if handle.error is not None and first_error is None:
+                first_error = handle.error
+        self._pending = still_pending
+        if first_error is not None:
+            raise first_error
+        return not still_pending
 
     def _gc(self):
         steps = sorted(

@@ -51,6 +51,11 @@ class HeartbeatMonitor:
     def dead_workers(self) -> list[str]:
         return [w for w, ok in self.check().items() if not ok]
 
+    def age(self, worker_id: str) -> float:
+        """Seconds since ``worker_id``'s last beat (raises if unknown)."""
+        with self._lock:
+            return self._clock() - self._workers[worker_id].last_beat
+
     @property
     def all_alive(self) -> bool:
         return not self.dead_workers()

@@ -1,9 +1,18 @@
 """Crash-consistent restart orchestration.
 
-``run_resumable`` wraps a training loop so that any crash (node failure,
-preemption, straggler escalation) resumes from the last published
-checkpoint with bitwise-identical state — the restart test proves loss
-continuity. Elastic restarts pass a new mesh; the checkpoint reshards.
+Two layers:
+
+* :func:`with_restarts` — the generic driver: run a resumable body to
+  completion, retrying on failure up to a restart budget. The body must be
+  resumable *by construction* (consult the published checkpoint on entry);
+  the driver only supplies the retry loop, so the same machinery serves
+  the training loop below and the resilient serving tier
+  (``repro.serve.resilience.serve_resumable``).
+* :func:`run_resumable` — wraps a training loop so that any crash (node
+  failure, preemption, straggler escalation) resumes from the last
+  published checkpoint with bitwise-identical state — the restart test
+  proves loss continuity. Elastic restarts pass a new mesh; the
+  checkpoint reshards.
 """
 from __future__ import annotations
 
@@ -20,6 +29,29 @@ class RestartPolicy:
     save_every: int = 10
 
 
+def with_restarts(body: Callable, max_restarts: int = 3, *,
+                  on_restart: Callable | None = None,
+                  retryable: tuple = (Exception,)):
+    """Run ``body()`` to completion, retrying on failure.
+
+    ``body`` must make itself resumable (e.g. restore from the latest
+    published checkpoint when one exists) — this driver re-enters it from
+    the top after every failure. Exceptions outside ``retryable`` (and any
+    failure past ``max_restarts``) propagate. ``on_restart(restart_no)``
+    runs before each re-entry. Returns ``(result, restarts)``.
+    """
+    restarts = 0
+    while True:
+        try:
+            return body(), restarts
+        except retryable:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(restarts)
+
+
 def run_resumable(make_state: Callable, step_fn: Callable,
                   batch_iter_fn: Callable, num_steps: int,
                   policy: RestartPolicy, shardings=None) -> tuple:
@@ -33,32 +65,25 @@ def run_resumable(make_state: Callable, step_fn: Callable,
     """
     mgr = ckpt.CheckpointManager(policy.ckpt_dir, every=policy.save_every,
                                  keep=3, async_write=False)
-    restarts = 0
-    history = []
-
+    history: list = []
     template = make_state()
-    start = ckpt.latest_step(policy.ckpt_dir) or 0
-    state = (ckpt.restore(policy.ckpt_dir, template, shardings=shardings)
-             if start else template)
 
-    step = start
-    while step < num_steps:
-        try:
-            batches = batch_iter_fn(step)
-            while step < num_steps:
-                batch = next(batches)
-                state, metrics = step_fn(state, batch)
-                step += 1
-                history.append({k: float(v) for k, v in metrics.items()})
-                mgr.maybe_save(step, state)
-        except Exception:
-            restarts += 1
-            if restarts > policy.max_restarts:
-                raise
-            resume = ckpt.latest_step(policy.ckpt_dir) or 0
-            state = (ckpt.restore(policy.ckpt_dir, template,
-                                  shardings=shardings)
-                     if resume else make_state())
-            history = history[:resume]
-            step = resume
+    def body():
+        nonlocal history
+        start = ckpt.latest_step(policy.ckpt_dir) or 0
+        state = (ckpt.restore(policy.ckpt_dir, template,
+                              shardings=shardings)
+                 if start else template)
+        history = history[:start]
+        step = start
+        batches = batch_iter_fn(step)
+        while step < num_steps:
+            batch = next(batches)
+            state, metrics = step_fn(state, batch)
+            step += 1
+            history.append({k: float(v) for k, v in metrics.items()})
+            mgr.maybe_save(step, state)
+        return state
+
+    state, restarts = with_restarts(body, policy.max_restarts)
     return state, history, restarts

@@ -55,6 +55,19 @@ class StragglerDetector:
         action = self.policy if stragglers else "none"
         return StragglerReport(stragglers, med, worst, action)
 
+    def observe_solo(self, worker: str, step_s: float,
+                     ref_s: float) -> StragglerReport:
+        """Single-pipeline convenience (the serving tier has one loop, not
+        a fleet): compare ``worker``'s step time to a reference wall (e.g.
+        the best tick observed so far) instead of a fleet median. Two
+        phantom reference entries pin the median at ``ref_s``, so the
+        standard factor/patience machinery applies unchanged — a serve
+        tick that blows past ``factor`` x its own best for ``patience``
+        consecutive ticks is flagged exactly like a fleet straggler.
+        """
+        return self.observe({worker: step_s, "_ref0": ref_s,
+                             "_ref1": ref_s})
+
     @staticmethod
     def rescale_factor(n_workers: int, n_dropped: int) -> float:
         """Gradient rescale when dropping k of N DP shards."""

@@ -1,5 +1,9 @@
 """Serving substrate: batched LM engine (prefill/decode), the paper's
 streaming DeltaGRU engine (compiled-program driven, with per-stream
-open/close sessions), and the continuous-batching schedulers
+open/close sessions, device-side frame guarding, snapshot/rollback and
+checkpoint/restore), the continuous-batching schedulers
 (``ContinuousBatcher`` over LM decode slots, ``GruStreamBatcher`` over
-DeltaGRU stream sessions)."""
+delta-RNN stream sessions), and the resilience tier
+(``resilience.ResilientStreamServer`` — quarantine/shed/overload/restart
+supervision — with ``faults.FaultPlan`` as its deterministic chaos
+harness)."""

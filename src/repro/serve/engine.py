@@ -51,6 +51,30 @@ jitted step as a device carry — nothing forces a host round-trip until
 exactly once. (The seed called ``float(fx)``/``float(fh)`` and a host-side
 ``estimate_stack`` every timestep: three blocking transfers per frame,
 which capped streaming throughput at Python-dispatch rate.)
+
+Because the streams are long-lived and the state is recurrent, the engine
+also carries a **resilience layer** (all device-side, zero-sync like the
+stats):
+
+* a *frame guard* inside the jitted step — a frame containing any
+  non-finite component is replaced by that stream's previous (guarded)
+  frame, i.e. masked into the zero-delta silent regime, so one poisoned
+  sensor reading can never permanently corrupt the hidden state; guarded
+  frames are counted in a per-slot ``poison_steps`` carry, and a per-slot
+  ``bad_state`` counter tracks steps whose *post-step stack state* went
+  non-finite (direct state corruption — the guard makes this impossible
+  from inputs alone);
+* per-slot **snapshot/rollback** (:meth:`snapshot_streams` /
+  :meth:`rollback_stream`) — the same masked-select mechanism as the
+  session reset, against a device-resident shadow copy of the slot rows;
+* whole-engine **checkpoint/restore** (:meth:`checkpoint` /
+  :meth:`restore`) over :mod:`repro.ft.checkpoint`, carrying the exact
+  accounting aggregates so a restarted server's :meth:`report` continues
+  where the crashed one stopped.
+
+``serve.resilience.ResilientStreamServer`` drives these into a
+quarantine/shed/restart policy; ``serve.faults.FaultPlan`` is the
+deterministic chaos harness that exercises them.
 """
 from __future__ import annotations
 
@@ -69,6 +93,7 @@ from repro.core.perf_model import (EDGEDRNN, AcceleratorSpec,
                                    stack_latency_s)
 from repro.core.program import (DeltaProgram, compile_delta_program,
                                 infer_cell)
+from repro.ft import checkpoint as ft_checkpoint
 from repro.core.sparsity import cell_dims
 from repro.core.thresholds import ThresholdPolicy, dynamic_threshold
 from repro.models.gru_rnn import GruTaskConfig
@@ -133,6 +158,11 @@ class StreamStats:
     ufired_h: float = 0.0
     tile_est_latency_s: float = 0.0
     tile_w_bytes: float = 0.0
+    # resilience counters (engine-lifetime TOTALS across all streams):
+    # frames the guard masked to the silent regime / steps whose post-step
+    # stack state went non-finite
+    poison_steps: float = 0.0
+    bad_state_steps: float = 0.0
 
     @property
     def gamma_dx(self) -> float:
@@ -197,7 +227,8 @@ class DeltaStreamEngine:
     not the training-time fiction.
     """
 
-    _PER_STREAM_KEYS = ("fired_x", "fired_h", "lat_s", "w_bytes")
+    _PER_STREAM_KEYS = ("fired_x", "fired_h", "lat_s", "w_bytes",
+                        "poison_steps", "bad_state")
 
     def __init__(self, program, task: GruTaskConfig,
                  thresholds: ThresholdPolicy | None = None,
@@ -268,6 +299,19 @@ class DeltaStreamEngine:
         else:
             self._theta_x_layers = self._theta_h_layers = None
 
+        def _nonfinite_rows(tree):
+            """Per-stream flag: any non-finite value in any float leaf of
+            the stack state (``[N]`` float; int leaves — the q8 code
+            domains — are always finite and skipped)."""
+            flags = jnp.zeros((n_streams,), jnp.float32)
+            for leaf in jax.tree_util.tree_leaves(tree):
+                if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                    continue
+                bad = jnp.any(~jnp.isfinite(
+                    leaf.reshape((n_streams, -1))), axis=-1)
+                flags = jnp.maximum(flags, bad.astype(jnp.float32))
+            return flags
+
         def _one_step(state, carry, x):
             """One timestep, stats + controller on-device (no host sync).
 
@@ -275,12 +319,25 @@ class DeltaStreamEngine:
             vectors); the Eq. 7 latency / byte terms are linear in the
             firing fractions, so stream means reproduce the old aggregate
             accounting exactly.
+
+            The frame guard runs first: a frame with ANY non-finite
+            component is replaced by that stream's previous guarded frame
+            (``last_x`` carry), which is exactly the zero-delta silent
+            regime — every delta-memory component either fired last step
+            (so the repeated frame deltas to 0) or sits below Θ already.
+            Non-finite inputs therefore never reach the kernels or the
+            recurrent state, and the per-slot ``poison_steps`` counter
+            records the masking without any host round-trip.
             """
+            finite = jnp.all(jnp.isfinite(x), axis=-1)           # [N]
+            x = jnp.where(finite[:, None], x, carry["last_x"])
+            poison = 1.0 - finite.astype(jnp.float32)            # [N]
             tx = (self._theta_x_layers if self._per_layer
                   else self.theta_x)
             th = (self._theta_h_layers if self._per_layer
                   else carry["theta_h"])
             y, new_state, deltas = self.program.step(state, x, tx, th)
+            bad = _nonfinite_rows(new_state.stack)               # [N]
             out = y @ self.head[0] + self.head[1]
             fx = jnp.mean(jnp.stack(
                 [jnp.mean((dx != 0).astype(jnp.float32), axis=-1)
@@ -333,6 +390,17 @@ class DeltaStreamEngine:
                 "agg_ufired_h": carry["agg_ufired_h"] + ufh,
                 "agg_tile_lat_s": carry["agg_tile_lat_s"] + tile_lat,
                 "agg_tile_w_bytes": carry["agg_tile_w_bytes"] + tile_wb,
+                # resilience carry: the guard's frame memory plus per-slot
+                # poison / state-corruption counters (session-scoped, so
+                # they zero on open_stream like the other per-stream keys)
+                # and never-reset lifetime TOTALS (sums, not means — these
+                # are exact event counts, not rate estimates)
+                "last_x": x,
+                "poison_steps": carry["poison_steps"] + poison,
+                "bad_state": carry["bad_state"] + bad,
+                "agg_poison_steps": carry["agg_poison_steps"]
+                                    + jnp.sum(poison),
+                "agg_bad_state": carry["agg_bad_state"] + jnp.sum(bad),
                 "theta_h": theta_h,
             }
             return out, new_state, new_carry
@@ -367,11 +435,33 @@ class DeltaStreamEngine:
             carry = dict(carry)
             for k in self._PER_STREAM_KEYS:
                 carry[k] = jnp.where(mask, 0.0, carry[k])
+            carry["last_x"] = jnp.where(mask[:, None], 0.0, carry["last_x"])
+            return state, carry
+
+        @jax.jit
+        def _merge_rows(dst_state, dst_carry, src_state, src_carry, mask):
+            """Take ``src``'s slot rows where ``mask`` is True, ``dst``'s
+            elsewhere — the snapshot/rollback primitive (used in both
+            directions). Only the per-stream carry entries move; the
+            engine-lifetime aggregates and Θ_h always keep ``dst``'s
+            values, so a rollback never un-counts steps that really
+            executed and never disturbs the global threshold."""
+            def sel(cur, new):
+                m = mask.reshape((n,) + (1,) * (cur.ndim - 1))
+                return jnp.where(m, new, cur)
+
+            state = jax.tree_util.tree_map(sel, dst_state, src_state)
+            carry = dict(dst_carry)
+            for k in self._PER_STREAM_KEYS:
+                carry[k] = jnp.where(mask, src_carry[k], dst_carry[k])
+            carry["last_x"] = jnp.where(mask[:, None], src_carry["last_x"],
+                                        dst_carry["last_x"])
             return state, carry
 
         self._step = _step
         self._steps = _steps
         self._reset_streams = _reset_streams
+        self._merge_rows = _merge_rows
         self.reset()
 
     # -- hot path ---------------------------------------------------------
@@ -478,6 +568,10 @@ class DeltaStreamEngine:
             self.state, self._carry, jnp.asarray(mask))
         self._slot_busy[sid] = True
         self._slot_opened_at[sid] = self._n_steps
+        # seed the slot's rollback target with its fresh session state, so
+        # a rollback issued before any explicit snapshot rewinds to the
+        # session start instead of a stale previous occupant
+        self.snapshot_streams([sid])
         return sid
 
     def close_stream(self, sid: int, host_carry=None) -> dict:
@@ -508,7 +602,122 @@ class DeltaStreamEngine:
             "mean_est_latency_us": 1e6 * lat / max(steps, 1),
             "w_bytes": wb,
             "mean_weight_bytes_per_step": wb / max(steps, 1),
+            "poison_steps": float(host["poison_steps"][sid]),
+            "bad_state_steps": float(host["bad_state"][sid]),
         }
+
+    # -- resilience: snapshot / rollback / checkpoint ----------------------
+
+    def snapshot_streams(self, sids: list | None = None):
+        """Copy the named slots' live rows into the rollback shadow.
+
+        ``sids=None`` snapshots every currently open session. Pure device
+        work (the same masked select as the session reset) — no host sync,
+        so a supervisor can snapshot on a cadence without breaking the
+        zero-sync hot loop. A caller is responsible for only snapshotting
+        slots it believes healthy; snapshotting a corrupted slot would
+        make the corruption the rollback target.
+        """
+        if sids is None:
+            sids = [i for i, busy in enumerate(self._slot_busy) if busy]
+        if not sids:
+            return
+        mask = np.zeros((self.n_streams,), bool)
+        for sid in sids:
+            if not (0 <= sid < self.n_streams):
+                raise ValueError(f"stream {sid} out of range")
+            mask[sid] = True
+        self._snap_state, self._snap_carry = self._merge_rows(
+            self._snap_state, self._snap_carry, self.state, self._carry,
+            jnp.asarray(mask))
+        for sid in sids:
+            self._snap_steps[sid] = self._n_steps - self._slot_opened_at[sid]
+
+    def rollback_stream(self, sid: int) -> int:
+        """Rewind ONE slot to its last snapshot (session start if none).
+
+        Restores the slot's stack state, guard frame memory, and session
+        accounting from the shadow; every other slot and the lifetime
+        aggregates are untouched (steps that really executed stay
+        counted). Returns the session-step index the slot rewinds to, so
+        the caller knows which frames to replay. Device work only.
+        """
+        if not (0 <= sid < self.n_streams) or not self._slot_busy[sid]:
+            raise ValueError(f"stream {sid} is not open")
+        mask = np.zeros((self.n_streams,), bool)
+        mask[sid] = True
+        self.state, self._carry = self._merge_rows(
+            self.state, self._carry, self._snap_state, self._snap_carry,
+            jnp.asarray(mask))
+        # the slot has logically executed only _snap_steps[sid] session
+        # steps again; engine-global _n_steps keeps marching, so rebase
+        # the slot's open marker to preserve steps = _n_steps - opened_at
+        self._slot_opened_at[sid] = self._n_steps - self._snap_steps[sid]
+        return self._snap_steps[sid]
+
+    def set_theta_h(self, value: float):
+        """Overwrite the live Θ_h (device write, no sync).
+
+        The overload path for a supervisor: raise Θ_h to shed compute
+        under pressure, decay it back on drain
+        (``serve.resilience.ResilientStreamServer``). Mutually exclusive
+        with per-layer thresholds for the same reason the in-jit dynamic
+        controller is.
+        """
+        if self._per_layer:
+            raise ValueError(
+                "set_theta_h adjusts one scalar theta_h, which would "
+                "silently override the per-layer threshold policy")
+        self._carry = {**self._carry, "theta_h": jnp.float32(value)}
+
+    def _ckpt_tree(self):
+        """The engine's full restorable pytree (state + carry + shadows +
+        host-side slot bookkeeping as numpy leaves)."""
+        return {
+            "state": self.state,
+            "carry": self._carry,
+            "snap_state": self._snap_state,
+            "snap_carry": self._snap_carry,
+            "meta": {
+                "n_steps": np.int64(self._n_steps),
+                "slot_busy": np.asarray(self._slot_busy, bool),
+                "slot_opened_at": np.asarray(self._slot_opened_at,
+                                             np.int64),
+                "snap_steps": np.asarray(self._snap_steps, np.int64),
+            },
+        }
+
+    def checkpoint(self, ckpt_dir: str, step: int | None = None) -> str:
+        """Publish a crash-consistent engine checkpoint (atomic rename via
+        :mod:`repro.ft.checkpoint`). Captures recurrent state, the full
+        accounting carry, the rollback shadows, and slot bookkeeping —
+        :meth:`restore` resumes with byte-identical streams and EXACT
+        :meth:`report` continuity. Syncs (the tree lands on host)."""
+        step = self._n_steps if step is None else step
+        return ft_checkpoint.save(ckpt_dir, step, self._ckpt_tree())
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, program, task, step: int | None = None,
+                **kwargs) -> "DeltaStreamEngine":
+        """Rebuild an engine from :meth:`checkpoint` output.
+
+        ``program``/``task``/``kwargs`` must match the checkpointing
+        engine's construction (weights travel in the program, not the
+        checkpoint); shape mismatches fail loudly in
+        :func:`repro.ft.checkpoint.restore`.
+        """
+        eng = cls(program, task, **kwargs)
+        tree = ft_checkpoint.restore(ckpt_dir, eng._ckpt_tree(), step=step)
+        eng.state = tree["state"]
+        eng._carry = tree["carry"]
+        eng._snap_state = tree["snap_state"]
+        eng._snap_carry = tree["snap_carry"]
+        meta = jax.device_get(tree["meta"])
+        eng._n_steps = int(meta["n_steps"])
+        eng._slot_busy = [bool(b) for b in meta["slot_busy"]]
+        eng._slot_opened_at = [int(v) for v in meta["slot_opened_at"]]
+        eng._snap_steps = [int(v) for v in meta["snap_steps"]]
+        return eng
 
     # -- accounting -------------------------------------------------------
 
@@ -538,6 +747,8 @@ class DeltaStreamEngine:
             ufired_h=float(host["agg_ufired_h"]),
             tile_est_latency_s=float(host["agg_tile_lat_s"]),
             tile_w_bytes=float(host["agg_tile_w_bytes"]),
+            poison_steps=float(host["agg_poison_steps"]),
+            bad_state_steps=float(host["agg_bad_state"]),
         )
 
     def reset(self):
@@ -556,11 +767,23 @@ class DeltaStreamEngine:
             "agg_ufired_h": jnp.float32(0.0),
             "agg_tile_lat_s": jnp.float32(0.0),
             "agg_tile_w_bytes": jnp.float32(0.0),
+            "last_x": jnp.zeros((self.n_streams, self.dims.input_size),
+                                jnp.float32),
+            "poison_steps": zeros,
+            "bad_state": zeros,
+            "agg_poison_steps": jnp.float32(0.0),
+            "agg_bad_state": jnp.float32(0.0),
             "theta_h": jnp.float32(self.thresholds.theta_h),
         }
         self._n_steps = 0
         self._slot_busy = [False] * self.n_streams
         self._slot_opened_at = [0] * self.n_streams
+        # snapshot shadows (device-resident): rollback targets per slot.
+        # _snap_steps[sid] = session-steps already executed at snapshot
+        # time, so a rollback can rewind the slot's step bookkeeping too.
+        self._snap_state = self.state
+        self._snap_carry = dict(self._carry)
+        self._snap_steps = [0] * self.n_streams
 
     def report(self) -> dict:
         s = self.stats
@@ -579,6 +802,8 @@ class DeltaStreamEngine:
             "cell": self.cell,
             "n_streams": self.n_streams,
             "weight_fetch": "tile" if self._tile_fetch else "stream",
+            "poison_steps": s.poison_steps,
+            "bad_state_steps": s.bad_state_steps,
         }
         if self._tile_fetch:
             # the batched-tile economics: ONE weight pass per step serves

@@ -118,12 +118,28 @@ class ContinuousBatcher:
                 self.slots[i] = None
         return finished
 
-    def run_until_drained(self, max_ticks: int = 1000) -> list[Request]:
+    def run_until_drained(self, max_ticks: int = 1000,
+                          strict: bool = True) -> list[Request]:
+        """Tick until queue and slots are empty; returns finished requests.
+
+        With ``strict`` (the default) an exhausted tick budget raises
+        ``RuntimeError`` instead of silently returning a partial result —
+        the old behavior dropped still-queued/in-flight requests on the
+        floor with no signal whatsoever. ``strict=False`` restores the
+        partial return for callers that genuinely want best-effort.
+        """
         done = []
         for _ in range(max_ticks):
             done += self.step()
             if not self.queue and not any(self.slots):
-                break
+                return done
+        if strict and (self.queue or any(self.slots)):
+            raise RuntimeError(
+                f"run_until_drained truncated at max_ticks={max_ticks}: "
+                f"{len(self.queue)} queued + "
+                f"{sum(s is not None for s in self.slots)} in-flight "
+                f"requests undrained ({len(done)} finished); raise "
+                "max_ticks or pass strict=False for a partial result")
         return done
 
 
@@ -150,6 +166,10 @@ class StreamRequest:
     stats: dict | None = None                # per-stream engine accounting
     done: bool = False
     cursor: int = 0
+    # admission-time taint: the sequence contained non-finite frames and
+    # the submitter chose on_nonfinite="quarantine" — the resilience
+    # supervisor watches these streams with a tighter leash
+    suspect: bool = False
 
 
 class GruStreamBatcher:
@@ -175,16 +195,41 @@ class GruStreamBatcher:
         self._idle_x = np.zeros((engine.n_streams, engine.dims.input_size),
                                 np.float32)
 
-    def submit(self, frames) -> int:
-        """Queue a ``[T, I]`` (T >= 1) frame sequence; returns its uid."""
+    def submit(self, frames, on_nonfinite: str = "reject") -> int:
+        """Queue a ``[T, I]`` (T >= 1) frame sequence; returns its uid.
+
+        ``on_nonfinite`` decides what to do with sequences containing
+        NaN/Inf frames (a poisoned sensor feed):
+
+        * ``"reject"`` (default) — raise ``ValueError`` at admission. The
+          old behavior fed the poison straight into the engine, where
+          (pre-guard) one bad frame permanently corrupted the slot's
+          recurrent state AND every companion stream's accounting.
+        * ``"quarantine"`` — admit but tag ``req.suspect``; the engine's
+          frame guard masks the bad frames and the resilience supervisor
+          (``serve.resilience``) rolls back / quarantines on its policy.
+        * ``"allow"`` — admit untagged (the device-side guard still
+          protects the state; only the supervisor's tighter watch is
+          waived).
+        """
+        if on_nonfinite not in ("reject", "quarantine", "allow"):
+            raise ValueError(f"on_nonfinite={on_nonfinite!r} not in "
+                             "('reject', 'quarantine', 'allow')")
         frames = np.asarray(frames, np.float32)
         if (frames.ndim != 2 or frames.shape[0] == 0
                 or frames.shape[-1] != self.engine.dims.input_size):
             raise ValueError(
                 f"frames must be [T >= 1, {self.engine.dims.input_size}], "
                 f"got {frames.shape}")
+        suspect = bool(not np.isfinite(frames).all())
+        if suspect and on_nonfinite == "reject":
+            raise ValueError(
+                "frame sequence contains non-finite values; sanitize "
+                "(serve.faults.sanitize_frames), or submit with "
+                "on_nonfinite='quarantine'/'allow'")
         uid = next(self._uid)
-        self.queue.append(StreamRequest(uid, frames))
+        self.queue.append(StreamRequest(
+            uid, frames, suspect=suspect and on_nonfinite == "quarantine"))
         return uid
 
     def _admit(self):
@@ -235,13 +280,27 @@ class GruStreamBatcher:
                 self.slots[sid] = None
         return finished
 
-    def run_until_drained(self, max_ticks: int = 100000):
-        """Tick until queue and slots are empty; returns finished requests."""
+    def run_until_drained(self, max_ticks: int = 100000,
+                          strict: bool = True):
+        """Tick until queue and slots are empty; returns finished requests.
+
+        ``strict`` (default): raise ``RuntimeError`` when the tick budget
+        runs out with work still queued/in-flight — previously the
+        truncation was silent and the lost requests simply vanished from
+        the return. ``strict=False`` keeps the partial-result behavior.
+        """
         done = []
         for _ in range(max_ticks):
             done += self.step()
             if not self.queue and not any(r is not None for r in self.slots):
-                break
+                return done
+        in_flight = sum(r is not None for r in self.slots)
+        if strict and (self.queue or in_flight):
+            raise RuntimeError(
+                f"run_until_drained truncated at max_ticks={max_ticks}: "
+                f"{len(self.queue)} queued + {in_flight} in-flight "
+                f"requests undrained ({len(done)} finished); raise "
+                "max_ticks or pass strict=False for a partial result")
         return done
 
 

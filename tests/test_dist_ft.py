@@ -171,6 +171,68 @@ class TestCheckpoint:
                        if d.startswith("step_"))
         assert steps == [4, 5]
 
+    def test_sharded_restore_casts_to_target_dtype(self, tmp_path):
+        """The sharded restore branch used to skip the dtype cast: an fp32
+        save restored onto a bf16/int target kept float32 leaves and flowed
+        wrong-width arrays into downstream kernels. Both branches must land
+        on the TARGET dtype."""
+        n = len(jax.devices())
+        state = {"w": jnp.arange(float(n * 4)).reshape(n, 4)}  # fp32 save
+        ckpt.save(str(tmp_path), 1, state)
+        target = {"w": jnp.zeros((n, 4), jnp.bfloat16)}
+        mesh = jax.make_mesh((n,), ("data",))
+        sh = {"w": NamedSharding(mesh, P("data", None))}
+        sharded = ckpt.restore(str(tmp_path), target, shardings=sh)
+        assert sharded["w"].dtype == jnp.bfloat16
+        unsharded = ckpt.restore(str(tmp_path), target)
+        assert unsharded["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(sharded["w"]),
+                                      np.asarray(unsharded["w"]))
+
+    def test_restore_shape_mismatch_raises(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, {"w": jnp.zeros((4, 4))})
+        with pytest.raises(ValueError, match="logical shape"):
+            ckpt.restore(str(tmp_path), {"w": jnp.zeros((2, 4))})
+
+    def test_manager_wait_reraises_background_write_failure(self, tmp_path,
+                                                            monkeypatch):
+        """A failed async write must surface on the caller's thread: the
+        old wait() discarded the event result and never looked at the
+        daemon thread's exception, so the 'checkpoint' a restart relied on
+        silently never existed."""
+        mgr = ckpt.CheckpointManager(str(tmp_path), every=1, keep=2,
+                                     async_write=True)
+        boom = IOError("disk full")
+
+        def failing_save(*a, **k):
+            raise boom
+        monkeypatch.setattr(ckpt.np, "save", failing_save)
+        assert mgr.maybe_save(1, {"w": jnp.ones((4,))})
+        with pytest.raises(IOError, match="disk full"):
+            mgr.wait(timeout=30)
+        # the failure is consumed: a subsequent wait is clean
+        assert mgr.wait(timeout=1)
+
+    def test_manager_wait_times_out_on_hung_write(self, tmp_path,
+                                                  monkeypatch):
+        """wait() must report a write that did NOT land in time as False
+        (the old code returned None regardless), and keep it pending."""
+        import threading
+        gate = threading.Event()
+        real_save = ckpt.np.save
+
+        def slow_save(*a, **k):
+            gate.wait(30)
+            return real_save(*a, **k)
+        monkeypatch.setattr(ckpt.np, "save", slow_save)
+        mgr = ckpt.CheckpointManager(str(tmp_path), every=1,
+                                     async_write=True)
+        mgr.maybe_save(1, {"w": jnp.ones((2,))})
+        assert mgr.wait(timeout=0.2) is False    # still in flight
+        gate.set()
+        assert mgr.wait(timeout=30) is True      # now landed
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
 
 class TestHeartbeatStraggler:
     def test_heartbeat_detects_dead_worker(self):

@@ -344,3 +344,81 @@ class TestInputBufferAliasing:
             want = np.asarray(solo.step_many(s))
             np.testing.assert_allclose(np.stack(by_uid[uid].outputs), want,
                                        atol=1e-5)
+
+
+class TestDrainTruncationAndAdmission:
+    """PR 7 scheduler fixes: ``run_until_drained`` used to silently return
+    a partial result when ``max_ticks`` ran out (requests simply vanished),
+    and ``submit`` admitted non-finite frame sequences straight into the
+    engine."""
+
+    def _batcher(self, n_streams=1):
+        task = GruTaskConfig(8, 16, 1, 2, task="regression",
+                             theta_x=0.05, theta_h=0.05)
+        params = init_gru_model(jax.random.PRNGKey(0), task)
+        return GruStreamBatcher(DeltaStreamEngine(params, task,
+                                                  n_streams=n_streams))
+
+    def test_truncated_drain_raises_by_default(self):
+        cb = self._batcher()
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            cb.submit(rng.normal(size=(10, 8)).astype(np.float32))
+        with pytest.raises(RuntimeError, match="truncated at max_ticks=5"):
+            cb.run_until_drained(max_ticks=5)
+
+    def test_truncated_drain_partial_with_strict_false(self):
+        cb = self._batcher()
+        rng = np.random.default_rng(0)
+        uids = [cb.submit(rng.normal(size=(4, 8)).astype(np.float32))
+                for _ in range(3)]
+        done = cb.run_until_drained(max_ticks=5, strict=False)
+        assert [r.uid for r in done] == uids[:1]    # partial, flagged path
+        rest = cb.run_until_drained()               # finishes cleanly
+        assert sorted(r.uid for r in done + rest) == uids
+
+    def test_full_drain_unaffected(self):
+        cb = self._batcher(n_streams=2)
+        rng = np.random.default_rng(1)
+        uids = [cb.submit(rng.normal(size=(t, 8)).astype(np.float32))
+                for t in (3, 5, 4)]
+        done = cb.run_until_drained()
+        assert sorted(r.uid for r in done) == uids
+
+    def test_submit_rejects_nonfinite_by_default(self):
+        cb = self._batcher()
+        bad = np.zeros((6, 8), np.float32)
+        bad[2, 3] = np.nan
+        with pytest.raises(ValueError, match="non-finite"):
+            cb.submit(bad)
+        bad[2, 3] = np.inf
+        with pytest.raises(ValueError, match="non-finite"):
+            cb.submit(bad)
+        assert not cb.queue                          # nothing admitted
+
+    def test_submit_quarantine_tags_suspect(self):
+        cb = self._batcher()
+        bad = np.zeros((6, 8), np.float32)
+        bad[2, 3] = np.nan
+        cb.submit(bad, on_nonfinite="quarantine")
+        assert cb.queue[-1].suspect
+        cb.submit(np.zeros((6, 8), np.float32), on_nonfinite="quarantine")
+        assert not cb.queue[-1].suspect              # finite: untagged
+        cb.submit(bad, on_nonfinite="allow")
+        assert not cb.queue[-1].suspect              # allow: untagged
+        with pytest.raises(ValueError, match="on_nonfinite"):
+            cb.submit(bad, on_nonfinite="explode")
+
+    def test_lm_batcher_truncation_raises_too(self):
+        from repro.configs.registry import get_config
+        from repro.models.lm import init_lm
+        from repro.serve.engine import LmEngine
+        from repro.serve.scheduler import ContinuousBatcher
+        cfg = get_config("llama3.2-1b").reduced()
+        eng = LmEngine(init_lm(jax.random.PRNGKey(0), cfg), cfg,
+                       batch=2, max_len=64)
+        cb = ContinuousBatcher(eng)
+        for _ in range(3):
+            cb.submit([1, 2, 3], max_new_tokens=8)
+        with pytest.raises(RuntimeError, match="truncated"):
+            cb.run_until_drained(max_ticks=4)
