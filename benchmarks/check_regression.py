@@ -40,6 +40,17 @@ gate always compares apples to apples), then:
   any completed stream's outputs drift bitwise from a clean reference or
   any quarantine fails to recover); its p99 steady-state tick wall is
   gated at 1.5x on the baseline's machine class;
+* gates the distributed-fabric load run (``BENCH_fabric.json``) IN A
+  SUBPROCESS (``python -m benchmarks.loadgen_fabric --gate``): the
+  fabric bench forces ``--xla_force_host_platform_device_count=8``
+  before jax initializes, which must not leak into this process's
+  already-initialized backend, so the gate runs isolated and folds its
+  exit code in here. Same split as the soak: the router/loadgen event
+  history is tick-counted and seeded (counts reproduce EXACTLY on any
+  machine, with the fabric re-run hard-failing on bitwise parity drift
+  of any completed stream — through an elastic scale-down — or a
+  non-closing conservation book), and only the p99 tick wall is
+  machine-bound (1.5x, same machine class);
 * wall-time comparison is only meaningful on the machine class that
   produced the baseline: when ``device``/``machine`` metadata disagree the
   gate downgrades wall checks to a warning and keeps the bytes gate.
@@ -414,6 +425,25 @@ def main() -> int:
                     "class; wall-time gate skipped, tick-exact count gate "
                     "still enforced")
             _gate_soak(base_soak, fresh_soak, failures, same_machine)
+
+    from benchmarks import loadgen_fabric as fabric
+    if os.path.exists(fabric.FABRIC_JSON):
+        # the fabric bench must own its process: it forces an 8-device
+        # host platform via XLA_FLAGS before jax import, and this
+        # process's jax backend is already initialized without it
+        import subprocess
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (os.path.join(os.path.dirname(__file__), os.pardir,
+                                     "src"),
+                        env.get("PYTHONPATH")) if p)
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.loadgen_fabric", "--gate"],
+            cwd=os.path.join(os.path.dirname(__file__), os.pardir), env=env)
+        if proc.returncode != 0:
+            failures.append(
+                "FABRIC GATE: benchmarks.loadgen_fabric --gate failed "
+                "(see its output above)")
 
     for w in warnings:
         print(f"warn {w}")

@@ -1,7 +1,32 @@
 """Distribution substrate: sharding rules, elastic meshes, delta gradient
-compression, and pipeline parallelism.
+compression, pipeline parallelism — and the mesh-sharded serving fleet.
 
 Everything is mesh-optional: with no active mesh the sharding helpers are
 no-ops, so single-device code paths (the DeltaGRU streaming engine, unit
 tests) never pay for the machinery.
+
+The serving-fabric entry points re-exported here:
+
+* :class:`~repro.dist.serving.ShardedStreamFleet` — stream slots sharded
+  over a ``("data", "model")`` mesh, one ``shard_map`` engine tick for
+  every shard, elastic scale-down with drain-checkpoints;
+* :func:`~repro.dist.elastic.best_mesh` / ``scale_event`` — the mesh
+  factory and remesh planner the fleet consumes.
+
+The async front door (``StreamRouter``) and the load generator live on
+the serving side: :mod:`repro.serve.router` / :mod:`repro.serve.loadgen`
+(re-exported from ``repro.serve``).
 """
+from repro.dist.elastic import best_mesh, scale_event
+
+__all__ = ["ShardedStreamFleet", "best_mesh", "scale_event"]
+
+
+def __getattr__(name):
+    # Lazy: the fleet pulls in repro.serve.engine, whose LM tier imports
+    # repro.dist.sharding — an eager import here would close that cycle
+    # on any `import repro.models.lm`. Deferred, both directions work.
+    if name == "ShardedStreamFleet":
+        from repro.dist.serving import ShardedStreamFleet
+        return ShardedStreamFleet
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

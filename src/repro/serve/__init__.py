@@ -3,7 +3,26 @@ streaming DeltaGRU engine (compiled-program driven, with per-stream
 open/close sessions, device-side frame guarding, snapshot/rollback and
 checkpoint/restore), the continuous-batching schedulers
 (``ContinuousBatcher`` over LM decode slots, ``GruStreamBatcher`` over
-delta-RNN stream sessions), and the resilience tier
+delta-RNN stream sessions), the resilience tier
 (``resilience.ResilientStreamServer`` — quarantine/shed/overload/restart
 supervision — with ``faults.FaultPlan`` as its deterministic chaos
-harness)."""
+harness), and the distributed serving fabric's front door:
+``router.StreamRouter`` (JSQ over bounded per-shard queues, fabric or
+pool mode, elastic ``scale_down`` replay) plus the ``loadgen`` open-loop
+Poisson harness. The mesh-sharded fleet itself is
+``repro.dist.serving.ShardedStreamFleet`` (re-exported from
+``repro.dist``)."""
+from repro.serve.engine import DeltaStreamEngine, GruStreamEngine
+from repro.serve.loadgen import poisson_arrivals, run_fabric_load
+from repro.serve.resilience import (ResiliencePolicy, ResilientStreamServer,
+                                    ServeResult)
+from repro.serve.router import RouterPolicy, RouterResult, StreamRouter
+from repro.serve.scheduler import DeltaStreamBatcher, GruStreamBatcher
+
+__all__ = [
+    "DeltaStreamEngine", "GruStreamEngine",
+    "DeltaStreamBatcher", "GruStreamBatcher",
+    "ResiliencePolicy", "ResilientStreamServer", "ServeResult",
+    "StreamRouter", "RouterPolicy", "RouterResult",
+    "poisson_arrivals", "run_fabric_load",
+]

@@ -405,11 +405,9 @@ class DeltaStreamEngine:
             }
             return out, new_state, new_carry
 
-        @jax.jit
         def _step(state, carry, x):
             return _one_step(state, carry, x)
 
-        @jax.jit
         def _steps(state, carry, xs):
             def body(sc, x):
                 state, carry = sc
@@ -421,7 +419,6 @@ class DeltaStreamEngine:
 
         n = n_streams
 
-        @jax.jit
         def _reset_streams(state, carry, mask):
             """Masked per-slot reset: fresh state + zeroed accounting for
             slots where ``mask`` is True; everything else untouched."""
@@ -438,7 +435,6 @@ class DeltaStreamEngine:
             carry["last_x"] = jnp.where(mask[:, None], 0.0, carry["last_x"])
             return state, carry
 
-        @jax.jit
         def _merge_rows(dst_state, dst_carry, src_state, src_carry, mask):
             """Take ``src``'s slot rows where ``mask`` is True, ``dst``'s
             elsewhere — the snapshot/rollback primitive (used in both
@@ -458,10 +454,21 @@ class DeltaStreamEngine:
                                         dst_carry["last_x"])
             return state, carry
 
-        self._step = _step
-        self._steps = _steps
-        self._reset_streams = _reset_streams
-        self._merge_rows = _merge_rows
+        # Raw (un-jitted) closures over the *local* tile width.  The
+        # sharded fleet (`dist/serving.ShardedStreamFleet`) re-wraps these
+        # under `shard_map`, where each device traces them at the
+        # per-shard block shapes — per-stream vectors become ``[B]``
+        # slices and the lifetime aggregates become ``[1]`` slices of a
+        # per-shard vector; the closures are shape-polymorphic in both.
+        self._one_step_fn = _one_step
+        self._steps_fn = _steps
+        self._reset_streams_fn = _reset_streams
+        self._merge_rows_fn = _merge_rows
+
+        self._step = jax.jit(_step)
+        self._steps = jax.jit(_steps)
+        self._reset_streams = jax.jit(_reset_streams)
+        self._merge_rows = jax.jit(_merge_rows)
         self.reset()
 
     # -- hot path ---------------------------------------------------------

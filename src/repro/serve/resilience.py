@@ -168,17 +168,28 @@ class ResilientStreamServer:
         self._snap_bad: dict[int, float] = {}
         self._best_wall: float | None = None
 
+    # -- observability (pass-through to the batcher hooks) -----------------
+
+    def queue_depth(self) -> int:
+        return self.batcher.queue_depth()
+
+    def active_slots(self) -> int:
+        return self.batcher.active_slots()
+
+    def free_slots(self) -> int:
+        return self.batcher.free_slots()
+
     # -- admission ---------------------------------------------------------
 
     def submit(self, frames, on_nonfinite: str = "quarantine"):
         """Bounded-queue admission. Returns ``(uid, admitted)``; a
         rejection is also recorded as a ``ServeResult`` so every uid has
         a terminal outcome."""
-        if len(self.batcher.queue) >= self.policy.max_queue:
+        if self.batcher.queue_depth() >= self.policy.max_queue:
             uid = next(self.batcher._uid)
             self.counters["rejected"] += 1
             res = ServeResult(uid, "rejected", error={
-                "reason": "queue_full", "depth": len(self.batcher.queue),
+                "reason": "queue_full", "depth": self.batcher.queue_depth(),
                 "max_queue": self.policy.max_queue})
             self.results.append(res)
             self.n_submitted += 1
@@ -338,7 +349,9 @@ class ResilientStreamServer:
                 self._snap_nout[sid] = len(req.outputs)
                 self._snap_bad[sid] = float(host["bad_state"][sid])
         if p.overload_queue is not None:
-            depth = len(self.batcher.queue)
+            # the overload-Θ watermark reads pressure through the batcher's
+            # observability hook, not by poking its private deque
+            depth = self.batcher.queue_depth()
             new_theta = float(dynamic_threshold(
                 jnp.float32(self._theta_now), float(depth),
                 float(p.overload_queue), gain=p.overload_gain,
@@ -405,7 +418,7 @@ class ResilientStreamServer:
         return {
             "ticks": self.tick_no,
             "submitted": self.n_submitted,
-            "queue_depth": len(self.batcher.queue),
+            "queue_depth": self.batcher.queue_depth(),
             "counters": dict(self.counters),
             "theta_peak": self.theta_peak,
             "p99_tick_wall_s": self.p99_tick_wall_s(),

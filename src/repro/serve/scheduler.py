@@ -194,6 +194,27 @@ class GruStreamBatcher:
         self._uid = itertools.count()
         self._idle_x = np.zeros((engine.n_streams, engine.dims.input_size),
                                 np.float32)
+        # Observability counters (exact event counts, monotone): the
+        # router/load-generator/overload-watermark read load through these
+        # and the depth/slot hooks below instead of poking private state.
+        self.counters = {"submitted": 0, "admitted": 0, "harvested": 0,
+                         "ticks": 0}
+
+    # -- observability hooks ----------------------------------------------
+
+    def queue_depth(self) -> int:
+        """Requests admitted to the batcher but not yet in a slot."""
+        return len(self.queue)
+
+    def active_slots(self) -> int:
+        """Stream slots currently carrying an in-flight request."""
+        return sum(1 for r in self.slots if r is not None)
+
+    def free_slots(self) -> int:
+        """Slots an external placer may count on THIS tick: engine slots
+        not in flight, minus queued requests that will claim them first."""
+        return max(0, self.engine.n_streams - self.active_slots()
+                   - len(self.queue))
 
     def submit(self, frames, on_nonfinite: str = "reject") -> int:
         """Queue a ``[T, I]`` (T >= 1) frame sequence; returns its uid.
@@ -230,6 +251,7 @@ class GruStreamBatcher:
         uid = next(self._uid)
         self.queue.append(StreamRequest(
             uid, frames, suspect=suspect and on_nonfinite == "quarantine"))
+        self.counters["submitted"] += 1
         return uid
 
     def _admit(self):
@@ -237,6 +259,7 @@ class GruStreamBatcher:
             req = self.queue.popleft()
             sid = self.engine.open_stream()
             self.slots[sid] = req
+            self.counters["admitted"] += 1
 
     def step(self) -> list[StreamRequest]:
         """One tick: admit, one batched engine step, harvest. Returns
@@ -248,6 +271,7 @@ class GruStreamBatcher:
         engine's device-side hot loop is never forced to drain per tick.
         """
         self._admit()
+        self.counters["ticks"] += 1
         active = [(sid, req) for sid, req in enumerate(self.slots)
                   if req is not None]
         if not active:
@@ -278,6 +302,7 @@ class GruStreamBatcher:
                 req.done = True
                 finished.append(req)
                 self.slots[sid] = None
+        self.counters["harvested"] += len(finished)
         return finished
 
     def run_until_drained(self, max_ticks: int = 100000,
