@@ -1,12 +1,12 @@
 # EdgeDRNN reproduction — tier-1 + perf-gate entry points.
 export PYTHONPATH := src
 
-.PHONY: test bench bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick soak-quick bench-fabric-quick check-regression ci
+.PHONY: test bench bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick soak-quick bench-fabric-quick bench-lm-delta-quick check-regression ci
 
 test:            ## tier-1 suite
 	python -m pytest -x -q
 
-ci: test bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick soak-quick bench-fabric-quick check-regression  ## full gate: tier-1 + quick benches (GRU + LSTM parity + LSTM q8 parity/bytes + batched tile invariant + resilient-serving soak + distributed-fabric loadgen) + perf regression
+ci: test bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick soak-quick bench-fabric-quick bench-lm-delta-quick check-regression  ## full gate: tier-1 + quick benches (GRU + LSTM parity + LSTM q8 parity/bytes + batched tile invariant + resilient-serving soak + distributed-fabric loadgen + delta-ized LM cells) + perf regression
 
 bench:           ## full paper tables/figures + kernel benches (rewrites BENCH_*.json)
 	python -m benchmarks.run
@@ -28,6 +28,9 @@ soak-quick:      ## resilient-serving chaos soak quick path (hard bitwise-parity
 
 bench-fabric-quick:  ## distributed-fabric loadgen quick path (hard conservation + bitwise parity through an elastic scale-down, 8 forced host devices, no baseline writes)
 	python -m benchmarks.loadgen_fabric --quick
+
+bench-lm-delta-quick:  ## delta-ized LM cells (RWKV6 / RG-LRU) quick path (hard theta=0 bitwise-decode + >2x byte-reduction asserts, no baseline writes)
+	python -m benchmarks.lm_delta_bench --quick
 
 check-regression:  ## gate fresh fused-path wall time / bytes model vs committed baselines
 	python -m benchmarks.check_regression

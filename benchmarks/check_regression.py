@@ -274,6 +274,100 @@ def _gate_soak(base, fresh, failures, same_machine):
                 print(f"ok   {line}")
 
 
+def _lm_delta_row_key(row):
+    return (row["cell"], row["backend"], row["theta_q88"])
+
+
+def _gate_lm_delta(base, fresh, failures, same_machine):
+    """Gate the delta-ized LM-cell sweep (``BENCH_lm_delta.json``).
+
+    Machine-independent HARD checks, evaluated on BOTH records:
+
+    * Eq. 7 pricing identity — recompute
+      ``dram_traffic_bytes_per_timestep`` (float64, host-side) from each
+      row's recorded UNROUNDED gammas with the *current* pricing code; it
+      must equal the recorded ``bytes_per_step`` EXACTLY. Any deviation
+      is a real change to the generalized projection-volume model
+      (``cell_dims`` x_weights/h_weights), not measurement noise —
+      regenerate the baseline in the same PR if intentional.
+    * theta=0 rows: measured gamma must be exactly 0.0 and the priced
+      bytes exactly the cell's dense projection volume; the dense
+      theta=0 row must have drift exactly 0.0 (it IS the reference).
+
+    The fresh re-run itself hard-asserts the rest (theta=0 BITWISE
+    decode parity per cell, and the >2x-reduction-at-bounded-drift
+    operating point), so a completed fresh record certifies those; the
+    baseline-vs-fresh comparison then pins bytes (exact on the
+    baseline's machine class, 2% elsewhere) and fused wall time (1.5x,
+    same machine class only)."""
+    from repro.core.perf_model import dram_traffic_bytes_per_timestep
+    from repro.core.sparsity import cell_dims
+
+    for rec, tag in ((base, "baseline"), (fresh, "fresh")):
+        cells = rec["config"]["cells"]
+        bits = rec["config"]["weight_bits"]
+        for row in rec["rows"]:
+            c = cells[row["cell"]]
+            dims = cell_dims(row["cell"], c["input"], c["hidden"],
+                             c["layers"])
+            want = float(dram_traffic_bytes_per_timestep(
+                dims, row["gamma_dx"], row["gamma_dh"],
+                w_weight_bits=bits))
+            if want != row["bytes_per_step"]:
+                failures.append(
+                    f"LM DELTA PRICING {tag} {row['cell']}/"
+                    f"{row['backend']} theta={row['theta_q88']}/256: "
+                    f"recomputed Eq.7 bytes {want} != recorded "
+                    f"{row['bytes_per_step']} (pricing model moved; "
+                    "regenerate baseline if intentional)")
+            if row["theta_q88"] == 0:
+                if row["gamma_dx"] != 0.0 or row["gamma_dh"] != 0.0:
+                    failures.append(
+                        f"LM DELTA THETA0 {tag} {row['cell']}/"
+                        f"{row['backend']}: measured gamma "
+                        f"({row['gamma_dx']}, {row['gamma_dh']}) != 0.0")
+                if row["bytes_per_step"] != c["dense_bytes"]:
+                    failures.append(
+                        f"LM DELTA THETA0 {tag} {row['cell']}/"
+                        f"{row['backend']}: prices "
+                        f"{row['bytes_per_step']} B/step != dense volume "
+                        f"{c['dense_bytes']}")
+                if row["backend"] == "dense" and row["drift"] != 0.0:
+                    failures.append(
+                        f"LM DELTA THETA0 {tag} {row['cell']}/dense: "
+                        f"drift {row['drift']} != 0.0 vs itself")
+    print("ok   lm_delta: Eq.7 pricing identity + theta=0 exactness hold "
+          "on both records")
+
+    rel_tol = 0.0 if same_machine else 0.02
+    base_rows = {_lm_delta_row_key(r): r for r in base["rows"]}
+    for row in fresh["rows"]:
+        b = base_rows.get(_lm_delta_row_key(row))
+        if b is None:
+            continue
+        drift = abs(row["bytes_per_step"] - b["bytes_per_step"])
+        if drift > rel_tol * max(b["bytes_per_step"], 1.0):
+            failures.append(
+                f"BYTES MODEL DRIFT lm_delta {row['cell']}/"
+                f"{row['backend']} theta={row['theta_q88']}/256: "
+                f"{b['bytes_per_step']} -> {row['bytes_per_step']} "
+                "(regenerate baseline if intentional)")
+        else:
+            print(f"ok   lm_delta {row['cell']}/{row['backend']} "
+                  f"theta={row['theta_q88']}/256: "
+                  f"bytes/step={row['bytes_per_step']:.0f}")
+        if same_machine and row["backend"] == "fused":
+            ratio = row["us_per_step"] / max(b["us_per_step"], 1e-9)
+            line = (f"lm_delta {row['cell']}/fused "
+                    f"theta={row['theta_q88']}/256: "
+                    f"{b['us_per_step']:.1f} -> {row['us_per_step']:.1f} "
+                    f"us/step ({ratio:.2f}x)")
+            if ratio > MAX_WALL_RATIO:
+                failures.append(f"WALL REGRESSION {line}")
+            else:
+                print(f"ok   {line}")
+
+
 def main() -> int:
     from benchmarks import kernel_bench as kb
 
@@ -444,6 +538,30 @@ def main() -> int:
             failures.append(
                 "FABRIC GATE: benchmarks.loadgen_fabric --gate failed "
                 "(see its output above)")
+
+    from benchmarks import lm_delta_bench as lmd
+    base_lmd = _load(lmd.BENCH_LM_DELTA_JSON)
+    if base_lmd is not None:
+        try:
+            # bench_lm_delta_record hard-fails on theta=0 bitwise decode
+            # parity and the >2x-reduction-at-bounded-drift operating
+            # point; a completed fresh record certifies both.
+            _, fresh_lmd = lmd.bench_lm_delta_record(
+                t=base_lmd["config"]["t"],
+                thetas=tuple(sorted({r["theta_q88"]
+                                     for r in base_lmd["rows"]})))
+        except AssertionError as e:
+            failures.append(f"LM DELTA INVARIANT {e}")
+        else:
+            same_machine = _comparable(base_lmd["config"],
+                                       fresh_lmd["config"])
+            if not same_machine:
+                warnings.append(
+                    "lm_delta baseline was recorded on a different "
+                    "machine class; wall-time gate skipped, bytes model "
+                    "enforced at 2% tolerance (pricing identity still "
+                    "exact)")
+            _gate_lm_delta(base_lmd, fresh_lmd, failures, same_machine)
 
     for w in warnings:
         print(f"warn {w}")

@@ -19,12 +19,13 @@ import traceback
 def _suites(quick: bool):
     from benchmarks import (fig9_threshold_sweep, fig10_11_dual_threshold,
                             fig13_batch_sweep, fig14_15_latency_traces,
-                            kernel_bench, soak_serving, table2_perfmodel,
-                            table6_7_comparison)
+                            kernel_bench, lm_delta_bench, soak_serving,
+                            table2_perfmodel, table6_7_comparison)
     if quick:
-        # the LSTM quick pass is its own `make ci` stage
-        # (`python -m benchmarks.kernel_bench --lstm --quick`), so it is
-        # NOT repeated here — `make ci` would run it twice otherwise
+        # the LSTM and lm-delta quick passes are their own `make ci`
+        # stages (`python -m benchmarks.kernel_bench --lstm --quick`,
+        # `python -m benchmarks.lm_delta_bench --quick`), so they are
+        # NOT repeated here — `make ci` would run them twice otherwise
         return [("kernel_quick", kernel_bench.run_quick)]
     suites = [
         ("table2", table2_perfmodel.run),
@@ -34,6 +35,9 @@ def _suites(quick: bool):
         ("fig14_15", fig14_15_latency_traces.run),
         ("fig9", fig9_threshold_sweep.run),
         ("fig10_11", fig10_11_dual_threshold.run),
+        # rewrites BENCH_lm_delta.json (delta-ized RWKV6 / RG-LRU sweep);
+        # its quick pass is its own `make ci` stage
+        ("lm_delta", lm_delta_bench.run),
         # rewrites BENCH_soak.json; the CI spelling of the quick pass is
         # its own `make ci` stage (`python -m benchmarks.soak_serving
         # --quick`), so it is NOT repeated in --quick here
@@ -79,8 +83,9 @@ def main(argv=None) -> None:
     from benchmarks.fig13_batch_sweep import BENCH_BATCH_JSON
     from benchmarks.kernel_bench import (BENCH_JSON, BENCH_LSTM_JSON,
                                          BENCH_LSTM_Q8_JSON, BENCH_Q8_JSON)
+    from benchmarks.lm_delta_bench import BENCH_LM_DELTA_JSON
     for p in (BENCH_JSON, BENCH_Q8_JSON, BENCH_LSTM_JSON,
-              BENCH_LSTM_Q8_JSON, BENCH_BATCH_JSON):
+              BENCH_LSTM_Q8_JSON, BENCH_BATCH_JSON, BENCH_LM_DELTA_JSON):
         if os.path.exists(p):
             print(f"bench_json,0,{p}", file=sys.stderr)
     if failures:

@@ -1,15 +1,22 @@
-"""Beyond-paper: the delta-network principle on a transformer decode stream.
+"""Delta-RWKV6 decode served through the compile->stream stack.
 
-The paper thresholds RNN state streams. Autoregressive decode activations
-are also a temporally-correlated stream per layer, so the same
-delta-linear bookkeeping (y_t = M_t, M_t += W (x_t - x_hat)) applies to the
-FFN of a decoder-only LM at serve time — skipped weight-column blocks cut
-the memory-bound decode's HBM traffic exactly as in the paper (DESIGN.md §4).
+EdgeDRNN thresholds RNN state streams (Eq. 2) and fetches only the weight
+columns the fired deltas touch (Eq. 3).  RWKV6 decode is the same
+memory-bound shape: per token, every layer streams its r/k/v projections
+([D, D] each) and the decay LoRA for batch-1 matvecs, fed by temporally
+smooth token-shift streams.  This example runs a REAL greedy decode
+session on the reduced ``rwkv6-1.6b`` recipe:
 
-This example measures, on a reduced llama-arch model:
-  * the firing rate of decode-path FFN inputs vs threshold,
-  * output drift vs the exact decode,
-  * the modeled weight-traffic reduction for the FFN matmuls.
+  embedding -> DeltaStreamEngine.step (delta-RWKV6 stack + head)
+            -> argmax -> next token's embedding -> ...
+
+through a compiled program (``compile_delta_program(..., cell="rwkv6")``),
+at a sweep of thresholds, and prints the engine's Eq. 4/7 session
+accounting: measured temporal sparsity, modeled weight traffic, and
+output drift vs the exact theta=0 decode.  At theta=0 the delta decode is
+bitwise identical to the exact dense decode (tests/test_deltarwkv.py
+asserts this); above it, weight traffic falls with the firing rate while
+the decoded token stream stays pinned until the threshold gets coarse.
 
 Run:  PYTHONPATH=src python examples/lm_delta_decode.py
 """
@@ -17,43 +24,59 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import get_config
-from repro.core.delta_dense import delta_linear, init_delta_linear_state
-from repro.models.lm import init_lm, init_lm_caches, lm_decode, lm_prefill
+from repro.configs.rwkv6_1_6b import reduced_delta_recipe
+from repro.core.program import compile_delta_program
+from repro.core.thresholds import ThresholdPolicy
+from repro.serve.engine import DeltaStreamEngine
 
-cfg = get_config("llama3.2-1b").reduced()
-params = init_lm(jax.random.PRNGKey(0), cfg)
-B, S, STEPS = 2, 12, 24
+VOCAB = 48
+STEPS = 24
 
-tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
-caches = init_lm_caches(cfg, B, S + STEPS + 2)
-logits, caches = lm_prefill(params, cfg, tokens, caches)
-cur = jnp.argmax(logits, axis=-1)
+cfg, model, task = reduced_delta_recipe(jax.random.PRNGKey(0),
+                                        output_size=VOCAB)
+embed = jax.random.normal(jax.random.PRNGKey(1),
+                          (VOCAB, cfg.d_model), jnp.float32) * 0.3
+prog = compile_delta_program(model, backend="dense", cell="rwkv6")
 
-# collect the per-step FFN input stream of layer 0 while decoding exactly
-ffn_inputs = []
-for _ in range(STEPS):
-    logits, caches = lm_decode(params, cfg, cur, caches)
-    cur = jnp.argmax(logits[:, -1:], axis=-1)
-    # probe: re-embed the running hidden state proxy (use logits top act)
-    ffn_inputs.append(np.asarray(logits[:, 0, :64], np.float32))
-stream = jnp.asarray(np.stack(ffn_inputs))            # [T, B, 64]
-stream = stream / (jnp.std(stream) + 1e-6)
 
-w = params["blocks"][0]["sub0"]["ffn"]["w_up"][0][:64, :].T  # [F, 64]
-print("delta-linear on the decode activation stream (layer-0 FFN probe):")
-print(f"{'theta':>8} {'fired%':>8} {'max drift':>10} {'traffic':>8}")
-for theta in (0.0, 0.05, 0.1, 0.25):
-    state = init_delta_linear_state(w.shape[1], w.shape[0], (B,))
-    exact = init_delta_linear_state(w.shape[1], w.shape[0], (B,))
-    fired_tot, drift = 0.0, 0.0
-    for t in range(stream.shape[0]):
-        out = delta_linear(w, stream[t], state, theta)
-        ref = delta_linear(w, stream[t], exact, 0.0)
-        state, exact = out.state, ref.state
-        fired_tot += float(out.fired_fraction)
-        drift = max(drift, float(jnp.max(jnp.abs(out.y - ref.y))))
-    fired = fired_tot / stream.shape[0]
-    print(f"{theta:8.2f} {fired * 100:7.1f}% {drift:10.4f} {fired:7.2f}x")
-print("\n=> at serve time, FFN weight reads scale with the fired fraction —"
-      "\n   the paper's Eq. 8 law applied beyond RNNs (see DESIGN.md §4).")
+def decode_session(theta, force_toks=None):
+    """One engine session: greedy-decode STEPS tokens from token 0.
+
+    ``force_toks`` teacher-forces the input stream (for drift comparison
+    at matched inputs — free-running argmax feedback is chaotic for a
+    random-init model, so it would measure trajectory divergence, not
+    delta-approximation drift).
+    """
+    eng = DeltaStreamEngine(prog, task,
+                            thresholds=ThresholdPolicy(theta, theta))
+    sid = eng.open_stream()
+    tok = 0
+    toks, logit_rows = [], []
+    for t in range(STEPS):
+        logits = eng.step(np.asarray(embed[tok]))
+        logit_rows.append(logits)
+        toks.append(int(jnp.argmax(logits)))
+        tok = toks[-1] if force_toks is None else force_toks[t]
+    session = eng.close_stream(sid)
+    return toks, jnp.stack(logit_rows), session, eng.report()
+
+
+ref_toks, ref_logits, _, _ = decode_session(0.0)
+print(f"delta-RWKV6 greedy decode ({cfg.name}: D={cfg.d_model}, "
+      f"L={cfg.n_layers}, vocab={VOCAB}, {STEPS} steps)")
+print(f"{'theta':>8} {'gamma_dx':>9} {'gamma_dh':>9} {'KB/step':>8} "
+      f"{'drift':>9} {'tok match':>10}")
+for theta_int in (0, 8, 32, 64):
+    theta = theta_int / 256.0
+    toks, logits, session, rep = decode_session(theta, force_toks=ref_toks)
+    drift = float(jnp.max(jnp.abs(logits - ref_logits)))
+    match = sum(a == b for a, b in zip(toks, ref_toks)) / len(ref_toks)
+    print(f"{theta:8.3f} {session['gamma_dx']:9.3f} "
+          f"{session['gamma_dh']:9.3f} "
+          f"{session['mean_weight_bytes_per_step'] / 1024:8.1f} "
+          f"{drift:9.4f} {match * 100:9.0f}%")
+print("\n=> the engine prices exactly what the deltas fetch: at theta=0 "
+      "the session\n   streams the full projection volume and reproduces "
+      "the exact decode\n   bit-for-bit (drift 0.0000); raising theta "
+      "sheds weight traffic at\n   bounded logits drift (teacher-forced "
+      "on the reference tokens).")

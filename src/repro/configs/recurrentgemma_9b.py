@@ -19,3 +19,28 @@ CONFIG = ModelConfig(
     norm="rmsnorm",
     activation="gelu_tanh",
 )
+
+
+def reduced_delta_recipe(key, output_size: int = 48):
+    """CPU-CI recipe: the compile-ready delta-RG-LRU serving triple.
+
+    Returns ``(cfg, model, task)`` — a :meth:`ModelConfig.reduced` config
+    with ``delta_decode=True``, an
+    :func:`repro.core.deltarglru.init_deltarglru_model` params dict for
+    the RECURRENT layers of the reduced block pattern (the delta serving
+    stack holds only the RG-LRU blocks; attention layers are not delta
+    targets), and the matching ``GruTaskConfig`` for
+    ``DeltaStreamEngine``. ``benchmarks.lm_delta_bench`` builds from
+    this, so CI runs the same reduced geometry everywhere.
+    """
+    from repro.core.deltarglru import init_deltarglru_model
+    from repro.models.gru_rnn import GruTaskConfig
+
+    cfg = CONFIG.reduced(delta_decode=True)
+    pattern = cfg.block_pattern
+    n_rec = sum(pattern[i % len(pattern)] == "rglru"
+                for i in range(cfg.n_layers))
+    model = init_deltarglru_model(key, cfg.d_model, n_rec, output_size)
+    task = GruTaskConfig(input_size=cfg.d_model, hidden_size=cfg.d_model,
+                         num_layers=n_rec, output_size=output_size)
+    return cfg, model, task

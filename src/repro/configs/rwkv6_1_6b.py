@@ -18,3 +18,26 @@ CONFIG = ModelConfig(
     rope_theta=10000.0,        # unused (attention-free)
     activation="relu_sq",
 )
+
+
+def reduced_delta_recipe(key, output_size: int = 48):
+    """CPU-CI recipe: the compile-ready delta-RWKV6 serving triple.
+
+    Returns ``(cfg, model, task)`` — a :meth:`ModelConfig.reduced` config
+    with ``delta_decode=True``, an
+    :func:`repro.core.deltarwkv.init_deltarwkv_model` params dict sized
+    off it (compile with ``compile_delta_program(model, cell="rwkv6")``),
+    and the matching ``GruTaskConfig`` for ``DeltaStreamEngine``. The
+    example (``examples/lm_delta_decode.py``) and the
+    ``benchmarks.lm_delta_bench`` sweep both build from this, so CI runs
+    the same reduced geometry everywhere.
+    """
+    from repro.core.deltarwkv import init_deltarwkv_model
+    from repro.models.gru_rnn import GruTaskConfig
+
+    cfg = CONFIG.reduced(delta_decode=True)
+    model = init_deltarwkv_model(key, cfg.d_model, cfg.n_layers,
+                                 output_size)
+    task = GruTaskConfig(input_size=cfg.d_model, hidden_size=cfg.d_model,
+                         num_layers=cfg.n_layers, output_size=output_size)
+    return cfg, model, task

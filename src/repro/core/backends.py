@@ -112,6 +112,8 @@ def _ensure_builtins() -> None:
     """Import the builtin cell modules so their specs self-register."""
     import repro.core.deltagru    # noqa: F401  (registers gru backends)
     import repro.core.deltalstm   # noqa: F401  (registers lstm backends)
+    import repro.core.deltarwkv   # noqa: F401  (registers rwkv6 backends)
+    import repro.core.deltarglru  # noqa: F401  (registers rglru backends)
 
 
 def require_stream_tile(x, name: str) -> None:

@@ -1,0 +1,415 @@
+"""Delta-RG-LRU — EdgeDRNN's delta trick on the Griffin recurrent block.
+
+RecurrentGemma's recurrent block is, at decode time, the same memory-bound
+shape as the paper's GRU: per token, each layer streams the block-input
+projections (``w_in`` + ``w_in_gate``, ``[D, W]`` each) and the gate
+projections (``w_rg`` + ``w_ig``, ``[W, W]`` each) from DRAM for batch-1
+matvecs. Two temporally-smooth streams gate them:
+
+* **Δx group** (``theta_x``): the layer input ``x_t``, gating
+  ``w_in`` / ``w_in_gate`` — ``2·D·W`` weights per layer.
+* **Δh group** (``theta_h``): the post-conv stream ``u_t`` feeding the
+  recurrence/input gates, gating ``w_rg`` / ``w_ig`` — ``2·W²`` per
+  layer. The causal conv (width 4) is applied **densely** on the held
+  recurrent-branch projection output, with its 3-step history carried in
+  the layer state — history and thresholding compose because only the
+  projections delta; the conv consumes their (held/accumulated) outputs.
+
+Dense non-delta side: the conv itself, ``λ``, biases, the elementwise
+recurrence (:func:`repro.kernels.ops.rglru_scan`, chained in at T=1 — the
+scan is cheap and state-resident), the ``i·u`` input gating (live
+stream), and ``w_out``. Per-column row counts are uniform within each
+group (2W rows per Δx column, 2W rows per Δh column), so Eq. 4/7 pricing
+stays the two-volume linear model (:func:`repro.core.sparsity.cell_dims`
+``x_weights`` / ``h_weights``).
+
+Backends (registered under ``cell="rglru"``):
+
+* ``"dense"`` — bitwise reference: projections on the reconstructed held
+  streams ``x̂`` / ``û``. At θ=0 the Eq. 2 memory update makes the held
+  stream the raw stream bit-for-bit, so a θ=0 delta step is **bitwise
+  identical** to :func:`repro.models.rglru.rglru_block_decode` (which
+  shares :func:`rglru_gates` from this module).
+* ``"fused"`` — Eq. 3 delta memories ``M += Δ @ Wᵀ`` per projection via
+  the fired-block-compacting :func:`repro.kernels.ops.delta_spmv`
+  (bias applied at the activation stage). Exact-arithmetic-equal to
+  ``dense``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends import BackendSpec, get_backend, register_backend
+from repro.core.delta import DeltaState, delta_encode, init_delta_state
+from repro.core.thresholds import layer_theta
+
+Array = jax.Array
+
+_C = 8.0  # Griffin's fixed exponent scale
+CONV_WIDTH = 4
+
+_BLOCK = 128  # delta_spmv block size the fused pack/step pair agrees on
+
+
+class RglruLayerParams(NamedTuple):
+    """One RG-LRU block (same tensors/shapes as
+    :func:`repro.models.rglru.init_rglru_block`, as a compile-ready
+    NamedTuple; the dict's ``"lambda"`` key is the ``lam`` field)."""
+
+    w_in: Array       # [D, W]  delta-gated (Δx group)
+    w_in_gate: Array  # [D, W]  delta-gated (Δx group)
+    conv_w: Array     # [CONV_WIDTH, W]  dense
+    conv_b: Array     # [W]
+    w_rg: Array       # [W, W]  delta-gated (Δh group)
+    w_ig: Array       # [W, W]  delta-gated (Δh group)
+    b_rg: Array       # [W]
+    b_ig: Array       # [W]
+    lam: Array        # [W] f32
+    w_out: Array      # [W, D]  dense
+
+    @property
+    def hidden_size(self) -> int:
+        return self.w_rg.shape[0]   # W (lru width)
+
+    @property
+    def input_size(self) -> int:
+        return self.w_in.shape[0]   # D (d_model)
+
+
+def rglru_layer_params(block: dict) -> RglruLayerParams:
+    """Adapt a :func:`repro.models.rglru.init_rglru_block` dict."""
+    return RglruLayerParams(
+        w_in=block["w_in"], w_in_gate=block["w_in_gate"],
+        conv_w=block["conv_w"], conv_b=block["conv_b"],
+        w_rg=block["w_rg"], w_ig=block["w_ig"],
+        b_rg=block["b_rg"], b_ig=block["b_ig"],
+        lam=block["lambda"], w_out=block["w_out"])
+
+
+def rglru_layer_dict(p: RglruLayerParams) -> dict:
+    """The inverse adapter (cell layer -> models-module params dict)."""
+    d = {f: getattr(p, f) for f in RglruLayerParams._fields if f != "lam"}
+    d["lambda"] = p.lam
+    return d
+
+
+def init_deltarglru_stack(key: Array, d_model: int, num_layers: int,
+                          lru_width: int | None = None,
+                          dtype=jnp.float32) -> list[RglruLayerParams]:
+    """A stack of RG-LRU blocks on the models-module init recipe (each
+    block maps D -> D; the LRU width is internal)."""
+    from repro.models.rglru import init_rglru_block
+    keys = jax.random.split(key, num_layers)
+    return [rglru_layer_params(init_rglru_block(k, d_model, lru_width, dtype))
+            for k in keys]
+
+
+def init_deltarglru_model(key: Array, d_model: int, num_layers: int,
+                          output_size: int, lru_width: int | None = None,
+                          dtype=jnp.float32) -> dict:
+    """``{"rglru": stack, "head", "head_b"}`` — the compile-ready model
+    dict for :func:`repro.core.program.compile_delta_program`."""
+    from repro.models.common import dense_init
+    k_stack, k_head = jax.random.split(key)
+    return {
+        "rglru": init_deltarglru_stack(k_stack, d_model, num_layers,
+                                       lru_width, dtype),
+        "head": dense_init(k_head, d_model, output_size, dtype),
+        "head_b": jnp.zeros((output_size,), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared gate math (canonical expressions; models/rglru.py imports this)
+# ---------------------------------------------------------------------------
+
+def rglru_gates(u: Array, w_rg: Array, w_ig: Array, b_rg: Array,
+                b_ig: Array, lam: Array):
+    """RG-LRU gating from ``u: [..., W]``: decay ``a`` and gated input.
+
+    THE canonical expression set — :func:`repro.models.rglru._gates` and
+    the dense delta backend both call it, making θ=0 bitwise parity a
+    structural property.
+    """
+    r = jax.nn.sigmoid(u @ w_rg + b_rg).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ w_ig + b_ig).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(lam) * r    # [..., W] (< 0)
+    a = jnp.exp(log_a)
+    return a, i * u.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Delta layer state
+# ---------------------------------------------------------------------------
+
+class DeltaRglruLayerState(NamedTuple):
+    """Per-stream state of one delta-RG-LRU layer (all leaves lead with
+    the batch/stream axis)."""
+
+    h: Array            # [..., W] f32 recurrent state
+    conv: Array         # [..., CONV_WIDTH-1, W] conv history
+    x_mem: DeltaState   # x̂ [..., D]  (layer input stream)
+    u_mem: DeltaState   # û [..., W]  (post-conv gate stream)
+    m_in: Array         # [..., W]  fused Σ Δx @ w_inᵀ
+    m_gate: Array       # [..., W]  fused Σ Δx @ w_in_gateᵀ
+    m_rg: Array         # [..., W]  fused Σ Δu @ w_rgᵀ
+    m_ig: Array         # [..., W]  fused Σ Δu @ w_igᵀ
+
+
+def init_deltarglru_state(params: RglruLayerParams, batch_shape=(),
+                          dtype=None, m_init: str = "zero") -> DeltaRglruLayerState:
+    """Zero state memories / delta memories / conv history.
+
+    Both registered backends use ``m_init="zero"`` (biases are applied at
+    the activation stage in both paths); accepted for registry uniformity.
+    """
+    del m_init
+    dtype = dtype or params.w_in.dtype
+    d, w = params.input_size, params.hidden_size
+    return DeltaRglruLayerState(
+        h=jnp.zeros((*batch_shape, w), jnp.float32),
+        conv=jnp.zeros((*batch_shape, CONV_WIDTH - 1, w), dtype),
+        x_mem=init_delta_state((*batch_shape, d), dtype),
+        u_mem=init_delta_state((*batch_shape, w), dtype),
+        m_in=jnp.zeros((*batch_shape, w), dtype),
+        m_gate=jnp.zeros((*batch_shape, w), dtype),
+        m_rg=jnp.zeros((*batch_shape, w), dtype),
+        m_ig=jnp.zeros((*batch_shape, w), dtype),
+    )
+
+
+class DeltaRglruStepOut(NamedTuple):
+    h: Array                     # layer output y [..., D]
+    state: DeltaRglruLayerState
+    delta_x: Array               # [..., D] Δx (input stream)
+    delta_h: Array               # [..., W] Δu (post-conv gate stream)
+
+
+class RglruFusedLayout(NamedTuple):
+    """Pre-transposed, block-padded ``[O, I]`` spmv operands."""
+
+    wt_in: Array       # [Wp, Dp]
+    wt_in_gate: Array  # [Wp, Dp]
+    wt_rg: Array       # [Wp, Wp]
+    wt_ig: Array       # [Wp, Wp]
+
+
+def pack_rglru_layer(p: RglruLayerParams,
+                     block: int = _BLOCK) -> RglruFusedLayout:
+    from repro.kernels.delta_spmv import pack_spmv_weights
+    pk = lambda w: pack_spmv_weights(w.T, block_o=block, block_k=block)
+    return RglruFusedLayout(wt_in=pk(p.w_in), wt_in_gate=pk(p.w_in_gate),
+                            wt_rg=pk(p.w_rg), wt_ig=pk(p.w_ig))
+
+
+# ---------------------------------------------------------------------------
+# Layer step
+# ---------------------------------------------------------------------------
+
+def _layer_step(params: RglruLayerParams, state: DeltaRglruLayerState,
+                x: Array, theta_x, theta_h, *, accumulate: bool,
+                layout: RglruFusedLayout | None,
+                interpret: bool | None) -> DeltaRglruStepOut:
+    """One delta RG-LRU step. ``x: [..., D]`` (lead dims flattened)."""
+    from repro.kernels import ops as _ops
+    d, w = params.input_size, params.hidden_size
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, d)
+    use_ref = _ops._FORCE_REF or (interpret is None
+                                  and _ops._interpret_default())
+
+    flat = lambda a, n: a.reshape(-1, n)
+    enc_x = delta_encode(xb, DeltaState(flat(state.x_mem.memory, d)), theta_x)
+
+    if accumulate:
+        lay = layout if layout is not None else pack_rglru_layer(params)
+        spmv = lambda wt, dx, acc: _ops.delta_spmv(
+            wt, dx, acc, block_o=_BLOCK, block_k=_BLOCK, use_ref=use_ref,
+            interpret=interpret, packed=True, out_dim=w)
+        m_in = spmv(lay.wt_in, enc_x.delta, flat(state.m_in, w))
+        m_gate = spmv(lay.wt_in_gate, enc_x.delta, flat(state.m_gate, w))
+        u_proj = m_in                              # ≡ x̂ @ w_in (exact arith)
+        gate = jax.nn.gelu(m_gate[:, None])        # [B, 1, W]
+    else:
+        x_held = enc_x.state.memory[:, None]       # [B, 1, D]
+        gate = jax.nn.gelu(x_held @ params.w_in_gate)
+        u_proj = (x_held @ params.w_in)[:, 0]      # [B, W]
+        m_in, m_gate = flat(state.m_in, w), flat(state.m_gate, w)
+
+    # Dense causal conv on the (held/accumulated) recurrent-branch stream;
+    # 3-step history carried in the layer state.
+    xh = jnp.concatenate([flat(state.conv, w).reshape(-1, CONV_WIDTH - 1, w),
+                          u_proj[:, None]], axis=1)          # [B, 4, W]
+    u1 = sum(xh[:, i] * params.conv_w[i] for i in range(CONV_WIDTH))
+    u1 = u1 + params.conv_b                                   # [B, W]
+
+    enc_u = delta_encode(u1, DeltaState(flat(state.u_mem.memory, w)), theta_h)
+
+    if accumulate:
+        m_rg = spmv(lay.wt_rg, enc_u.delta, flat(state.m_rg, w))
+        m_ig = spmv(lay.wt_ig, enc_u.delta, flat(state.m_ig, w))
+        r = jax.nn.sigmoid(m_rg + params.b_rg).astype(jnp.float32)[:, None]
+        i = jax.nn.sigmoid(m_ig + params.b_ig).astype(jnp.float32)[:, None]
+        a = jnp.exp(-_C * jax.nn.softplus(params.lam) * r)    # [B, 1, W]
+        # The input gating multiplies the LIVE stream (no weight fetch).
+        gated = i * u1.astype(jnp.float32)[:, None]
+    else:
+        u_held = enc_u.state.memory[:, None]                  # [B, 1, W]
+        a, _gated_held = rglru_gates(u_held, params.w_rg, params.w_ig,
+                                     params.b_rg, params.b_ig, params.lam)
+        i = jax.nn.sigmoid(u_held @ params.w_ig
+                           + params.b_ig).astype(jnp.float32)
+        gated = i * u1.astype(jnp.float32)[:, None]
+        m_rg, m_ig = flat(state.m_rg, w), flat(state.m_ig, w)
+
+    if accumulate:
+        # Chain into the existing RG-LRU scan (T=1): cheap, dense, exact.
+        hs, h_t = _ops.rglru_scan(gated, a, flat(state.h, w),
+                                  use_ref=use_ref, interpret=interpret)
+    else:
+        # Bitwise reference: the recurrence spelled exactly as
+        # rglru_block_decode spells it (the scan's compiled body is free
+        # to fuse FMAs, which costs the last ulp vs the eager decode).
+        h_t = (a[:, 0] * flat(state.h, w)
+               + jnp.sqrt(jnp.maximum(1.0 - a[:, 0] ** 2, 0.0)) * gated[:, 0])
+        hs = h_t[:, None]
+    y = (hs.astype(x.dtype) * gate) @ params.w_out            # [B, 1, D]
+
+    unflat = lambda a_: a_.reshape(*lead, *a_.shape[1:])
+    new_state = DeltaRglruLayerState(
+        h=unflat(h_t),
+        conv=unflat(xh[:, 1:]),
+        x_mem=DeltaState(unflat(enc_x.state.memory)),
+        u_mem=DeltaState(unflat(enc_u.state.memory)),
+        m_in=unflat(m_in), m_gate=unflat(m_gate),
+        m_rg=unflat(m_rg), m_ig=unflat(m_ig))
+    return DeltaRglruStepOut(h=unflat(y[:, 0]), state=new_state,
+                             delta_x=unflat(enc_x.delta),
+                             delta_h=unflat(enc_u.delta))
+
+
+# -- per-backend step implementations (registered BackendSpec.step fns) -----
+
+def _step_dense(params, state, x, theta_x, theta_h, *, layout=None,
+                interpret=None, **_kw):
+    return _layer_step(params, state, x, theta_x, theta_h, accumulate=False,
+                       layout=None, interpret=interpret)
+
+
+def _step_fused(params, state, x, theta_x, theta_h, *, layout=None,
+                interpret=None, **_kw):
+    return _layer_step(params, state, x, theta_x, theta_h, accumulate=True,
+                       layout=layout, interpret=interpret)
+
+
+def _pack_none(params, block):
+    return params, None, None
+
+
+def _pack_fused(params, block):
+    # Fixed _BLOCK pad regardless of the requested block (pack/step agree).
+    del block
+    return params, [pack_rglru_layer(p) for p in params], None
+
+
+register_backend(BackendSpec(
+    name="dense", cell="rglru", pack=_pack_none, step=_step_dense,
+    m_init="zero", weight_bits=32, supports_custom_acts=False))
+register_backend(BackendSpec(
+    name="fused", cell="rglru", pack=_pack_fused, step=_step_fused,
+    m_init="zero", weight_bits=32, supports_custom_acts=False))
+
+
+def deltarglru_step(params: RglruLayerParams, state: DeltaRglruLayerState,
+                    x: Array, theta_x, theta_h, backend: str = "dense",
+                    layout=None,
+                    interpret: bool | None = None) -> DeltaRglruStepOut:
+    """One delta RG-LRU layer timestep, via the backend registry."""
+    spec = get_backend(backend, cell="rglru")
+    return spec.step(params, state, x, theta_x, theta_h, layout=layout,
+                     interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Multi-layer stacks over sequences
+# ---------------------------------------------------------------------------
+
+class DeltaRglruStackState(NamedTuple):
+    layers: tuple  # tuple[DeltaRglruLayerState, ...]
+
+
+def init_deltarglru_stack_state(params: Sequence[RglruLayerParams],
+                                batch_shape=(), dtype=None,
+                                m_init: str = "zero") -> DeltaRglruStackState:
+    return DeltaRglruStackState(
+        layers=tuple(init_deltarglru_state(p, batch_shape, dtype,
+                                           m_init=m_init) for p in params))
+
+
+def deltarglru_stack_step(params: Sequence[RglruLayerParams],
+                          state: DeltaRglruStackState, x: Array,
+                          theta_x, theta_h, backend: str = "dense",
+                          layouts=None, packs=None,
+                          interpret: bool | None = None):
+    """One timestep through all layers (each block maps D -> D).
+
+    Same contract as :func:`repro.core.deltagru.deltagru_stack_step`:
+    returns ``(y, new_stack_state, [(delta_x, delta_h), ...])``.
+    """
+    del packs
+    new_layers = []
+    deltas = []
+    inp = x
+    for li, (p, st) in enumerate(zip(params, state.layers)):
+        out = deltarglru_step(
+            p, st, inp, layer_theta(theta_x, li), layer_theta(theta_h, li),
+            backend=backend,
+            layout=layouts[li] if layouts is not None else None,
+            interpret=interpret)
+        new_layers.append(out.state)
+        deltas.append((out.delta_x, out.delta_h))
+        inp = out.h
+    return inp, DeltaRglruStackState(tuple(new_layers)), deltas
+
+
+def deltarglru_sequence(params: Sequence[RglruLayerParams], xs: Array,
+                        theta_x, theta_h,
+                        init_state: DeltaRglruStackState | None = None,
+                        collect_sparsity: bool = True,
+                        backend: str = "dense", layouts=None, packs=None,
+                        interpret: bool | None = None):
+    """Run a delta-RG-LRU stack over ``xs: [T, B, D]`` with ``lax.scan``.
+
+    Returns ``(ys [T, B, D], final_state, stats)`` with the
+    ``{"gamma_dx", "gamma_dh", "per_layer"}`` stats contract.
+    """
+    spec = get_backend(backend, cell="rglru")
+    if init_state is None:
+        init_state = init_deltarglru_stack_state(params, xs.shape[1:-1],
+                                                 xs.dtype,
+                                                 m_init=spec.m_init)
+    if layouts is None and packs is None:
+        _, layouts, packs = spec.pack(list(params), _BLOCK)
+
+    def step(state, x):
+        y, new_state, deltas = deltarglru_stack_step(
+            params, state, x, theta_x, theta_h, backend=backend,
+            layouts=layouts, packs=packs, interpret=interpret)
+        if collect_sparsity:
+            stats = tuple((jnp.mean((dx == 0).astype(jnp.float32)),
+                           jnp.mean((dh == 0).astype(jnp.float32)))
+                          for dx, dh in deltas)
+        else:
+            stats = ()
+        return new_state, (y, stats)
+
+    final_state, (ys, stats) = jax.lax.scan(step, init_state, xs)
+    if collect_sparsity:
+        gamma_dx = jnp.mean(jnp.stack([jnp.mean(s[0]) for s in stats]))
+        gamma_dh = jnp.mean(jnp.stack([jnp.mean(s[1]) for s in stats]))
+        return ys, final_state, {"gamma_dx": gamma_dx, "gamma_dh": gamma_dh,
+                                 "per_layer": stats}
+    return ys, final_state, {}

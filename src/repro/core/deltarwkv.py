@@ -1,0 +1,446 @@
+"""Delta-RWKV6 — EdgeDRNN's delta trick on the RWKV6 time-mix projections.
+
+RWKV6 ("Finch") decode is memory-bound exactly like the paper's GRU decode:
+per token, each layer streams the r/k/v projection weights (``[D, D]`` each)
+and the decay-LoRA down-projection (``[D, DECAY_LORA]``) from DRAM for a
+batch-1 matvec. The mixed token-shift streams ``x_r / x_k / x_v / x_w``
+feeding those projections are temporally smooth — prime Eq. 2 material —
+so this module delta-encodes them and skips non-fired weight columns:
+
+* **Δx group** (``theta_x``): the mixed r/k/v streams, gating
+  ``W_r / W_k / W_v`` — ``3·D²`` weights per layer.
+* **Δh group** (``theta_h``): the mixed decay stream ``x_w``, gating
+  ``decay_w1`` (``[D, DECAY_LORA]``) — the slow data-dependent decay is the
+  closest analogue of the paper's hidden-state stream.
+
+Everything else stays **dense**: the token-shift LoRA (``tsh_w1/tsh_w2``,
+tiny), the gate/output projections (``w_g``/``w_o``, driven by the live
+stream), the WKV recurrence itself (:func:`repro.kernels.ops.rwkv6_scan` —
+cheap, state-resident, elementwise+outer products), and the group norm.
+Per-column row counts are uniform within each group (D rows per Δx column,
+DECAY_LORA rows per Δh column), so the Eq. 4/7 pricing stays a two-volume
+linear model — :func:`repro.core.sparsity.cell_dims` declares the volumes
+via ``x_weights`` / ``h_weights``.
+
+Backends (registered under ``cell="rwkv6"``):
+
+* ``"dense"`` — the bitwise reference: projections run on the
+  *reconstructed* held streams ``x̂`` (Eq. 2 state memories). At θ=0 the
+  memory update ``where(fired, s, ŝ)`` makes ``x̂ ≡ s`` bit-for-bit, so a
+  θ=0 delta step is **bitwise identical** to the exact dense decode
+  (:func:`repro.models.rwkv.rwkv_time_mix` per-step) — the models module
+  imports :func:`mix_streams` / :func:`group_norm_heads` from here, so the
+  two paths share one set of expressions by construction.
+* ``"fused"`` — Eq. 3 accumulate form: per projection, a delta memory
+  ``M += Δx @ Wᵀ`` via the fired-block-compacting
+  :func:`repro.kernels.ops.delta_spmv` kernel (the machinery behind the
+  ``delta_q8``/``deltagru_seq`` packers). Exact-arithmetic-equal to
+  ``dense`` (fp-tolerance in practice).
+
+Both backends emit per-layer ``(delta_x: [..., 3D], delta_h: [..., D])``
+pairs, so :class:`repro.serve.engine.DeltaStreamEngine` sessions account
+γ and weight bytes with the exact same machinery as GRU/LSTM programs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends import BackendSpec, get_backend, register_backend
+from repro.core.delta import DeltaState, delta_encode, init_delta_state
+from repro.core.thresholds import layer_theta
+
+Array = jax.Array
+
+HEAD_DIM = 64
+TSHIFT_LORA = 32
+DECAY_LORA = 64
+
+_BLOCK = 128  # delta_spmv block size the fused pack/step pair agrees on
+
+
+class RwkvLayerParams(NamedTuple):
+    """One RWKV6 time-mix layer (same tensors/shapes as
+    :func:`repro.models.rwkv.init_rwkv_time_mix`, as a compile-ready
+    NamedTuple)."""
+
+    mu_base: Array     # [D]
+    mu: Array          # [5, D]        r,k,v,w,g lerp offsets
+    tsh_w1: Array      # [D, 5*TSHIFT_LORA]
+    tsh_w2: Array      # [5, TSHIFT_LORA, D]
+    w_r: Array         # [D, D]   delta-gated (Δx group)
+    w_k: Array         # [D, D]   delta-gated (Δx group)
+    w_v: Array         # [D, D]   delta-gated (Δx group)
+    w_g: Array         # [D, D]   dense
+    w_o: Array         # [D, D]   dense
+    decay_base: Array  # [D] f32
+    decay_w1: Array    # [D, DECAY_LORA]  delta-gated (Δh group)
+    decay_w2: Array    # [DECAY_LORA, D]  dense
+    bonus_u: Array     # [H, HEAD_DIM] f32
+    ln_scale: Array    # [D]
+
+    @property
+    def hidden_size(self) -> int:
+        return self.w_o.shape[-1]
+
+    @property
+    def input_size(self) -> int:
+        return self.w_r.shape[0]
+
+
+def rwkv_layer_params(tm: dict) -> RwkvLayerParams:
+    """Adapt a :func:`repro.models.rwkv.init_rwkv_time_mix` dict."""
+    return RwkvLayerParams(**{f: tm[f] for f in RwkvLayerParams._fields})
+
+
+def rwkv_layer_dict(p: RwkvLayerParams) -> dict:
+    """The inverse adapter (cell layer -> models-module params dict)."""
+    return dict(zip(RwkvLayerParams._fields, p))
+
+
+def init_deltarwkv_stack(key: Array, d_model: int, num_layers: int,
+                         dtype=jnp.float32) -> list[RwkvLayerParams]:
+    """A stack of time-mix layers on the models-module init recipe."""
+    from repro.models.rwkv import init_rwkv_time_mix
+    keys = jax.random.split(key, num_layers)
+    return [rwkv_layer_params(init_rwkv_time_mix(k, d_model, dtype))
+            for k in keys]
+
+
+def init_deltarwkv_model(key: Array, d_model: int, num_layers: int,
+                         output_size: int, dtype=jnp.float32) -> dict:
+    """``{"rwkv6": stack, "head", "head_b"}`` — the compile-ready model
+    dict (:func:`repro.core.program.compile_delta_program` carries the
+    head into the program for serving)."""
+    from repro.models.common import dense_init
+    k_stack, k_head = jax.random.split(key)
+    return {
+        "rwkv6": init_deltarwkv_stack(k_stack, d_model, num_layers, dtype),
+        "head": dense_init(k_head, d_model, output_size, dtype),
+        "head_b": jnp.zeros((output_size,), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared time-mix math (canonical expressions; models/rwkv.py imports these)
+# ---------------------------------------------------------------------------
+
+def mix_streams(x: Array, xx: Array, mu_base: Array, mu: Array,
+                tsh_w1: Array, tsh_w2: Array) -> Array:
+    """RWKV6 data-dependent 5-way lerp. ``x, xx: [B, T, D]`` ->
+    ``[5, B, T, D]`` (r, k, v, w, g mixed streams).
+
+    ``xx`` is the token-shift difference ``x_{t-1} - x_t``. This is THE
+    canonical expression set: the dense delta backend and the full models
+    path both call it, which is what makes θ=0 bitwise parity a structural
+    property instead of a numerical accident.
+    """
+    b, t, _ = x.shape
+    x_base = x + xx * mu_base
+    lora = jnp.tanh(x_base @ tsh_w1).reshape(b, t, 5, TSHIFT_LORA)
+    adj = jnp.einsum("btfl,fld->fbtd", lora, tsh_w2)        # [5,B,T,D]
+    return x[None] + xx[None] * (mu[:, None, None] + adj)
+
+
+def group_norm_heads(y: Array, scale: Array, eps: float = 1e-5) -> Array:
+    """Per-head layer norm over ``[B, T, H, D]`` -> scaled, flattened."""
+    b, t, h, d = y.shape
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    return (yn.reshape(b, t, h * d) * scale).astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Delta layer state
+# ---------------------------------------------------------------------------
+
+class DeltaRwkvLayerState(NamedTuple):
+    """Per-stream state of one delta-RWKV6 layer (all leaves lead with the
+    batch/stream axis — the serving engine's poison-scan requirement)."""
+
+    shift: Array        # [..., D]  last raw input (token shift)
+    wkv: Array          # [..., H, HEAD_DIM, HEAD_DIM] f32 WKV state
+    r_mem: DeltaState   # x̂_r [..., D]
+    k_mem: DeltaState   # x̂_k [..., D]
+    v_mem: DeltaState   # x̂_v [..., D]
+    w_mem: DeltaState   # x̂_w [..., D]
+    m_r: Array          # [..., D]          fused Σ Δx_r @ W_rᵀ
+    m_k: Array          # [..., D]
+    m_v: Array          # [..., D]
+    m_w: Array          # [..., DECAY_LORA] fused Σ Δx_w @ decay_w1ᵀ
+
+
+def init_deltarwkv_state(params: RwkvLayerParams, batch_shape=(),
+                         dtype=None, m_init: str = "zero") -> DeltaRwkvLayerState:
+    """Zero state memories and delta memories (``x̂_0 = 0``, ``M_0 = 0``).
+
+    Both registered backends use ``m_init="zero"`` — there are no biases
+    to fold into the projection accumulators (the decay bias
+    ``decay_base`` is applied at the activation stage in both paths), so
+    the argument is accepted for registry uniformity and ignored.
+    """
+    del m_init
+    dtype = dtype or params.w_r.dtype
+    d = params.hidden_size
+    h = d // HEAD_DIM
+    return DeltaRwkvLayerState(
+        shift=jnp.zeros((*batch_shape, d), dtype),
+        wkv=jnp.zeros((*batch_shape, h, HEAD_DIM, HEAD_DIM), jnp.float32),
+        r_mem=init_delta_state((*batch_shape, d), dtype),
+        k_mem=init_delta_state((*batch_shape, d), dtype),
+        v_mem=init_delta_state((*batch_shape, d), dtype),
+        w_mem=init_delta_state((*batch_shape, d), dtype),
+        m_r=jnp.zeros((*batch_shape, d), dtype),
+        m_k=jnp.zeros((*batch_shape, d), dtype),
+        m_v=jnp.zeros((*batch_shape, d), dtype),
+        m_w=jnp.zeros((*batch_shape, DECAY_LORA), dtype),
+    )
+
+
+class DeltaRwkvStepOut(NamedTuple):
+    h: Array                    # layer output y [..., D]
+    state: DeltaRwkvLayerState
+    delta_x: Array              # [..., 3D] concat(Δx_r, Δx_k, Δx_v)
+    delta_h: Array              # [..., D]  Δx_w (decay stream)
+
+
+class RwkvFusedLayout(NamedTuple):
+    """Pre-transposed, block-padded ``[O, I]`` spmv operands (pack once)."""
+
+    wt_r: Array      # [Dp, Dp]
+    wt_k: Array      # [Dp, Dp]
+    wt_v: Array      # [Dp, Dp]
+    wt_decay: Array  # [DECAY_LORAp, Dp]
+
+
+def pack_rwkv_layer(p: RwkvLayerParams, block: int = _BLOCK) -> RwkvFusedLayout:
+    from repro.kernels.delta_spmv import pack_spmv_weights
+    pk = lambda w: pack_spmv_weights(w.T, block_o=block, block_k=block)
+    return RwkvFusedLayout(wt_r=pk(p.w_r), wt_k=pk(p.w_k), wt_v=pk(p.w_v),
+                           wt_decay=pk(p.decay_w1))
+
+
+# ---------------------------------------------------------------------------
+# Layer step
+# ---------------------------------------------------------------------------
+
+def _layer_step(params: RwkvLayerParams, state: DeltaRwkvLayerState,
+                x: Array, theta_x, theta_h, *, accumulate: bool,
+                layout: RwkvFusedLayout | None,
+                interpret: bool | None) -> DeltaRwkvStepOut:
+    """One delta time-mix step. ``x: [..., D]`` (lead dims flattened).
+
+    ``accumulate=False`` (dense): projections on the reconstructed held
+    streams ``x̂`` — bitwise the exact decode at θ=0.
+    ``accumulate=True`` (fused): Eq. 3 delta memories via
+    :func:`repro.kernels.ops.delta_spmv` fired-block compaction.
+    """
+    from repro.kernels import ops as _ops
+    d = params.hidden_size
+    nh = d // HEAD_DIM
+    lead = x.shape[:-1]
+    xb = x.reshape(-1, d)
+    b = xb.shape[0]
+    use_ref = _ops._FORCE_REF or (interpret is None
+                                  and _ops._interpret_default())
+
+    flat = lambda a, w: a.reshape(-1, w)
+    shift = flat(state.shift, d)
+    x3 = xb[:, None, :]                          # [B, 1, D]
+    xx = shift[:, None, :] - x3                  # token shift: x_{t-1} - x_t
+    mixed = mix_streams(x3, xx, params.mu_base, params.mu,
+                        params.tsh_w1, params.tsh_w2)
+    x_r, x_k, x_v, x_w, x_g = mixed              # each [B, 1, D]
+
+    # Eq. 2 on the projection input streams.
+    enc_r = delta_encode(x_r[:, 0], DeltaState(flat(state.r_mem.memory, d)),
+                         theta_x)
+    enc_k = delta_encode(x_k[:, 0], DeltaState(flat(state.k_mem.memory, d)),
+                         theta_x)
+    enc_v = delta_encode(x_v[:, 0], DeltaState(flat(state.v_mem.memory, d)),
+                         theta_x)
+    enc_w = delta_encode(x_w[:, 0], DeltaState(flat(state.w_mem.memory, d)),
+                         theta_h)
+
+    if accumulate:
+        lay = layout if layout is not None else pack_rwkv_layer(params)
+        spmv = lambda wt, dx, acc, o: _ops.delta_spmv(
+            wt, dx, acc, block_o=_BLOCK, block_k=_BLOCK, use_ref=use_ref,
+            interpret=interpret, packed=True, out_dim=o)
+        m_r = spmv(lay.wt_r, enc_r.delta, flat(state.m_r, d), d)
+        m_k = spmv(lay.wt_k, enc_k.delta, flat(state.m_k, d), d)
+        m_v = spmv(lay.wt_v, enc_v.delta, flat(state.m_v, d), d)
+        m_w = spmv(lay.wt_decay, enc_w.delta, flat(state.m_w, DECAY_LORA),
+                   DECAY_LORA)
+        r_flat, k_flat, v_flat = m_r, m_k, m_v   # ≡ x̂ @ W (exact arithmetic)
+        pre_w = m_w[:, None]                     # [B, 1, DECAY_LORA]
+    else:
+        # Reconstruction form: x̂ @ W on the held streams. At θ=0 the held
+        # stream IS the raw stream (bitwise), so this is the exact decode.
+        r_flat = (enc_r.state.memory[:, None] @ params.w_r)[:, 0]
+        k_flat = (enc_k.state.memory[:, None] @ params.w_k)[:, 0]
+        v_flat = (enc_v.state.memory[:, None] @ params.w_v)[:, 0]
+        pre_w = enc_w.state.memory[:, None] @ params.decay_w1
+        m_r, m_k, m_v = (flat(state.m_r, d), flat(state.m_k, d),
+                         flat(state.m_v, d))
+        m_w = flat(state.m_w, DECAY_LORA)
+
+    r = r_flat.reshape(b, 1, nh, HEAD_DIM)
+    k = k_flat.reshape(b, 1, nh, HEAD_DIM)
+    v = v_flat.reshape(b, 1, nh, HEAD_DIM)
+    g = jax.nn.silu(x_g @ params.w_g)            # dense, live stream
+
+    decay_log = params.decay_base + jnp.tanh(pre_w) @ params.decay_w2
+    w = jnp.exp(-jnp.exp(decay_log.astype(jnp.float32)))
+    w = w.reshape(b, 1, nh, HEAD_DIM)
+
+    tr = lambda z: jnp.moveaxis(z, 2, 1)         # [B,1,H,Dh] -> [B,H,1,Dh]
+    wkv0 = state.wkv.reshape(-1, nh, HEAD_DIM, HEAD_DIM)
+    y, wkv_t = _ops.rwkv6_scan(tr(r), tr(k), tr(v), tr(w), params.bonus_u,
+                               wkv0, use_ref=use_ref, interpret=interpret)
+    y = jnp.moveaxis(y, 1, 2)                    # [B,1,H,Dh]
+    y = group_norm_heads(y.astype(jnp.float32),
+                         params.ln_scale.astype(jnp.float32))
+    y = (y.astype(x.dtype) * g) @ params.w_o     # [B, 1, D]
+
+    unflat = lambda a: a.reshape(*lead, *a.shape[1:])
+    new_state = DeltaRwkvLayerState(
+        shift=unflat(xb),
+        wkv=unflat(wkv_t),
+        r_mem=DeltaState(unflat(enc_r.state.memory)),
+        k_mem=DeltaState(unflat(enc_k.state.memory)),
+        v_mem=DeltaState(unflat(enc_v.state.memory)),
+        w_mem=DeltaState(unflat(enc_w.state.memory)),
+        m_r=unflat(m_r), m_k=unflat(m_k), m_v=unflat(m_v), m_w=unflat(m_w))
+    delta_x = jnp.concatenate([enc_r.delta, enc_k.delta, enc_v.delta],
+                              axis=-1)
+    return DeltaRwkvStepOut(h=unflat(y[:, 0]), state=new_state,
+                            delta_x=unflat(delta_x),
+                            delta_h=unflat(enc_w.delta))
+
+
+# -- per-backend step implementations (registered BackendSpec.step fns) -----
+
+def _step_dense(params, state, x, theta_x, theta_h, *, layout=None,
+                interpret=None, **_kw):
+    return _layer_step(params, state, x, theta_x, theta_h, accumulate=False,
+                       layout=None, interpret=interpret)
+
+
+def _step_fused(params, state, x, theta_x, theta_h, *, layout=None,
+                interpret=None, **_kw):
+    return _layer_step(params, state, x, theta_x, theta_h, accumulate=True,
+                       layout=layout, interpret=interpret)
+
+
+def _pack_none(params, block):
+    return params, None, None
+
+
+def _pack_fused(params, block):
+    # Fixed _BLOCK pad regardless of the requested block: the step side
+    # always issues delta_spmv at _BLOCK, and pack/step must agree.
+    del block
+    return params, [pack_rwkv_layer(p) for p in params], None
+
+
+register_backend(BackendSpec(
+    name="dense", cell="rwkv6", pack=_pack_none, step=_step_dense,
+    m_init="zero", weight_bits=32, supports_custom_acts=False))
+register_backend(BackendSpec(
+    name="fused", cell="rwkv6", pack=_pack_fused, step=_step_fused,
+    m_init="zero", weight_bits=32, supports_custom_acts=False))
+
+
+def deltarwkv_step(params: RwkvLayerParams, state: DeltaRwkvLayerState,
+                   x: Array, theta_x, theta_h, backend: str = "dense",
+                   layout=None, interpret: bool | None = None) -> DeltaRwkvStepOut:
+    """One delta time-mix layer timestep, via the backend registry."""
+    spec = get_backend(backend, cell="rwkv6")
+    return spec.step(params, state, x, theta_x, theta_h, layout=layout,
+                     interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Multi-layer stacks over sequences
+# ---------------------------------------------------------------------------
+
+class DeltaRwkvStackState(NamedTuple):
+    layers: tuple  # tuple[DeltaRwkvLayerState, ...]
+
+
+def init_deltarwkv_stack_state(params: Sequence[RwkvLayerParams],
+                               batch_shape=(), dtype=None,
+                               m_init: str = "zero") -> DeltaRwkvStackState:
+    return DeltaRwkvStackState(
+        layers=tuple(init_deltarwkv_state(p, batch_shape, dtype,
+                                          m_init=m_init) for p in params))
+
+
+def deltarwkv_stack_step(params: Sequence[RwkvLayerParams],
+                         state: DeltaRwkvStackState, x: Array,
+                         theta_x, theta_h, backend: str = "dense",
+                         layouts=None, packs=None,
+                         interpret: bool | None = None):
+    """One timestep through all layers (layer l+1 consumes layer l's y).
+
+    Same contract as :func:`repro.core.deltagru.deltagru_stack_step`:
+    returns ``(y, new_stack_state, [(delta_x, delta_h), ...])``.
+    """
+    del packs
+    new_layers = []
+    deltas = []
+    inp = x
+    for li, (p, st) in enumerate(zip(params, state.layers)):
+        out = deltarwkv_step(
+            p, st, inp, layer_theta(theta_x, li), layer_theta(theta_h, li),
+            backend=backend,
+            layout=layouts[li] if layouts is not None else None,
+            interpret=interpret)
+        new_layers.append(out.state)
+        deltas.append((out.delta_x, out.delta_h))
+        inp = out.h
+    return inp, DeltaRwkvStackState(tuple(new_layers)), deltas
+
+
+def deltarwkv_sequence(params: Sequence[RwkvLayerParams], xs: Array,
+                       theta_x, theta_h,
+                       init_state: DeltaRwkvStackState | None = None,
+                       collect_sparsity: bool = True,
+                       backend: str = "dense", layouts=None, packs=None,
+                       interpret: bool | None = None):
+    """Run a delta-RWKV6 stack over ``xs: [T, B, D]`` with ``lax.scan``.
+
+    Returns ``(ys [T, B, D], final_state, stats)`` with the same
+    ``{"gamma_dx", "gamma_dh", "per_layer"}`` stats contract as
+    :func:`repro.core.deltagru.deltagru_sequence`.
+    """
+    spec = get_backend(backend, cell="rwkv6")
+    if init_state is None:
+        init_state = init_deltarwkv_stack_state(params, xs.shape[1:-1],
+                                                xs.dtype, m_init=spec.m_init)
+    if layouts is None and packs is None:
+        _, layouts, packs = spec.pack(list(params), _BLOCK)
+
+    def step(state, x):
+        y, new_state, deltas = deltarwkv_stack_step(
+            params, state, x, theta_x, theta_h, backend=backend,
+            layouts=layouts, packs=packs, interpret=interpret)
+        if collect_sparsity:
+            stats = tuple((jnp.mean((dx == 0).astype(jnp.float32)),
+                           jnp.mean((dh == 0).astype(jnp.float32)))
+                          for dx, dh in deltas)
+        else:
+            stats = ()
+        return new_state, (y, stats)
+
+    final_state, (ys, stats) = jax.lax.scan(step, init_state, xs)
+    if collect_sparsity:
+        gamma_dx = jnp.mean(jnp.stack([jnp.mean(s[0]) for s in stats]))
+        gamma_dh = jnp.mean(jnp.stack([jnp.mean(s[1]) for s in stats]))
+        return ys, final_state, {"gamma_dx": gamma_dx, "gamma_dh": gamma_dh,
+                                 "per_layer": stats}
+    return ys, final_state, {}

@@ -102,13 +102,13 @@ def stack_effective_macs(dims: GruDims, gamma_dx, gamma_dh):
     """Eq. 7 numerator: MACs that survive delta skipping.
 
     Pure arithmetic (no branching), so it is traced-safe — the streaming
-    engine accumulates it on-device inside its jitted step. ``dims.gates``
-    scales the weight volume each delta column gates (3 for GRU, 4 for
-    LSTM — the same law either way).
+    engine accumulates it on-device inside its jitted step. The weight
+    volume each delta group gates comes from the dims object: the gate-row
+    formula (3 for GRU, 4 for LSTM) or the explicit projection volumes the
+    LM cells (rwkv6, rglru) declare — the same law either way.
     """
-    i, h, l, g = dims.input_size, dims.hidden_size, dims.num_layers, dims.gates
-    in_block = g * h * i + g * h * h * (l - 1)   # gated by delta-x
-    rec_block = g * h * h * l                    # gated by delta-h
+    in_block = dims.x_weight_volume    # gated by delta-x
+    rec_block = dims.h_weight_volume   # gated by delta-h
     return in_block * (1.0 - gamma_dx) + rec_block * (1.0 - gamma_dh)
 
 
@@ -162,11 +162,11 @@ def dram_traffic_bytes_per_timestep(dims: GruDims, gamma_dx: float,
                                     gamma_dh: float,
                                     w_weight_bits: int = 8) -> float:
     """Weight bytes fetched per timestep after delta column skipping
-    (``dims.gates`` rows per fetched column)."""
-    i, h, l, g = dims.input_size, dims.hidden_size, dims.num_layers, dims.gates
-    in_block = g * h * i + g * h * h * (l - 1)
-    rec_block = g * h * h * l
-    surviving = in_block * (1.0 - gamma_dx) + rec_block * (1.0 - gamma_dh)
+    (``dims.gates`` rows per fetched column for the gate-row cells;
+    explicit ``x_weights``/``h_weights`` projection volumes for the LM
+    cells)."""
+    surviving = (dims.x_weight_volume * (1.0 - gamma_dx)
+                 + dims.h_weight_volume * (1.0 - gamma_dh))
     return surviving * w_weight_bits / 8.0
 
 

@@ -4,8 +4,11 @@ EdgeDRNN's deployment model is a compile-then-stream split: weights are
 packed into the DRAM layout once, and the streaming side only ever issues
 steps against that fixed program. :func:`compile_delta_program` is the
 software analogue — it resolves a :class:`~repro.core.backends.BackendSpec`
-from the registry for any registered **cell family** (``"gru"`` or
-``"lstm"`` builtin), packs every layer's weights once (quantizing them for
+from the registry for any registered **cell family** (``"gru"``,
+``"lstm"``, ``"rwkv6"`` and ``"rglru"`` builtin — the LM cells
+delta-threshold their projection banks, see :mod:`repro.core.deltarwkv` /
+:mod:`repro.core.deltarglru`), packs every layer's weights once
+(quantizing them for
 ``fused_q8`` — for either cell family, ``compile`` of a trained fp32/QAT
 stack IS the int8 export), and returns an immutable :class:`DeltaProgram`:
 
@@ -65,7 +68,20 @@ def _cell_ops(cell: str) -> dict:
                 "step": m.deltalstm_stack_step,
                 "sequence": m.deltalstm_sequence,
                 "params_key": "lstm"}
-    raise ValueError(f"unknown cell family {cell!r}; known: ('gru', 'lstm')")
+    if cell == "rwkv6":
+        from repro.core import deltarwkv as m
+        return {"init": m.init_deltarwkv_stack_state,
+                "step": m.deltarwkv_stack_step,
+                "sequence": m.deltarwkv_sequence,
+                "params_key": "rwkv6"}
+    if cell == "rglru":
+        from repro.core import deltarglru as m
+        return {"init": m.init_deltarglru_stack_state,
+                "step": m.deltarglru_stack_step,
+                "sequence": m.deltarglru_sequence,
+                "params_key": "rglru"}
+    raise ValueError(f"unknown cell family {cell!r}; known: "
+                     f"('gru', 'lstm', 'rwkv6', 'rglru')")
 
 
 @dataclass(frozen=True)
@@ -268,10 +284,11 @@ DeltaGruProgram = DeltaProgram
 
 
 def infer_cell(params) -> str:
-    """Cell family of a model params dict (``"gru"`` / ``"lstm"`` key)."""
+    """Cell family of a model params dict (stack-key spelling)."""
     if isinstance(params, dict):
-        if "lstm" in params:
-            return "lstm"
+        for cell in ("lstm", "rwkv6", "rglru"):
+            if cell in params:
+                return cell
         if "gru" in params:
             return "gru"
     return "gru"
@@ -291,7 +308,8 @@ def compile_delta_program(params, backend: str = "fused", *,
         into the program for serving).
       backend: any backend name registered for ``cell``; resolved once,
         here.
-      cell: the cell family (``"gru"`` or ``"lstm"`` builtin).
+      cell: the cell family (``"gru"``, ``"lstm"``, ``"rwkv6"`` or
+        ``"rglru"`` builtin).
       layouts / packs: optional pre-packed per-layer kernel operands
         (e.g. the exact :func:`repro.quant.export.quantize_stack` layouts);
         packed from ``params`` otherwise. For ``backend="fused_q8"`` with

@@ -28,56 +28,126 @@ def gamma_from_fired(fired: Array) -> Array:
 
 @dataclass(frozen=True)
 class GruDims:
-    """Dimensions of an L-layer gated-RNN stack (uniform hidden size).
+    """Dimensions of an L-layer delta-RNN stack (uniform hidden size).
 
     ``gates`` is the number of stacked gate rows per weight column: 3 for
     GRU (r, u, c — the default, so every existing positional construction
     keeps its meaning) and 4 for LSTM (i, f, g, o). The Eq. 4/7/8 machinery
     is linear in the gate count, so the same dims object prices both cell
     families; :func:`lstm_dims` is the 4-gate spelling.
+
+    Cell families whose delta-gated projections are *not* a stack of gate
+    rows over ``[I+H]`` columns (RWKV6 time-mix, RG-LRU) instead pass the
+    gated weight volumes explicitly via ``x_weights`` / ``h_weights``: the
+    total parameter count gated by the Δx-group and Δh-group delta streams
+    across the whole stack. All Eq. 4/7/8 pricing is linear in those two
+    volumes, so :func:`effective_sparsity`,
+    :func:`repro.core.perf_model.stack_effective_macs` and
+    :func:`~repro.core.perf_model.dram_traffic_bytes_per_timestep`
+    generalize unchanged. When they are ``None`` the classic gate-row
+    formulas apply.
     """
 
     input_size: int   # I
     hidden_size: int  # H
     num_layers: int   # L
     gates: int = 3    # gate rows per column: GRU 3, LSTM 4
+    x_weights: int | None = None  # explicit Δx-gated weight volume (stack total)
+    h_weights: int | None = None  # explicit Δh-gated weight volume (stack total)
+
+    @property
+    def x_weight_volume(self) -> int:
+        """Parameters gated by the Δx delta streams (Eq. 7 input block).
+
+        Defaults to the gate-row formula ``gHI + gH^2(L-1)``: input weights
+        of layer 1 are (gH x I), input weights of layers 2..L are (gH x H).
+        """
+        if self.x_weights is not None:
+            return self.x_weights
+        i, h, l, g = (self.input_size, self.hidden_size, self.num_layers,
+                      self.gates)
+        return g * h * i + g * h * h * (l - 1)
+
+    @property
+    def h_weight_volume(self) -> int:
+        """Parameters gated by the Δh delta streams (Eq. 7 recurrent block).
+
+        Defaults to the gate-row formula ``gH^2 L``.
+        """
+        if self.h_weights is not None:
+            return self.h_weights
+        h, l, g = self.hidden_size, self.num_layers, self.gates
+        return g * h * h * l
 
     @property
     def params_per_timestep_ops(self) -> int:
         """Total MAC*2 (multiply + add) op count per timestep (Eq. 7 'Op').
 
-        Op = 2 * (gHI + gH^2(L-1) + gH^2 L) with g = gates: input weights
-        of layer 1 are (gH x I), input weights of layers 2..L are (gH x H),
-        and every layer has recurrent weights (gH x H) plus the extra 1x
-        (W_hc) fold that the paper counts inside 3H^2L for GRU.
+        Op = 2 * (x_weight_volume + h_weight_volume); for the classic
+        gate-row cells that is 2 * (gHI + gH^2(L-1) + gH^2 L) with
+        g = gates — the extra 1x (W_hc) fold the paper counts inside
+        3H^2L for GRU.
         """
-        i, h, l, g = (self.input_size, self.hidden_size, self.num_layers,
-                      self.gates)
-        return 2 * (g * h * i + g * h * h * (l - 1) + g * h * h * l)
+        return 2 * (self.x_weight_volume + self.h_weight_volume)
 
     @property
     def n_params(self) -> int:
-        """Weight parameter count (biases negligible, per the paper)."""
-        i, h, l, g = (self.input_size, self.hidden_size, self.num_layers,
-                      self.gates)
-        return g * h * i + g * h * h * (l - 1) + g * h * h * l
+        """Delta-gated weight parameter count (biases negligible, per the
+        paper; for the LM cells, the dense non-delta side weights — LoRA
+        mixers, output projections, scan state updates — are excluded:
+        only the priced, skippable projection volume counts here)."""
+        return self.x_weight_volume + self.h_weight_volume
 
 
 # Gate rows per weight column, per cell family — the single source of
 # truth the serving engine and dims helpers derive Eq. 4/7/8 pricing from.
-# A new cell family must add its entry here (unknown cells raise loudly
-# rather than silently pricing as a 3-gate GRU).
+# A new gate-row cell family must add its entry here (unknown cells raise
+# loudly rather than silently pricing as a 3-gate GRU).
 CELL_GATES = {"gru": 3, "lstm": 4}
+
+
+def _rwkv6_volumes(i: int, h: int, l: int) -> tuple[int, int]:
+    """RWKV6 time-mix delta-gated projection volumes per stack.
+
+    Δx-group: the mixed r/k/v streams each gate a [D, D] projection
+    (W_r/W_k/W_v) → 3·D² per layer. Δh-group: the decay stream x_w gates
+    the [D, DECAY_LORA] decay LoRA down-projection. Everything else
+    (token-shift LoRA, gate/output projections, WKV scan) stays dense.
+    """
+    from repro.core.deltarwkv import DECAY_LORA
+    return 3 * h * h * l, h * DECAY_LORA * l
+
+
+def _rglru_volumes(i: int, h: int, l: int) -> tuple[int, int]:
+    """RG-LRU delta-gated projection volumes per stack.
+
+    Δx-group: the block input gates w_in + w_in_gate, each [D, W]
+    → 2·D·W per layer. Δh-group: the post-conv stream u gates the
+    recurrence/input gate projections w_rg + w_ig, each [W, W] → 2·W²
+    per layer. Causal conv, λ, and w_out stay dense.
+    """
+    return 2 * i * h * l, 2 * h * h * l
+
+
+# Cell families priced by explicit projection volumes rather than gate
+# rows: maps cell -> fn(input_size, hidden_size, num_layers) ->
+# (x_weights, h_weights).
+CELL_PROJ_VOLUMES = {"rwkv6": _rwkv6_volumes, "rglru": _rglru_volumes}
 
 
 def cell_dims(cell: str, input_size: int, hidden_size: int,
               num_layers: int) -> GruDims:
     """Dims of an L-layer delta-RNN stack of the given cell family."""
-    if cell not in CELL_GATES:
-        raise ValueError(f"unknown cell family {cell!r}; known gate "
-                         f"counts: {CELL_GATES}")
-    return GruDims(input_size, hidden_size, num_layers,
-                   gates=CELL_GATES[cell])
+    if cell in CELL_GATES:
+        return GruDims(input_size, hidden_size, num_layers,
+                       gates=CELL_GATES[cell])
+    if cell in CELL_PROJ_VOLUMES:
+        xw, hw = CELL_PROJ_VOLUMES[cell](input_size, hidden_size, num_layers)
+        return GruDims(input_size, hidden_size, num_layers, gates=1,
+                       x_weights=xw, h_weights=hw)
+    raise ValueError(f"unknown cell family {cell!r}; known gate "
+                     f"counts: {CELL_GATES}, known projection-volume "
+                     f"cells: {sorted(CELL_PROJ_VOLUMES)}")
 
 
 def lstm_dims(input_size: int, hidden_size: int, num_layers: int) -> GruDims:
@@ -87,10 +157,14 @@ def lstm_dims(input_size: int, hidden_size: int, num_layers: int) -> GruDims:
 
 def effective_sparsity(dims: GruDims, gamma_dx: float, gamma_dh: float) -> float:
     """Eq. 4 Γ_eff: parameter-weighted average of input/hidden sparsity."""
-    i, h, l = dims.input_size, dims.hidden_size, dims.num_layers
-    num = (i + h * (l - 1)) * gamma_dx + h * l * gamma_dh
-    den = i + h * (l - 1) + h * l
-    return num / den
+    if dims.x_weights is None and dims.h_weights is None:
+        # Classic gate-row path: column counts (the gate factor cancels).
+        i, h, l = dims.input_size, dims.hidden_size, dims.num_layers
+        num = (i + h * (l - 1)) * gamma_dx + h * l * gamma_dh
+        den = i + h * (l - 1) + h * l
+        return num / den
+    xw, hw = dims.x_weight_volume, dims.h_weight_volume
+    return (xw * gamma_dx + hw * gamma_dh) / (xw + hw)
 
 
 def measure_layer_sparsity(delta_x: Array, delta_h: Array) -> tuple[Array, Array]:

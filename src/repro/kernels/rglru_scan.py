@@ -43,8 +43,16 @@ def _kernel(x_ref, a_ref, h0_ref, y_ref, hT_ref, h_scratch):
 
 @functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
 def rglru_scan(x: Array, a: Array, h0: Array | None = None, *,
-               chunk: int = 128, block_d: int = 128, interpret: bool = True):
-    """RG-LRU over ``x, a: [B, T, D]``; returns ``(h_seq: [B,T,D], h_T: [B,D])``."""
+               chunk: int = 128, block_d: int = 128,
+               interpret: bool | None = None):
+    """RG-LRU over ``x, a: [B, T, D]``; returns ``(h_seq: [B,T,D], h_T: [B,D])``.
+
+    ``interpret=None`` (default) is platform-aware: compiled Pallas on TPU,
+    interpret-mode emulation elsewhere — a real device never silently runs
+    the interpreter unless explicitly asked to (``interpret=True``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     b, t, d = x.shape
     if h0 is None:
         h0 = jnp.zeros((b, d), jnp.float32)

@@ -54,12 +54,18 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref, s_scratch)
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def rwkv6_scan(r: Array, k: Array, v: Array, w: Array, u: Array,
                s0: Array | None = None, *, chunk: int = 64,
-               interpret: bool = True):
+               interpret: bool | None = None):
     """WKV6 over ``r,k,v,w: [B, H, T, D]`` with bonus ``u: [H, D]``.
 
     ``w`` is the per-step decay factor in (0, 1). Returns
     ``(y: [B, H, T, D], s_T: [B, H, D, D])``.
+
+    ``interpret=None`` (default) is platform-aware: compiled Pallas on TPU,
+    interpret-mode emulation elsewhere — a real device never silently runs
+    the interpreter unless explicitly asked to (``interpret=True``).
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     b, h, t, d = r.shape
     if s0 is None:
         s0 = jnp.zeros((b, h, d, d), jnp.float32)

@@ -12,14 +12,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+# The canonical gate expressions live in the delta cell module so the
+# delta-decode path and this module share one set of ops — that shared
+# code is what makes θ=0 delta decode *bitwise* equal to
+# :func:`rglru_block_decode` (see repro.core.deltarglru).
+from repro.core.deltarglru import _C, CONV_WIDTH, rglru_gates
 from repro.dist.sharding import shard
 from repro.kernels import ops as kops
 from repro.models.common import dense_init
 
 Array = jax.Array
-
-_C = 8.0  # Griffin's fixed exponent scale
-CONV_WIDTH = 4
 
 
 def init_rglru_block(key: Array, d_model: int, lru_width: int | None = None,
@@ -64,17 +66,20 @@ def _causal_conv(x: Array, w: Array, b: Array, history: Array | None = None):
 
 
 def _gates(params, u: Array):
-    """RG-LRU gating: decay factor ``a`` and gated input from ``u: [..., W]``."""
-    r = jax.nn.sigmoid(u @ params["w_rg"] + params["b_rg"]).astype(jnp.float32)
-    i = jax.nn.sigmoid(u @ params["w_ig"] + params["b_ig"]).astype(jnp.float32)
-    log_a = -_C * jax.nn.softplus(params["lambda"]) * r   # [..., W] (< 0)
-    a = jnp.exp(log_a)
-    return a, i * u.astype(jnp.float32)
+    """RG-LRU gating: decay factor ``a`` and gated input from ``u: [..., W]``
+    (the canonical expressions, shared with the delta cell)."""
+    return rglru_gates(u, params["w_rg"], params["w_ig"],
+                       params["b_rg"], params["b_ig"], params["lambda"])
 
 
 def rglru_block_apply(params, x: Array, state: RglruState | None = None,
-                      use_kernel: bool = False):
-    """Full-sequence recurrent block. ``x: [B, T, D]`` -> ``([B, T, D], state)``."""
+                      use_kernel: bool = False,
+                      interpret: bool | None = None):
+    """Full-sequence recurrent block. ``x: [B, T, D]`` -> ``([B, T, D], state)``.
+
+    ``use_kernel=True`` runs the scan on the Pallas kernel; ``interpret``
+    threads the Pallas mode through (``None`` = platform-aware).
+    """
     b, t, _ = x.shape
     gate = jax.nn.gelu(x @ params["w_in_gate"])
     u = x @ params["w_in"]
@@ -89,7 +94,8 @@ def rglru_block_apply(params, x: Array, state: RglruState | None = None,
         from repro.kernels import ref as kref
         hs, h_t = kref.rglru_assoc_ref(gated, a, h0)
     else:
-        hs, h_t = kops.rglru_scan(gated, a, h0, use_ref=not use_kernel)
+        hs, h_t = kops.rglru_scan(gated, a, h0, use_ref=not use_kernel,
+                                  interpret=interpret)
     y = (hs.astype(x.dtype) * gate) @ params["w_out"]
     y = shard(y, "batch", "seq", "embed")
     return y, RglruState(h=h_t, conv=new_hist)
@@ -107,3 +113,34 @@ def rglru_block_decode(params, x: Array, state: RglruState):
     h = a[:, 0] * state.h + jnp.sqrt(jnp.maximum(1.0 - a[:, 0] ** 2, 0.0)) * gated[:, 0]
     y = (h[:, None].astype(x.dtype) * gate) @ params["w_out"]
     return y, RglruState(h=h, conv=xh[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Delta-capable decode entry points (EdgeDRNN Eq. 2/3 on the projections)
+# ---------------------------------------------------------------------------
+
+def init_rglru_delta_state(params, batch_shape=()):
+    """Per-layer delta-decode state for :func:`rglru_block_decode_delta`
+    (carries the conv history alongside the Eq. 2/3 memories)."""
+    from repro.core.deltarglru import (init_deltarglru_state,
+                                       rglru_layer_params)
+    return init_deltarglru_state(rglru_layer_params(params), batch_shape)
+
+
+def rglru_block_decode_delta(params, x: Array, state, theta_x=0.0,
+                             theta_h=0.0, backend: str = "dense",
+                             interpret: bool | None = None):
+    """Delta-thresholded single-token block step. ``x: [B, D]``.
+
+    ``backend="dense"`` runs the reconstruction-form reference — at
+    ``theta_x == theta_h == 0`` it is bitwise identical to
+    :func:`rglru_block_decode`; ``backend="fused"`` runs the fired-block-
+    compacting delta-memory kernels. Returns a
+    :class:`repro.core.deltarglru.DeltaRglruStepOut`. For the hot serving
+    path, compile the stack:
+    ``compile_delta_program({"rglru": ...}, cell="rglru")``.
+    """
+    from repro.core.deltarglru import deltarglru_step, rglru_layer_params
+    return deltarglru_step(rglru_layer_params(params), state, x,
+                           theta_x, theta_h, backend=backend,
+                           interpret=interpret)

@@ -16,15 +16,17 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+# The canonical time-mix expressions live in the delta cell module so the
+# delta-decode path and this full-sequence path share one set of ops —
+# that shared code is what makes θ=0 delta decode *bitwise* equal to the
+# exact dense decode (see repro.core.deltarwkv).
+from repro.core.deltarwkv import (DECAY_LORA, HEAD_DIM, TSHIFT_LORA,
+                                  group_norm_heads, mix_streams)
 from repro.dist.sharding import shard
 from repro.kernels import ops as kops
 from repro.models.common import dense_init
 
 Array = jax.Array
-
-HEAD_DIM = 64
-TSHIFT_LORA = 32
-DECAY_LORA = 64
 
 
 def init_rwkv_time_mix(key: Array, d_model: int, dtype=jnp.float32):
@@ -79,26 +81,25 @@ def _token_shift(x: Array, last: Array):
     return prev - x, x[:, -1]
 
 
-def _group_norm_heads(y: Array, scale: Array, eps: float = 1e-5):
-    """Per-head layer norm over [B, T, H, D] -> scaled, flattened."""
-    b, t, h, d = y.shape
-    mu = jnp.mean(y, axis=-1, keepdims=True)
-    var = jnp.var(y, axis=-1, keepdims=True)
-    yn = (y - mu) * jax.lax.rsqrt(var + eps)
-    return (yn.reshape(b, t, h * d) * scale).astype(y.dtype)
+# Historical module-private spelling; same function (tests import it).
+_group_norm_heads = group_norm_heads
 
 
-def rwkv_time_mix(params, x: Array, state: RwkvState, use_kernel: bool = False):
-    """``x: [B, T, D]`` -> (y, new_tm_shift, new_wkv_state)."""
+def rwkv_time_mix(params, x: Array, state: RwkvState, use_kernel: bool = False,
+                  interpret: bool | None = None):
+    """``x: [B, T, D]`` -> (y, new_tm_shift, new_wkv_state).
+
+    ``use_kernel=True`` runs the WKV recurrence on the Pallas kernel;
+    ``interpret`` threads the Pallas mode through (``None`` = platform-
+    aware: compiled on TPU, interpret-mode elsewhere).
+    """
     b, t, d = x.shape
     h = d // HEAD_DIM
     xx, new_last = _token_shift(x, state.tm_shift)
 
     # data-dependent lerp (fused 5-way LoRA)
-    x_base = x + xx * params["mu_base"]
-    lora = jnp.tanh(x_base @ params["tsh_w1"]).reshape(b, t, 5, TSHIFT_LORA)
-    adj = jnp.einsum("btfl,fld->fbtd", lora, params["tsh_w2"])      # [5,B,T,D]
-    mixed = x[None] + xx[None] * (params["mu"][:, None, None] + adj)
+    mixed = mix_streams(x, xx, params["mu_base"], params["mu"],
+                        params["tsh_w1"], params["tsh_w2"])
     x_r, x_k, x_v, x_w, x_g = mixed
 
     r = (x_r @ params["w_r"]).reshape(b, t, h, HEAD_DIM)
@@ -122,11 +123,42 @@ def rwkv_time_mix(params, x: Array, state: RwkvState, use_kernel: bool = False):
     else:
         y, wkv_t = kops.rwkv6_scan(tr(r), tr(k), tr(v), tr(w),
                                    params["bonus_u"], state.wkv,
-                                   use_ref=not use_kernel)
+                                   use_ref=not use_kernel,
+                                   interpret=interpret)
     y = jnp.moveaxis(y, 1, 2)                                       # [B,T,H,D]
-    y = _group_norm_heads(y.astype(jnp.float32), params["ln_scale"].astype(jnp.float32))
+    y = group_norm_heads(y.astype(jnp.float32), params["ln_scale"].astype(jnp.float32))
     y = (y.astype(x.dtype) * g) @ params["w_o"]
     return shard(y, "batch", "seq", "embed"), new_last, wkv_t
+
+
+# ---------------------------------------------------------------------------
+# Delta-capable decode entry points (EdgeDRNN Eq. 2/3 on the projections)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_delta_state(params, batch_shape=()):
+    """Per-layer delta-decode state for :func:`rwkv_time_mix_delta`."""
+    from repro.core.deltarwkv import init_deltarwkv_state, rwkv_layer_params
+    return init_deltarwkv_state(rwkv_layer_params(params), batch_shape)
+
+
+def rwkv_time_mix_delta(params, x: Array, state, theta_x=0.0, theta_h=0.0,
+                        backend: str = "dense",
+                        interpret: bool | None = None):
+    """Delta-thresholded single-token time-mix step. ``x: [B, D]``.
+
+    ``backend="dense"`` runs the reconstruction-form reference — at
+    ``theta_x == theta_h == 0`` it is bitwise identical to the exact dense
+    decode (one-token :func:`rwkv_time_mix`); ``backend="fused"`` runs the
+    fired-block-compacting delta-memory kernels. Returns a
+    :class:`repro.core.deltarwkv.DeltaRwkvStepOut` (output, new state, and
+    the sparse deltas for Eq. 4 accounting). For the hot serving path,
+    compile the stack instead:
+    ``compile_delta_program({"rwkv6": ...}, cell="rwkv6")``.
+    """
+    from repro.core.deltarwkv import deltarwkv_step, rwkv_layer_params
+    return deltarwkv_step(rwkv_layer_params(params), state, x,
+                          theta_x, theta_h, backend=backend,
+                          interpret=interpret)
 
 
 def rwkv_channel_mix(params, x: Array, last: Array):

@@ -1,0 +1,36 @@
+"""Smoke-run the committed examples as real subprocesses.
+
+Examples are the documented entry points; they rot silently unless CI
+executes them the way a reader would (``PYTHONPATH=src python
+examples/<name>.py``). Each must exit 0 and print its key result lines.
+"""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_example(name, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", name)],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO)
+    assert proc.returncode == 0, \
+        f"{name} exited {proc.returncode}\nstdout:\n{proc.stdout[-2000:]}" \
+        f"\nstderr:\n{proc.stderr[-2000:]}"
+    return proc.stdout
+
+
+def test_quickstart_runs():
+    out = _run_example("quickstart.py")
+    assert "theta" in out.lower()
+
+
+def test_lm_delta_decode_runs():
+    out = _run_example("lm_delta_decode.py")
+    # theta=0 row must report a byte-exact decode (zero drift, full match)
+    assert "drift" in out
+    assert "0.0000" in out
+    assert "rwkv6" in out.lower()

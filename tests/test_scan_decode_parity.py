@@ -1,0 +1,173 @@
+"""Full-sequence scans vs per-step decode carries (the LM cells).
+
+A delta-served decode runs the recurrences one token at a time with
+carried state; training/prefill runs them as full-sequence scans.  These
+tests pin the two spellings to each other — with NONZERO initial state
+and across chunk boundaries, where off-by-one carry bugs live:
+
+* ``rglru_block_apply`` (full-sequence, ref scan and Pallas-interpret
+  kernel) vs a ``rglru_block_decode`` per-step loop;
+* ``ops.rglru_scan``'s chunked Pallas kernel vs the jnp oracle at a
+  chunk size that splits the sequence;
+* RWKV6 chunked-scan (``ops.rwkv6_chunked``, matmul-form) and the
+  Pallas scan kernel vs a per-step T=1 carry chain of the jnp ref.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models import rglru as mrglru
+from repro.models import rwkv as mrwkv
+
+B, D = 2, 64
+HEADS, HEAD_DIM = 2, 16
+
+
+def _rglru_setup(key=0, t=12):
+    params = mrglru.init_rglru_block(jax.random.PRNGKey(key), D)
+    x = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(key), 1),
+                          (B, t, D)) * 0.5
+    # nonzero initial state: recurrent h AND partially-filled conv window
+    st = mrglru.RglruState(
+        h=jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(key), 2),
+                            (B, D)) * 0.3,
+        conv=jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(key), 3),
+            (B, mrglru.CONV_WIDTH - 1, D)) * 0.3)
+    return params, x, st
+
+
+class TestRglruApplyVsDecode:
+    def test_ref_scan_matches_decode_loop(self):
+        params, x, st0 = _rglru_setup()
+        ys_seq, st_seq = mrglru.rglru_block_apply(params, x, st0)
+        st = st0
+        ys = []
+        for t in range(x.shape[1]):
+            y, st = mrglru.rglru_block_decode(params, x[:, t:t + 1], st)
+            ys.append(y[:, 0])
+        ys_dec = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(ys_seq), np.asarray(ys_dec),
+                                   atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(st_seq.h), np.asarray(st.h),
+                                   atol=1e-6, rtol=1e-6)
+        assert jnp.array_equal(st_seq.conv, st.conv)
+
+    def test_kernel_interpret_matches_decode_loop(self):
+        params, x, st0 = _rglru_setup(t=10)
+        ys_seq, st_seq = mrglru.rglru_block_apply(params, x, st0,
+                                                  use_kernel=True,
+                                                  interpret=True)
+        st = st0
+        ys = []
+        for t in range(x.shape[1]):
+            y, st = mrglru.rglru_block_decode(params, x[:, t:t + 1], st)
+            ys.append(y[:, 0])
+        np.testing.assert_allclose(np.asarray(ys_seq),
+                                   np.asarray(jnp.stack(ys, axis=1)),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestRglruScanChunks:
+    @pytest.mark.parametrize("t", [16, 40, 48])
+    def test_chunked_kernel_crosses_boundaries(self, t):
+        """chunk=16 splits t=40/48 mid-sequence; the carried h must cross
+        exactly (t=40 additionally exercises a ragged final chunk)."""
+        key = jax.random.PRNGKey(1)
+        x = jax.random.normal(key, (B, t, D))
+        a = jax.nn.sigmoid(
+            jax.random.normal(jax.random.fold_in(key, 1), (B, t, D)) + 2.0)
+        h0 = jax.random.normal(jax.random.fold_in(key, 2), (B, D)) * 0.5
+        ref_hs, ref_ht = ref.rglru_scan_batched_ref(x, a, h0)
+        got_hs, got_ht = ops.rglru_scan(x, a, h0, chunk=16,
+                                        interpret=True)
+        np.testing.assert_allclose(np.asarray(got_hs), np.asarray(ref_hs),
+                                   atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_ht), np.asarray(ref_ht),
+                                   atol=1e-6, rtol=1e-6)
+
+
+def _rwkv_streams(key=3, t=32):
+    d = HEAD_DIM
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    r = jax.random.normal(ks[0], (B, HEADS, t, d)) * 0.5
+    k = jax.random.normal(ks[1], (B, HEADS, t, d)) * 0.5
+    v = jax.random.normal(ks[2], (B, HEADS, t, d)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, HEADS, t, d)) + 2.0)
+    u = jax.random.normal(ks[4], (HEADS, d)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, HEADS, d, d)) * 0.2   # nonzero carry
+    return r, k, v, w, u, s0
+
+
+def _per_step_chain(r, k, v, w, u, s0):
+    """T=1 decode carry chain of the jnp ref — the serving spelling."""
+    ys = []
+    s = s0
+    for t in range(r.shape[2]):
+        y, s = ops.rwkv6_scan(r[:, :, t:t + 1], k[:, :, t:t + 1],
+                              v[:, :, t:t + 1], w[:, :, t:t + 1], u, s,
+                              use_ref=True)
+        ys.append(y[:, :, 0])
+    return jnp.stack(ys, axis=2), s
+
+
+class TestRwkv6ChunkedVsPerStep:
+    def test_chunked_matches_per_step_carry(self):
+        r, k, v, w, u, s0 = _rwkv_streams(t=32)
+        ref_y, ref_s = _per_step_chain(r, k, v, w, u, s0)
+        got_y, got_s = ops.rwkv6_chunked(r, k, v, w, u, s0, chunk=16)
+        np.testing.assert_allclose(np.asarray(got_y), np.asarray(ref_y),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(got_s), np.asarray(ref_s),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_chunked_ragged_tail(self):
+        # t=24 with chunk=16: the internal pad must not leak into y or s_T
+        r, k, v, w, u, s0 = _rwkv_streams(t=24)
+        ref_y, ref_s = _per_step_chain(r, k, v, w, u, s0)
+        got_y, got_s = ops.rwkv6_chunked(r, k, v, w, u, s0, chunk=16)
+        np.testing.assert_allclose(np.asarray(got_y), np.asarray(ref_y),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(got_s), np.asarray(ref_s),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_pallas_kernel_matches_per_step_carry(self):
+        r, k, v, w, u, s0 = _rwkv_streams(t=16)
+        ref_y, ref_s = _per_step_chain(r, k, v, w, u, s0)
+        got_y, got_s = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=8,
+                                      interpret=True)
+        np.testing.assert_allclose(np.asarray(got_y), np.asarray(ref_y),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(got_s), np.asarray(ref_s),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestTimeMixSeqVsDecode:
+    def test_time_mix_sequence_matches_per_step(self):
+        """Full-sequence rwkv_time_mix vs the per-step decode chain
+        (nonzero token-shift + wkv state through the carry)."""
+        params = mrwkv.init_rwkv_time_mix(jax.random.PRNGKey(4), D)
+        t = 6
+        x = jax.random.normal(jax.random.PRNGKey(5), (B, t, D)) * 0.5
+        zero = mrwkv.init_rwkv_state(B, D)
+        st0 = mrwkv.RwkvState(
+            tm_shift=jax.random.normal(jax.random.PRNGKey(6), (B, D)) * 0.3,
+            cm_shift=zero.cm_shift,
+            wkv=jax.random.normal(jax.random.PRNGKey(7),
+                                  zero.wkv.shape) * 0.1)
+        y_seq, last_seq, wkv_seq = mrwkv.rwkv_time_mix(params, x, st0)
+        st = st0
+        ys = []
+        for i in range(t):
+            y, new_last, wkv = mrwkv.rwkv_time_mix(params, x[:, i:i + 1], st)
+            st = mrwkv.RwkvState(tm_shift=new_last, cm_shift=st.cm_shift,
+                                 wkv=wkv)
+            ys.append(y[:, 0])
+        np.testing.assert_allclose(np.asarray(y_seq),
+                                   np.asarray(jnp.stack(ys, axis=1)),
+                                   atol=1e-5, rtol=1e-5)
+        assert jnp.array_equal(last_seq, st.tm_shift)
+        np.testing.assert_allclose(np.asarray(wkv_seq), np.asarray(st.wkv),
+                                   atol=1e-5, rtol=1e-5)
