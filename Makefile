@@ -1,12 +1,12 @@
 # EdgeDRNN reproduction — tier-1 + perf-gate entry points.
 export PYTHONPATH := src
 
-.PHONY: test bench bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick soak-quick bench-fabric-quick bench-lm-delta-quick check-regression ci
+.PHONY: test bench bench-quick bench-lstm-quick bench-lstm-q8-quick bench-q4-quick bench-batch-quick soak-quick bench-fabric-quick bench-lm-delta-quick check-regression ci
 
 test:            ## tier-1 suite
 	python -m pytest -x -q
 
-ci: test bench-quick bench-lstm-quick bench-lstm-q8-quick bench-batch-quick soak-quick bench-fabric-quick bench-lm-delta-quick check-regression  ## full gate: tier-1 + quick benches (GRU + LSTM parity + LSTM q8 parity/bytes + batched tile invariant + resilient-serving soak + distributed-fabric loadgen + delta-ized LM cells) + perf regression
+ci: test bench-quick bench-lstm-quick bench-lstm-q8-quick bench-q4-quick bench-batch-quick soak-quick bench-fabric-quick bench-lm-delta-quick check-regression  ## full gate: tier-1 + quick benches (GRU + LSTM parity + LSTM q8 parity/bytes + int4 q4 parity/bytes + batched tile invariant + resilient-serving soak + distributed-fabric loadgen + delta-ized LM cells) + perf regression
 
 bench:           ## full paper tables/figures + kernel benches (rewrites BENCH_*.json)
 	python -m benchmarks.run
@@ -19,6 +19,9 @@ bench-lstm-quick:  ## DeltaLSTM parity/bench quick path (no baseline writes)
 
 bench-lstm-q8-quick:  ## quantized DeltaLSTM parity/bytes quick path (hard fused_q8-vs-dense + kernel-oracle assertions)
 	python -m benchmarks.kernel_bench --lstm-q8 --quick
+
+bench-q4-quick:  ## int4 nibble-packed parity/bytes quick path, both cells (hard fused_q4 kernel-oracle bit-match + 2x-budget drift asserts)
+	python -m benchmarks.kernel_bench --q4 --quick
 
 bench-batch-quick:  ## measured batched-tile sweep quick path (hard matched-firing bytes/stream invariant, no baseline writes)
 	python -m benchmarks.fig13_batch_sweep --quick

@@ -19,6 +19,14 @@ gate always compares apples to apples), then:
   ``fused_q8`` must stream EXACTLY 0.25x the fp32 fused bytes over the
   same fired-column set (1 byte/weight vs 4) — checked on the fresh
   record's matched-count fields, so it holds on every machine class;
+* fails if the int4 records' matched-firing ladder breaks: ``fused_q4``
+  must stream EXACTLY 0.5x the ``fused_q8`` bytes (two nibble codes per
+  streamed byte) and 0.125x the fp32 fused bytes over the same
+  fired-column set — checked on the fresh ``BENCH_deltagru_q4.json`` /
+  ``BENCH_deltalstm_q4.json`` records' unrounded matched-count fields,
+  so it holds on every machine class; the q4 re-runs themselves
+  hard-fail on fused_q4-kernel-vs-oracle bit drift and on dense drift
+  beyond 2x the int8 budget;
 * the LSTM re-runs themselves hard-fail on parity drift (fused vs dense
   in fp32; fused_q8 Pallas kernel vs its jnp oracle, bit-exact, plus the
   quantization-budget rail vs the fp32 dense reference) — those
@@ -67,7 +75,7 @@ import os
 import sys
 
 MAX_WALL_RATIO = 1.5
-GATED_BACKENDS = ("fused", "fused_q8")
+GATED_BACKENDS = ("fused", "fused_q8", "fused_q4")
 
 
 def _load(path):
@@ -158,6 +166,41 @@ def _gate_q8_matched_bytes(name, fresh, failures):
         else:
             print(f"ok   {name} theta={row['theta']}: fused_q8 bytes = "
                   f"0.25x fused at matched firing ({q8m:.0f} B/step)")
+
+
+def _gate_q4_matched_bytes(name, fresh, failures):
+    """EXACT invariant of the nibble-packed bytes model: at matched firing
+    counts, ``fused_q4`` streams precisely 0.5x the ``fused_q8`` bytes
+    (two int4 codes per byte vs one int8 code) and 0.125x the fp32 fused
+    bytes, over the identical fired-column set. Evaluated on the fresh
+    record's UNROUNDED matched-count fields, so it holds on every machine
+    class; any deviation is a real weight-width or packing bug in the
+    bytes model."""
+    for row in fresh["rows"]:
+        if row["backend"] != "fused_q4":
+            continue
+        q4m = row.get("q4_bytes_matched_fp32")
+        q8m = row.get("q8_bytes_matched_fp32")
+        fm = row.get("fused_bytes_matched_fp32")
+        if q4m is None or q8m is None or fm is None:
+            failures.append(
+                f"Q4 MATCHED BYTES {name} theta={row['theta']}: record is "
+                "missing the matched-firing fields")
+            continue
+        if q4m != 0.5 * q8m:
+            failures.append(
+                f"Q4 MATCHED BYTES {name} theta={row['theta']}: fused_q4 "
+                f"streams {q4m} B/step vs fused_q8 {q8m} at matched "
+                f"firing (expected exactly 0.5x = {0.5 * q8m})")
+        elif q4m != 0.125 * fm:
+            failures.append(
+                f"Q4 MATCHED BYTES {name} theta={row['theta']}: fused_q4 "
+                f"streams {q4m} B/step vs fp32 fused {fm} at matched "
+                f"firing (expected exactly 0.125x = {0.125 * fm})")
+        else:
+            print(f"ok   {name} theta={row['theta']}: fused_q4 bytes = "
+                  f"0.5x fused_q8 = 0.125x fused at matched firing "
+                  f"({q4m:.0f} B/step)")
 
 
 def _batch_row_key(row):
@@ -473,6 +516,37 @@ def main() -> int:
             else:
                 warnings.append(
                     "lstm_q8 baseline was recorded on a different machine "
+                    "class; wall-time gate skipped, bytes model enforced "
+                    "at 2% tolerance")
+
+    for cell, path in (("gru", kb.BENCH_Q4_JSON),
+                       ("lstm", kb.BENCH_LSTM_Q4_JSON)):
+        base_q4 = _load(path)
+        if base_q4 is None:
+            continue
+        # bench_q4_record hard-fails on (a) fused_q4 Pallas kernel vs
+        # jnp-oracle bit drift and (b) drift beyond 2x the int8 budget
+        # (plus fused_q8's own rail); a completed fresh record certifies
+        # all three.
+        name = f"{cell}_q4"
+        try:
+            _, fresh_q4 = kb.bench_q4_record(
+                **cfg_dims(base_q4), cell=cell,
+                thetas=tuple(sorted({r["theta"]
+                                     for r in base_q4["rows"]})))
+        except AssertionError as e:
+            failures.append(f"Q4 PARITY {e}")
+        else:
+            same_machine = _comparable(base_q4["config"],
+                                       fresh_q4["config"])
+            _gate_bytes(name, base_q4, fresh_q4, failures,
+                        strict=same_machine)
+            _gate_q4_matched_bytes(name, fresh_q4, failures)
+            if same_machine:
+                _gate_walltime(name, base_q4, fresh_q4, failures)
+            else:
+                warnings.append(
+                    f"{name} baseline was recorded on a different machine "
                     "class; wall-time gate skipped, bytes model enforced "
                     "at 2% tolerance")
 

@@ -39,6 +39,16 @@ reference) — written to ``BENCH_deltalstm_q8.json`` with the
 matched-firing 0.25x bytes invariant the regression gate checks exactly.
 ``python -m benchmarks.kernel_bench --lstm-q8 --quick`` is the CI
 spelling (``make bench-lstm-q8-quick``).
+
+Part 6 (``run_q4``) is the int4 nibble-packed story for BOTH cells: the
+``dense`` -> ``fused_q8`` -> ``fused_q4`` weight-width ladder (4 B -> 1 B
+-> 0.5 B per streamed weight), with hard gates (fused_q4 Pallas kernel
+bit-identical to its jnp oracle; drift vs fp32 dense within 2x the int8
+budget) and the UNROUNDED matched-firing fields the regression gate uses
+to assert the exact ``q4 == 0.5x q8 == 0.125x fused`` bytes ladder on any
+machine — written to ``BENCH_deltagru_q4.json`` /
+``BENCH_deltalstm_q4.json``. ``python -m benchmarks.kernel_bench --q4
+--quick`` is the CI spelling (``make bench-q4-quick``).
 """
 from __future__ import annotations
 
@@ -64,6 +74,10 @@ BENCH_LSTM_JSON = os.path.join(os.path.dirname(__file__),
                                "BENCH_deltalstm_seq.json")
 BENCH_LSTM_Q8_JSON = os.path.join(os.path.dirname(__file__),
                                   "BENCH_deltalstm_q8.json")
+BENCH_Q4_JSON = os.path.join(os.path.dirname(__file__),
+                             "BENCH_deltagru_q4.json")
+BENCH_LSTM_Q4_JSON = os.path.join(os.path.dirname(__file__),
+                                  "BENCH_deltalstm_q4.json")
 
 # Derived from the backend registry (the single source of truth): a newly
 # registered backend is automatically swept, benched, and regression-gated
@@ -288,7 +302,9 @@ def _backend_weight_bytes(cell="gru") -> dict:
     (the backend registry, surfaced through the Eq. 6/7 model) so bench
     and engine cannot drift."""
     from repro.core.perf_model import backend_weight_bits
-    return {be: bits // 8 for be, bits in backend_weight_bits(cell).items()}
+    # float division: sub-byte widths (fused_q4's 4-bit nibbles) must map to
+    # fractional bytes-per-weight (0.5), not truncate to 0.
+    return {be: bits / 8.0 for be, bits in backend_weight_bits(cell).items()}
 
 
 def _mean_fired_blocks(params, xs, theta, backend="dense", layouts=None,
@@ -698,6 +714,187 @@ def run_lstm_q8_quick(t=16, i=64, h=128, layers=2,
                        write=False)
 
 
+# ---------------------------------------------------------------------------
+# Part 6: int4 nibble-packed bytes/GOp/s record (the 0.5x-of-q8 story)
+# ---------------------------------------------------------------------------
+
+def bench_q4_record(t=64, i=128, h=256, layers=2,
+                    thetas=(0.0, 0.05, 0.2), cell="gru"):
+    """Bytes-streamed + effective-GOp/s record for the ``fused_q4``
+    nibble-packed backend, with its hard parity gates.
+
+    One function serves both cell families (``cell="gru"`` / ``"lstm"``);
+    the swept backends are the quantized-width ladder ``dense`` (fp32,
+    4 B/weight) -> ``fused_q8`` (1 B) -> ``fused_q4`` (0.5 B — two codes
+    per streamed byte). Three assertions fail the record (and CI) instead
+    of silently recording drift:
+
+    * **kernel parity** — the ``fused_q4`` Pallas kernel (interpret mode)
+      must be *bit-identical* to its jnp oracle on a sequence prefix: the
+      code-domain accumulator makes the in-register nibble unpack exact,
+      so any mismatch is a real kernel/packing bug, not rounding;
+    * **quantization drift** — ``fused_q4`` must track the fp32 dense
+      reference within 2x the int8 budget (a 0.5 rail vs fused_q8's
+      0.25): int4's coarser Q0.3 weight grid costs accuracy, but layout /
+      nibble-order corruption lands far outside the rail;
+    * the ``fused_q8`` path re-asserts its own 0.25 rail, so the record
+      always carries a valid q8 reference for the 0.5x bytes gate.
+
+    Each theta records UNROUNDED ``q4_bytes_matched_fp32`` /
+    ``q8_bytes_matched_fp32`` / ``fused_bytes_matched_fp32`` — the bytes
+    model evaluated at the *fp32 firing counts* — so the regression gate
+    can assert the exact ladder (q4 = 0.5x q8 = 0.125x fp32 fused bytes
+    at matched firing) on any machine without float-threshold noise.
+    """
+    from repro.core.program import compile_delta_program
+    from repro.quant.export import quantize_delta_stack
+    if cell == "gru":
+        from repro.core.deltagru import deltagru_sequence as sequence
+        from repro.core.deltagru import init_gru_stack as init_stack
+        from repro.core.sparsity import GruDims
+        ops_per_step = GruDims(i, h, layers).params_per_timestep_ops
+    else:
+        from repro.core.deltalstm import deltalstm_sequence as sequence
+        from repro.core.deltalstm import init_lstm_stack as init_stack
+        from repro.core.sparsity import lstm_dims
+        ops_per_step = lstm_dims(i, h, layers).params_per_timestep_ops
+
+    key = jax.random.PRNGKey(0)
+    params = init_stack(key, i, h, layers)
+    qp8, lay8 = quantize_delta_stack(params, cell=cell)
+    qp4, lay4 = quantize_delta_stack(params, cell=cell, bits=4)
+    xs = _walk_inputs(jax.random.fold_in(key, 1), t, 1, i)
+    sweep = ("dense", "fused_q8", "fused_q4")
+    variants = {"dense": (params, None), "fused_q8": (qp8, lay8),
+                "fused_q4": (qp4, lay4)}
+    lines, rows = [], []
+
+    def _seq_fn(backend):
+        p, lay = variants[backend]
+        prog = compile_delta_program(p, backend=backend, cell=cell,
+                                     layouts=lay)
+        return jax.jit(lambda xs: prog.sequence(
+            xs, theta, theta, collect_sparsity=False)[0])
+
+    for theta in thetas:
+        counts_fp = _mean_fired_blocks(params, xs, theta, backend="dense",
+                                       cell=cell)
+        counts_q8 = _mean_fired_blocks(qp8, xs, theta, backend="fused_q8",
+                                       layouts=lay8, cell=cell)
+        counts_q4 = _mean_fired_blocks(qp4, xs, theta, backend="fused_q4",
+                                       layouts=lay4, cell=cell)
+        counts = {"dense": counts_fp, "fused_q8": counts_q8,
+                  "fused_q4": counts_q4}
+        ys_d, _, st = sequence(params, xs, theta, theta)
+        ys_q8, _, st8 = sequence(qp8, xs, theta, theta, backend="fused_q8",
+                                 layouts=lay8)
+        ys_q4, _, st4 = sequence(qp4, xs, theta, theta, backend="fused_q4",
+                                 layouts=lay4)
+        stats = {"dense": st, "fused_q8": st8, "fused_q4": st4}
+        # kernel parity on a prefix (interpret mode is the slow
+        # correctness path; a prefix certifies the kernel all the same)
+        tp = min(t, 12)
+        ys_q4k, _, _ = sequence(qp4, xs[:tp], theta, theta,
+                                backend="fused_q4", layouts=lay4,
+                                interpret=True)
+        kparity = float(jnp.max(jnp.abs(ys_q4[:tp] - ys_q4k)))
+        if kparity != 0.0:
+            raise AssertionError(
+                f"fused_q4 {cell} Pallas kernel drifted from its jnp "
+                f"oracle at theta={theta}: max|kernel - ref| = {kparity} "
+                "(the code-domain accumulator makes the nibble unpack "
+                "exact by construction — a nonzero gap is a kernel or "
+                "packing bug)")
+        drift8 = float(jnp.max(jnp.abs(ys_q8 - ys_d)))
+        drift4 = float(jnp.max(jnp.abs(ys_q4 - ys_d)))
+        if not (drift8 < 0.25):
+            raise AssertionError(
+                f"fused_q8 {cell} drifted from the fp32 dense reference "
+                f"at theta={theta}: max|q8 - dense| = {drift8} (beyond "
+                "the Q8.8/LUT quantization budget)")
+        if not (drift4 < 0.5):
+            raise AssertionError(
+                f"fused_q4 {cell} drifted from the fp32 dense reference "
+                f"at theta={theta}: max|q4 - dense| = {drift4} (beyond "
+                "2x the int8 budget — the int4 grid is coarser, but "
+                "drift past the 0.5 rail means layout/nibble corruption, "
+                "not quantization)")
+
+        seqs = [_seq_fn(be) for be in sweep]
+        walls = _time_calls([(lambda s=s: s(xs)) for s in seqs], reps=30)
+        times = dict(zip(sweep, walls))
+
+        matched = {be: _bytes_per_step(params, counts_fp, be, cell=cell)
+                   for be in ("fused", "fused_q8", "fused_q4")}
+        drift = {"dense": 0.0, "fused_q8": drift8, "fused_q4": drift4}
+        for be in sweep:
+            wall = times[be]
+            us = wall / t * 1e6
+            nbytes = _bytes_per_step(params, counts[be], be, cell=cell)
+            eff_gops = ops_per_step / (wall / t) / 1e9
+            row = {
+                "theta": theta, "backend": be,
+                "gamma_dx": round(float(stats[be]["gamma_dx"]), 4),
+                "gamma_dh": round(float(stats[be]["gamma_dh"]), 4),
+                "us_per_step": round(us, 2),
+                "bytes_per_step": round(nbytes, 1),
+                "eff_gops": round(eff_gops, 4),
+                "dense_drift": round(drift[be], 5),
+            }
+            if be == "fused_q4":
+                # UNROUNDED: the regression gate asserts the exact
+                # 0.5x-of-q8 / 0.125x-of-fused ladder on these (scaling
+                # a float sum by a power of two is exact; independently
+                # rounded copies need not satisfy the ratios)
+                row["q4_bytes_matched_fp32"] = matched["fused_q4"]
+                row["q8_bytes_matched_fp32"] = matched["fused_q8"]
+                row["fused_bytes_matched_fp32"] = matched["fused"]
+            rows.append(row)
+            lines.append(
+                f"kernel.{cell}_q4_{be}_th{theta},{us:.1f},"
+                f"bytes/step={nbytes:.0f} eff_gops={eff_gops:.3f} "
+                f"drift={drift[be]:.4f}")
+
+    record = {
+        "bench": f"delta{cell}_q4_backends",
+        "unit": "us_per_step",
+        "config": {"t": t, "input": i, "hidden": h, "layers": layers,
+                   "batch": 1, "block": 128, "cell": cell,
+                   "ops_per_step": ops_per_step,
+                   "weight_bytes": _backend_weight_bytes(cell),
+                   **record_meta()},
+        "created_unix": int(time.time()),
+        "rows": rows,
+    }
+    return lines, record
+
+
+def run_q4(t=64, i=128, h=256, layers=2,
+           thetas=(0.0, 0.05, 0.2), write=True) -> list[str]:
+    """int4 bytes/GOp/s records for BOTH cell families; writes
+    ``BENCH_deltagru_q4.json`` + ``BENCH_deltalstm_q4.json`` (gated by
+    ``check_regression``)."""
+    lines = []
+    for cell, path in (("gru", BENCH_Q4_JSON), ("lstm", BENCH_LSTM_Q4_JSON)):
+        ls, record = bench_q4_record(t=t, i=i, h=h, layers=layers,
+                                     thetas=thetas, cell=cell)
+        lines += ls
+        if write:
+            with open(path, "w") as f:
+                json.dump(record, f, indent=1)
+            lines.append(f"kernel.{cell}_q4_bench_json,0,wrote "
+                         f"{os.path.basename(path)}")
+    return lines
+
+
+def run_q4_quick(t=16, i=64, h=128, layers=2,
+                 thetas=(0.0, 0.2)) -> list[str]:
+    """Reduced int4 parity/bytes pass for CI (hard fused_q4 kernel-parity
+    + drift assertions on both cells, no baseline writes) — the
+    ``make bench-q4-quick`` entry."""
+    return run_q4(t=t, i=i, h=h, layers=layers, thetas=thetas, write=False)
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(
@@ -708,10 +905,15 @@ def main(argv=None) -> None:
     ap.add_argument("--lstm-q8", action="store_true",
                     help="run only the quantized-DeltaLSTM parity/bytes "
                          "suite")
+    ap.add_argument("--q4", action="store_true",
+                    help="run only the int4 nibble-packed parity/bytes "
+                         "suite (both cells)")
     ap.add_argument("--quick", action="store_true",
                     help="reduced CI pass (small dims, no baseline writes)")
     args = ap.parse_args(argv)
-    if args.lstm_q8:
+    if args.q4:
+        print("\n".join(run_q4_quick() if args.quick else run_q4()))
+    elif args.lstm_q8:
         print("\n".join(run_lstm_q8_quick() if args.quick
                         else run_lstm_q8()))
     elif args.lstm:

@@ -32,6 +32,11 @@ def _suites(quick: bool):
         ("table6_7", table6_7_comparison.run),
         ("fig13", fig13_batch_sweep.run),
         ("kernel", kernel_bench.run),
+        # rewrites BENCH_deltagru_q4.json + BENCH_deltalstm_q4.json (int4
+        # nibble-packed ladder, both cells); its quick pass is its own
+        # `make ci` stage (`python -m benchmarks.kernel_bench --q4
+        # --quick`), so it is NOT repeated in --quick here
+        ("kernel_q4", kernel_bench.run_q4),
         ("fig14_15", fig14_15_latency_traces.run),
         ("fig9", fig9_threshold_sweep.run),
         ("fig10_11", fig10_11_dual_threshold.run),
@@ -82,10 +87,13 @@ def main(argv=None) -> None:
     # machine-readable perf-trajectory records written by the suites
     from benchmarks.fig13_batch_sweep import BENCH_BATCH_JSON
     from benchmarks.kernel_bench import (BENCH_JSON, BENCH_LSTM_JSON,
-                                         BENCH_LSTM_Q8_JSON, BENCH_Q8_JSON)
+                                         BENCH_LSTM_Q4_JSON,
+                                         BENCH_LSTM_Q8_JSON, BENCH_Q4_JSON,
+                                         BENCH_Q8_JSON)
     from benchmarks.lm_delta_bench import BENCH_LM_DELTA_JSON
-    for p in (BENCH_JSON, BENCH_Q8_JSON, BENCH_LSTM_JSON,
-              BENCH_LSTM_Q8_JSON, BENCH_BATCH_JSON, BENCH_LM_DELTA_JSON):
+    for p in (BENCH_JSON, BENCH_Q8_JSON, BENCH_Q4_JSON, BENCH_LSTM_JSON,
+              BENCH_LSTM_Q8_JSON, BENCH_LSTM_Q4_JSON, BENCH_BATCH_JSON,
+              BENCH_LM_DELTA_JSON):
         if os.path.exists(p):
             print(f"bench_json,0,{p}", file=sys.stderr)
     if failures:

@@ -338,6 +338,31 @@ def _step_fused_q8(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
                                 layout=layout, interpret=interpret)
 
 
+def _step_fused_q4(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
+                   matvec, layout, packed, interpret):
+    """The int4 twin of :func:`_step_fused_q8`: same Q8.8/LUT pipeline and
+    code-domain delta memories, but the streamed volume is the
+    nibble-packed int4 pack (half the q8 bytes per fired column) and the
+    kernels unpack in-register — the dispatch is ``layout.weight_bits``,
+    so the layer step below is shared with q8 verbatim."""
+    if matvec is not None:
+        raise ValueError("fused_q4 carries code-domain delta memories; "
+                         "a matvec= override cannot preserve its state "
+                         "semantics (use backend='dense' instead)")
+    if not _default_acts(sigmoid, tanh):
+        raise ValueError("fused_q4 hard-codes the Q8.8/Q1.n LUT "
+                         "activation pipeline; pass backend='dense' "
+                         "with QAT act fns for training-time emulation")
+    if layout is None:
+        from repro.kernels.delta_q8 import pack_delta_weights_q4
+        layout = pack_delta_weights_q4(params.w_x, params.w_h, b=params.b)
+    x = layout.quantize_act(x)
+    dx_out = delta_encode(x, state.x_mem, theta_x)
+    dh_out = delta_encode(state.h, state.h_mem, theta_h)
+    return _fused_q8_layer_step(params, state, dx_out, dh_out,
+                                layout=layout, interpret=interpret)
+
+
 def _step_fused_batch(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
                       matvec, layout, packed, interpret):
     """Batched multi-stream tile contract over the fused fp32 kernel.
@@ -369,6 +394,15 @@ def _step_fused_q8_batch(params, state, x, theta_x, theta_h, *, sigmoid,
                           layout=layout, packed=packed, interpret=interpret)
 
 
+def _step_fused_q4_batch(params, state, x, theta_x, theta_h, *, sigmoid,
+                         tanh, matvec, layout, packed, interpret):
+    """Batched tile contract over the int4 kernel (code-exact, like q8)."""
+    require_stream_tile(x, "fused_q4_batch")
+    return _step_fused_q4(params, state, x, theta_x, theta_h,
+                          sigmoid=sigmoid, tanh=tanh, matvec=matvec,
+                          layout=layout, packed=packed, interpret=interpret)
+
+
 # -- per-backend stack packers (registered BackendSpec.pack fns) ------------
 
 def _pack_none(params, block):
@@ -387,6 +421,13 @@ def _pack_fused_q8(params, block):
     # view, so oracles / state init see the same grids the kernel streams.
     from repro.quant.export import quantize_stack
     qparams, layouts = quantize_stack(params, block=block)
+    return qparams, layouts, None
+
+
+def _pack_fused_q4(params, block):
+    # int4 quantize-and-pack: nibble-packed volume + absmax/7 scales.
+    from repro.quant.export import quantize_stack
+    qparams, layouts = quantize_stack(params, block=block, bits=4)
     return qparams, layouts, None
 
 
@@ -409,6 +450,13 @@ register_backend(BackendSpec(
 register_backend(BackendSpec(
     name="fused_q8_batch", cell="gru", pack=_pack_fused_q8,
     step=_step_fused_q8_batch, m_init="zero", weight_bits=8,
+    supports_custom_acts=False, weight_fetch="tile"))
+register_backend(BackendSpec(
+    name="fused_q4", cell="gru", pack=_pack_fused_q4, step=_step_fused_q4,
+    m_init="zero", weight_bits=4, supports_custom_acts=False))
+register_backend(BackendSpec(
+    name="fused_q4_batch", cell="gru", pack=_pack_fused_q4,
+    step=_step_fused_q4_batch, m_init="zero", weight_bits=4,
     supports_custom_acts=False, weight_fetch="tile"))
 
 # Legacy alias, now DERIVED from the registry instead of hand-maintained:

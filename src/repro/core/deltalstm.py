@@ -262,6 +262,29 @@ def _step_fused_q8(params: LstmLayerParams, state: DeltaLstmLayerState,
                             delta_h=dh_out.delta)
 
 
+def _step_fused_q4(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
+                   matvec, layout=None, packed=None, interpret=None):
+    """The int4 twin of :func:`_step_fused_q8`: nibble-packed weight
+    volume (half the q8 bytes per fired column), identical Q8.8/LUT
+    pipeline and code-domain state — the kernels dispatch on
+    ``layout.weight_bits``, so past the packer this IS the q8 step."""
+    from repro.kernels import delta_q8 as _q8
+    if matvec is not None:
+        raise ValueError("fused_q4 carries code-domain delta memories; "
+                         "a matvec= override cannot preserve its state "
+                         "semantics (use backend='dense' instead)")
+    if not _default_acts(sigmoid, tanh):
+        raise ValueError("fused_q4 hard-codes the Q8.8/Q1.n LUT "
+                         "activation pipeline; pass backend='dense' "
+                         "with QAT act fns for training-time emulation")
+    if layout is None:
+        layout = _q8.pack_delta_weights_q4(params.w_x, params.w_h,
+                                           b=params.b, gates=4)
+    return _step_fused_q8(params, state, x, theta_x, theta_h,
+                          sigmoid=sigmoid, tanh=tanh, matvec=matvec,
+                          layout=layout, packed=packed, interpret=interpret)
+
+
 def _step_fused_batch(params, state, x, theta_x, theta_h, *, sigmoid, tanh,
                       matvec, layout=None, packed=None, interpret=None):
     """Batched multi-stream tile contract over the fused fp32 LSTM kernel.
@@ -290,6 +313,16 @@ def _step_fused_q8_batch(params, state, x, theta_x, theta_h, *, sigmoid,
                           layout=layout, packed=packed, interpret=interpret)
 
 
+def _step_fused_q4_batch(params, state, x, theta_x, theta_h, *, sigmoid,
+                         tanh, matvec, layout=None, packed=None,
+                         interpret=None):
+    """Batched tile contract over the int4 LSTM kernel (code-exact)."""
+    require_stream_tile(x, "fused_q4_batch")
+    return _step_fused_q4(params, state, x, theta_x, theta_h,
+                          sigmoid=sigmoid, tanh=tanh, matvec=matvec,
+                          layout=layout, packed=packed, interpret=interpret)
+
+
 # -- per-backend stack packers (registered BackendSpec.pack fns) ------------
 
 def _pack_none(params, block):
@@ -311,6 +344,14 @@ def _pack_fused_q8(params, block):
     return qparams, layouts, None
 
 
+def _pack_fused_q4(params, block):
+    # int4 quantize-and-pack: nibble-packed volume + absmax/7 scales.
+    from repro.quant.export import quantize_delta_stack
+    qparams, layouts = quantize_delta_stack(params, cell="lstm", block=block,
+                                            bits=4)
+    return qparams, layouts, None
+
+
 register_backend(BackendSpec(
     name="dense", cell="lstm", pack=_pack_none, step=_step_dense,
     m_init="bias", weight_bits=32, supports_custom_acts=True))
@@ -329,6 +370,13 @@ register_backend(BackendSpec(
 register_backend(BackendSpec(
     name="fused_q8_batch", cell="lstm", pack=_pack_fused_q8,
     step=_step_fused_q8_batch, m_init="zero", weight_bits=8,
+    supports_custom_acts=False, weight_fetch="tile"))
+register_backend(BackendSpec(
+    name="fused_q4", cell="lstm", pack=_pack_fused_q4, step=_step_fused_q4,
+    m_init="zero", weight_bits=4, supports_custom_acts=False))
+register_backend(BackendSpec(
+    name="fused_q4_batch", cell="lstm", pack=_pack_fused_q4,
+    step=_step_fused_q4_batch, m_init="zero", weight_bits=4,
     supports_custom_acts=False, weight_fetch="tile"))
 
 

@@ -20,12 +20,22 @@ final gate equations differ per cell. This module is that shared core:
   Q8.8/LUT grid constants baked at pack time;
 * :func:`pack_delta_weights_q8` — the gate-count-parametric quantizing
   packer (``gates=3`` reproduces the historical GRU pack bit for bit;
-  ``gates=4`` is the LSTM volume);
-* the int8 Pallas kernels + bit-identical jnp oracles for both builtin
-  cells: :func:`deltagru_q8_step` / :func:`deltagru_q8_step_ref` (G=3,
-  seam-routed split-candidate memories, Fig. 7 GRU activation) and
+  ``gates=4`` is the LSTM volume) — and its int4 sibling
+  :func:`pack_delta_weights_q4`, which nibble-packs two codes per byte
+  (:func:`pack_nibbles`) so the streamed volume is half the q8 bytes;
+* the int8/int4 Pallas kernels + bit-identical jnp oracles for both
+  builtin cells: :func:`deltagru_q8_step` / :func:`deltagru_q8_step_ref`
+  (G=3, seam-routed split-candidate memories, Fig. 7 GRU activation) and
   :func:`deltalstm_q8_step` / :func:`deltalstm_q8_step_ref` (G=4, all
   four memories take both streams, i/f/g/o + saturating Q8.8 cell state).
+  Both steps dispatch on ``layout.weight_bits`` (8 = int8 codes streamed
+  1 byte/element, 4 = nibble-packed codes streamed 0.5 byte/element with
+  in-register unpack) and both accept ``buffered=True`` to run the
+  double-buffered weight-streaming variant: the weight volume stays in
+  HBM (``memory_space=ANY``) and the kernel overlaps the DMA for fired
+  block ``k+1`` with the accumulation of block ``k`` through a two-slot
+  VMEM scratch + DMA-semaphore pair, bit-identical to the unbuffered
+  walk (code-domain sums are exact, and the block order is the same).
 
 Fixed-point semantics (identical for both cells, matching the hardware):
 
@@ -143,6 +153,54 @@ def _prep_step_operands(lay: _GruBlockGeometry, m_prev: Array, h_prev: Array,
     return d_cat, m4, hprev, n_active, active_ids
 
 
+def pack_nibbles(codes: Array, block_k: int) -> Array:
+    """Pack int4 codes (two per byte) along the last (k) dimension.
+
+    The packing is *per k-block*: within each ``block_k``-wide block, byte
+    ``j`` holds column ``j`` in its low nibble and column
+    ``j + block_k//2`` in its high nibble. A kernel block of the packed
+    volume is therefore exactly one k-block (``block_k//2`` bytes), and
+    the in-register unpack is a mask/shift plus ONE lane-contiguous
+    concatenation — no per-element interleave, which TPU lanes cannot do
+    cheaply. ``codes`` must be int8 values in ``[-8, 7]`` with a last dim
+    divisible by ``block_k``; returns int8 of half the last extent.
+    """
+    *lead, k = codes.shape
+    if k % block_k:
+        raise ValueError(f"pack_nibbles: last dim {k} not a multiple of "
+                         f"block_k={block_k}")
+    half = block_k // 2
+    c = codes.reshape(*lead, k // block_k, 2, half)
+    lo = c[..., 0, :].astype(jnp.int32) & 15
+    hi = c[..., 1, :].astype(jnp.int32) & 15
+    return (lo | (hi << 4)).astype(jnp.int8).reshape(*lead, k // 2)
+
+
+def unpack_nibbles(packed: Array, block_k: int) -> Array:
+    """Inverse of :func:`pack_nibbles` (sign-extended via the xor-sub
+    trick: ``((n & 15) ^ 8) - 8`` maps the 4-bit two's-complement pattern
+    back to ``[-8, 7]``)."""
+    *lead, kh = packed.shape
+    half = block_k // 2
+    p = packed.reshape(*lead, kh // half, half).astype(jnp.int32)
+    lo = ((p & 15) ^ 8) - 8
+    hi = (((p >> 4) & 15) ^ 8) - 8
+    return jnp.concatenate([lo, hi], axis=-1).reshape(
+        *lead, 2 * kh).astype(jnp.int8)
+
+
+def _kernel_unpack_nibbles(w):
+    """In-register unpack of ONE packed k-block inside a kernel body:
+    ``[..., block_k//2]`` int8 bytes -> ``[..., block_k]`` fp32 codes.
+    Valid because every kernel block of the packed volume is exactly one
+    k-block (see :func:`pack_nibbles`): low nibbles are the block's first
+    half-columns, high nibbles the second, so the unpack is one concat."""
+    p = w.astype(jnp.int32)
+    lo = ((p & 15) ^ 8) - 8
+    hi = (((p >> 4) & 15) ^ 8) - 8
+    return jnp.concatenate([lo, hi], axis=-1).astype(jnp.float32)
+
+
 def _grid_round(v, scale: float, vmin: float, vmax: float):
     """Round onto a Qm.n grid, then clip — the exact op sequence of
     :func:`repro.quant.fake_quant.quantize`, shared by the Pallas kernel
@@ -178,9 +236,16 @@ class QuantDeltaLayout(_GruBlockGeometry):
     constants (``act_*``, ``lut_*``) are plain Python floats fixed at pack
     time: the jitted steps close over them, adding zero per-timestep host
     work.
+
+    ``weight_bits`` (static, 8 or 4) declares the streamed code width:
+    at 8, ``w_q`` is ``[gates, Hp, Ip+Hk]`` int8 codes in ``[-127, 127]``;
+    at 4 it is the nibble-packed ``[gates, Hp, (Ip+Hk)//2]`` volume
+    (two codes in ``[-7, 7]`` per byte, :func:`pack_nibbles`) — the only
+    weight-sized HBM operand then streams half the q8 bytes per fired
+    column, and the kernels unpack in-register.
     """
 
-    w_q: Array                  # int8 [gates, Hp, Ip+Hk]
+    w_q: Array                  # int8 [gates, Hp, Ip+Hk] (q4: [.., //2])
     scales: Array               # f32  [gates, Hp]
     b4: Array                   # f32  [4, Hp] (activation-grid bias)
     input_size: int
@@ -195,6 +260,7 @@ class QuantDeltaLayout(_GruBlockGeometry):
     lut_max: float
     w_codes_f32: Array | None = None
     gates: int = 3
+    weight_bits: int = 8
 
     def quantize_act(self, x: Array) -> Array:
         """Round onto the activation (Q8.8) grid — the Delta Unit's input."""
@@ -212,7 +278,7 @@ class QuantDeltaLayout(_GruBlockGeometry):
         else:
             raise ValueError(f"no fused fp32 layout registered for "
                              f"gates={self.gates}")
-        w = self.w_q.astype(jnp.float32) * self.scales[:, :, None]
+        w = _layout_codes_f32(self) * self.scales[:, :, None]
         return Lay(w=w, input_size=self.input_size,
                    hidden_size=self.hidden_size,
                    block_h=self.block_h, block_k=self.block_k)
@@ -223,12 +289,13 @@ jax.tree_util.register_pytree_node(
     lambda l: ((l.w_q, l.scales, l.b4, l.w_codes_f32),
                (l.input_size, l.hidden_size, l.block_h, l.block_k,
                 l.act_scale, l.act_min, l.act_max,
-                l.lut_scale, l.lut_min, l.lut_max, l.gates)),
+                l.lut_scale, l.lut_min, l.lut_max, l.gates, l.weight_bits)),
     lambda aux, ch: QuantDeltaLayout(
         w_q=ch[0], scales=ch[1], b4=ch[2], w_codes_f32=ch[3],
         input_size=aux[0], hidden_size=aux[1], block_h=aux[2],
         block_k=aux[3], act_scale=aux[4], act_min=aux[5], act_max=aux[6],
-        lut_scale=aux[7], lut_min=aux[8], lut_max=aux[9], gates=aux[10]))
+        lut_scale=aux[7], lut_min=aux[8], lut_max=aux[9], gates=aux[10],
+        weight_bits=aux[11]))
 
 
 def pack_delta_weights_q8(w_x: Array, w_h: Array, b: Array | None = None,
@@ -236,16 +303,20 @@ def pack_delta_weights_q8(w_x: Array, w_h: Array, b: Array | None = None,
                           block_h: int = 128, block_k: int = 128,
                           act_frac_bits: int = 8, act_int_bits: int = 8,
                           lut_frac_bits: int = 4,
-                          with_ref_codes: bool | None = None
-                          ) -> QuantDeltaLayout:
-    """Quantize + pack one layer into the int8 Fig. 6 runtime layout.
+                          with_ref_codes: bool | None = None,
+                          weight_bits: int = 8) -> QuantDeltaLayout:
+    """Quantize + pack one layer into the int8/int4 Fig. 6 runtime layout.
 
     Gate-count-parametric: ``w_x: [gH, I]``, ``w_h: [gH, H]`` with
     ``g = gates``. Per-gate-row symmetric quantization:
-    ``scale[g, o] = absmax(w[g, o, :]) / 127`` over the concatenated
-    (x then h) row, codes clipped to ``[-127, 127]`` so the grid is
-    symmetric. Rows that are entirely zero (including Hp padding rows) get
-    scale ``1/127`` and all-zero codes.
+    ``scale[g, o] = absmax(w[g, o, :]) / qmax`` over the concatenated
+    (x then h) row, codes clipped to ``[-qmax, qmax]`` so the grid is
+    symmetric (``qmax = 127`` at 8 bits, ``7`` at 4 bits — the int4 grid
+    drops the ``-8`` pattern to stay symmetric, exactly like int8 drops
+    ``-128``). Rows that are entirely zero (including Hp padding rows)
+    get scale ``1/qmax`` and all-zero codes. At ``weight_bits=4`` the
+    stored ``w_q`` is the nibble-packed half-width volume
+    (:func:`pack_nibbles`).
 
     The bias rows are quantized onto the activation grid and expanded to
     the four delta memories: gate rows first, zero rows after — for the
@@ -254,8 +325,13 @@ def pack_delta_weights_q8(w_x: Array, w_h: Array, b: Array | None = None,
 
     ``with_ref_codes=None`` auto-builds the fp32 code copy off-TPU only
     (the jnp emulation path needs it hoisted out of the scan; a TPU run
-    streams the int8 volume directly and never materializes it).
+    streams the packed volume directly and never materializes it).
     """
+    if weight_bits not in (4, 8):
+        raise ValueError(
+            f"weight_bits must be 4 or 8, got {weight_bits!r} — the packed "
+            f"delta pipeline defines only the int8 and nibble-packed int4 "
+            f"code grids")
     gh, i_dim = w_x.shape
     h_dim = w_h.shape[-1]
     if gh != gates * h_dim or w_h.shape[0] != gates * h_dim:
@@ -266,10 +342,14 @@ def pack_delta_weights_q8(w_x: Array, w_h: Array, b: Array | None = None,
     hp = h_dim + (-h_dim) % block_h
     w3 = pack_cat_volume(w_x.astype(jnp.float32), w_h.astype(jnp.float32),
                          gates, block_h, block_k)      # [g, Hp, Ip+Hk]
+    qmax = 127.0 if weight_bits == 8 else 7.0
     absmax = jnp.max(jnp.abs(w3), axis=2)              # [g, Hp]
-    scales = jnp.where(absmax > 0, absmax, 1.0) / 127.0
-    codes = jnp.clip(jnp.round(w3 / scales[:, :, None]), -127.0, 127.0)
-    w_q = codes.astype(jnp.int8)
+    scales = jnp.where(absmax > 0, absmax, 1.0) / qmax
+    codes = jnp.clip(jnp.round(w3 / scales[:, :, None]), -qmax, qmax)
+    if weight_bits == 8:
+        w_q = codes.astype(jnp.int8)
+    else:
+        w_q = pack_nibbles(codes.astype(jnp.int8), block_k)
 
     act_scale = float(2 ** act_frac_bits)
     act_min = -float(2 ** act_int_bits)
@@ -290,14 +370,31 @@ def pack_delta_weights_q8(w_x: Array, w_h: Array, b: Array | None = None,
         block_h=block_h, block_k=block_k,
         act_scale=act_scale, act_min=act_min, act_max=act_max,
         lut_scale=lut_scale, lut_min=lut_min, lut_max=lut_max,
-        w_codes_f32=codes if with_ref_codes else None, gates=gates)
+        w_codes_f32=codes if with_ref_codes else None, gates=gates,
+        weight_bits=weight_bits)
+
+
+def pack_delta_weights_q4(w_x: Array, w_h: Array, b: Array | None = None,
+                          **kw) -> QuantDeltaLayout:
+    """The int4 spelling of :func:`pack_delta_weights_q8`: codes in
+    ``[-7, 7]``, scale ``absmax/7``, nibble-packed ``w_q`` streaming half
+    the q8 bytes per fired column."""
+    return pack_delta_weights_q8(w_x, w_h, b, weight_bits=4, **kw)
+
+
+def _layout_codes_f32(layout: QuantDeltaLayout) -> Array:
+    """The full (unpacked) fp32 code volume of a layout, any width."""
+    if layout.w_codes_f32 is not None:
+        return layout.w_codes_f32
+    if layout.weight_bits == 4:
+        return unpack_nibbles(layout.w_q, layout.block_k).astype(jnp.float32)
+    return layout.w_q.astype(jnp.float32)
 
 
 def _ref_code_slices(layout: QuantDeltaLayout):
     """fp32 code views of the x / h column ranges for the jnp oracles."""
     h_dim = layout.hidden_size
-    codes = (layout.w_codes_f32 if layout.w_codes_f32 is not None
-             else layout.w_q.astype(jnp.float32))
+    codes = _layout_codes_f32(layout)
     cx = codes[:, :h_dim, :layout.input_size]             # [g, H, I]
     ch = codes[:, :h_dim, layout.ip:layout.ip + h_dim]    # [g, H, H]
     return cx, ch
@@ -309,15 +406,17 @@ def _ref_code_slices(layout: QuantDeltaLayout):
 
 def _q8_gru_kernel(n_active_ref, active_ids_ref, d_ref, w_ref, s_ref, b_ref,
                    m_ref, h_ref, m_out_ref, h_out_ref, acc_ref, *, nbk: int,
-                   nbk_x: int, act_scale: float, act_min: float,
-                   act_max: float, lut_scale: float, lut_min: float,
-                   lut_max: float):
-    """One (o-block, k-step) cell of the int8 fused GRU layer step.
+                   nbk_x: int, weight_bits: int, act_scale: float,
+                   act_min: float, act_max: float, lut_scale: float,
+                   lut_min: float, lut_max: float):
+    """One (o-block, k-step) cell of the int8/int4 fused GRU layer step.
 
-    ``w_ref`` holds int8 codes (the only weight-sized HBM operand); they
+    ``w_ref`` holds packed codes (the only weight-sized HBM operand); they
     are widened to fp32 in-register and the raw ``delta x code`` products
     accumulate *unscaled* (the PE's integer accumulator — every addition
-    is exact for on-grid deltas). The candidate gate's partials route to
+    is exact for on-grid deltas). At ``weight_bits=4`` each weight block
+    is one nibble-packed k-block (``block_k//2`` bytes) unpacked
+    in-register before the dot. The candidate gate's partials route to
     ``M_xc`` / ``M_hc`` on the x/h seam. The final k-step dequantizes
     (``b + scale * acc``) and runs the Fig. 7 pipeline on the Q8.8-input /
     Q1.n-output LUT grids, rounding the new ``h`` back onto Q8.8.
@@ -331,7 +430,10 @@ def _q8_gru_kernel(n_active_ref, active_ids_ref, d_ref, w_ref, s_ref, b_ref,
     @pl.when(i < n_active_ref[0])
     def _accumulate():
         d = d_ref[...]                               # [B, BK] on the Q8.8 grid
-        w = w_ref[...].astype(jnp.float32)           # int8 codes -> f32
+        if weight_bits == 4:
+            w = _kernel_unpack_nibbles(w_ref[...])   # nibbles -> f32 codes
+        else:
+            w = w_ref[...].astype(jnp.float32)       # int8 codes -> f32
         p = jax.lax.dot_general(d, w, (((1,), (2,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         is_x = active_ids_ref[i] < nbk_x
@@ -364,14 +466,15 @@ def _q8_gru_kernel(n_active_ref, active_ids_ref, d_ref, w_ref, s_ref, b_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "input_size", "hidden_size", "block_h", "block_k", "act_scale",
-    "act_min", "act_max", "lut_scale", "lut_min", "lut_max", "interpret"))
+    "act_min", "act_max", "lut_scale", "lut_min", "lut_max", "weight_bits",
+    "interpret"))
 def _fused_q8_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
                    h_prev: Array, dx: Array, dh: Array, *, input_size: int,
                    hidden_size: int, block_h: int, block_k: int,
                    act_scale: float, act_min: float, act_max: float,
                    lut_scale: float, lut_min: float, lut_max: float,
-                   interpret: bool):
-    """One int8 fused GRU layer step on already-encoded (on-grid) deltas.
+                   weight_bits: int, interpret: bool):
+    """One int8/int4 fused GRU layer step on already-encoded deltas.
 
     ``m_prev: [B, 4H]`` (code-domain accumulator), ``h_prev: [B, H]``,
     ``dx: [B, I]``, ``dh: [B, H]`` -> ``(m_new: [B, 4H], h_new: [B, H])``.
@@ -382,6 +485,11 @@ def _fused_q8_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
     b = dx.shape[0]
     h_dim, hp = hidden_size, lay.hp
     nbk = lay.nbk
+    # packed q4 k-blocks are half-width in bytes; the block index map is
+    # identical (BlockSpec indices count blocks, not elements). NB the q4
+    # lane extent is block_k//2 = 64 < the 128-lane tile — fine for the
+    # interpreter and jnp path; a TPU build pads the lane dim internally.
+    wbk = block_k // 2 if weight_bits == 4 else block_k
     d_cat, m4, hprev, n_active, active_ids = _prep_step_operands(
         lay, m_prev, h_prev, dx, dh)
 
@@ -391,8 +499,8 @@ def _fused_q8_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
         in_specs=[
             pl.BlockSpec((b, block_k),
                          lambda o, i, n, ids: (0, ids[i])),        # d_cat
-            pl.BlockSpec((3, block_h, block_k),
-                         lambda o, i, n, ids: (0, o, ids[i])),     # w_q (int8)
+            pl.BlockSpec((3, block_h, wbk),
+                         lambda o, i, n, ids: (0, o, ids[i])),     # w_q packed
             pl.BlockSpec((3, block_h),
                          lambda o, i, n, ids: (0, o)),             # scales
             pl.BlockSpec((4, block_h),
@@ -410,6 +518,7 @@ def _fused_q8_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
     )
     m_new, h_new = pl.pallas_call(
         functools.partial(_q8_gru_kernel, nbk=nbk, nbk_x=lay.nbk_x,
+                          weight_bits=weight_bits,
                           act_scale=act_scale, act_min=act_min,
                           act_max=act_max, lut_scale=lut_scale,
                           lut_min=lut_min, lut_max=lut_max),
@@ -424,17 +533,21 @@ def _fused_q8_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
 
 
 def deltagru_q8_step(layout: QuantDeltaLayout, m_prev: Array, h_prev: Array,
-                     dx: Array, dh: Array, *, interpret: bool = True):
-    """Public int8 GRU single-step entry on encoded deltas (see
-    :func:`_fused_q8_step`)."""
-    return _fused_q8_step(layout.w_q, layout.scales, layout.b4, m_prev,
-                          h_prev, dx, dh, input_size=layout.input_size,
-                          hidden_size=layout.hidden_size,
-                          block_h=layout.block_h, block_k=layout.block_k,
-                          act_scale=layout.act_scale, act_min=layout.act_min,
-                          act_max=layout.act_max, lut_scale=layout.lut_scale,
-                          lut_min=layout.lut_min, lut_max=layout.lut_max,
-                          interpret=interpret)
+                     dx: Array, dh: Array, *, interpret: bool = True,
+                     buffered: bool = False):
+    """Public int8/int4 GRU single-step entry on encoded deltas (see
+    :func:`_fused_q8_step`; ``buffered=True`` runs the double-buffered
+    weight-streaming variant :func:`_fused_q8_step_dbuf` — bit-identical
+    output, weights DMA'd from HBM with a two-slot overlap)."""
+    step = _fused_q8_step_dbuf if buffered else _fused_q8_step
+    return step(layout.w_q, layout.scales, layout.b4, m_prev,
+                h_prev, dx, dh, input_size=layout.input_size,
+                hidden_size=layout.hidden_size,
+                block_h=layout.block_h, block_k=layout.block_k,
+                act_scale=layout.act_scale, act_min=layout.act_min,
+                act_max=layout.act_max, lut_scale=layout.lut_scale,
+                lut_min=layout.lut_min, lut_max=layout.lut_max,
+                weight_bits=layout.weight_bits, interpret=interpret)
 
 
 def deltagru_q8_step_ref(layout: QuantDeltaLayout, m_prev: Array,
@@ -481,14 +594,163 @@ def deltagru_q8_step_ref(layout: QuantDeltaLayout, m_prev: Array,
 
 
 # ---------------------------------------------------------------------------
+# Double-buffered weight streaming (GRU)
+# ---------------------------------------------------------------------------
+
+def _q8_gru_kernel_dbuf(n_active_ref, active_ids_ref, d_ref, w_hbm, s_ref,
+                        b_ref, m_ref, h_ref, m_out_ref, h_out_ref, wbuf,
+                        acc_ref, sem, *, nbk_x: int, weight_bits: int,
+                        act_scale: float, act_min: float, act_max: float,
+                        lut_scale: float, lut_min: float, lut_max: float):
+    """One o-block of the double-buffered int8/int4 fused GRU layer step.
+
+    The weight volume stays in HBM (``memory_space=ANY``, pre-tiled to
+    ``[nbo, nbk, 3, block_h, wbk]`` so one fired block is one leading
+    index); the kernel overlaps the DMA for fired block ``j+1`` with the
+    accumulation of block ``j`` through the two-slot VMEM scratch
+    ``wbuf`` and the DMA-semaphore pair ``sem`` — the EdgeDRNN fetch
+    pipeline, where the MxV never waits on DRAM except for the first
+    block. The accumulation order is identical to the unbuffered kernel's
+    k-walk and code-domain sums are exact, so the outputs are
+    *bit-identical* to :func:`_q8_gru_kernel`.
+    """
+    o = pl.program_id(0)
+    n = n_active_ref[0]
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def dma(slot, j):
+        return pltpu.make_async_copy(
+            w_hbm.at[o, active_ids_ref[j]], wbuf.at[slot], sem.at[slot])
+
+    @pl.when(n > 0)
+    def _stream():
+        dma(0, 0).start()
+
+        def body(j, carry):
+            slot = jax.lax.rem(j, 2)
+
+            @pl.when(j + 1 < n)
+            def _prefetch():
+                dma(1 - slot, j + 1).start()
+
+            dma(slot, j).wait()
+            if weight_bits == 4:
+                w = _kernel_unpack_nibbles(wbuf[slot])
+            else:
+                w = wbuf[slot].astype(jnp.float32)
+            d = d_ref[j]                             # fired delta block j
+            p = jax.lax.dot_general(d, w, (((1,), (2,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            is_x = active_ids_ref[j] < nbk_x
+            acc_ref[:, 0, :] += p[:, 0, :]
+            acc_ref[:, 1, :] += p[:, 1, :]
+            pc = p[:, 2, :]
+            acc_ref[:, 2, :] += jnp.where(is_x, pc, 0.0)
+            acc_ref[:, 3, :] += jnp.where(is_x, 0.0, pc)
+            return carry
+
+        jax.lax.fori_loop(0, n, body, 0)
+
+    def q88(v):
+        return _grid_round(v, act_scale, act_min, act_max)
+
+    def lut(v):
+        return _grid_round(v, lut_scale, lut_min, lut_max)
+
+    m_new = m_ref[...].astype(jnp.float32) + acc_ref[...]      # code domain
+    s = s_ref[...].astype(jnp.float32)                         # [3, BH]
+    s4 = jnp.concatenate([s, s[2:3]], axis=0)                  # c scale x2
+    msc = b_ref[...][None] + m_new * s4[None]                  # dequantized
+    h_prev = h_ref[...].astype(jnp.float32)
+    r = lut(jax.nn.sigmoid(q88(msc[:, 0])))
+    u = lut(jax.nn.sigmoid(q88(msc[:, 1])))
+    c = lut(jnp.tanh(q88(msc[:, 2] + r * msc[:, 3])))
+    h_new = q88((1.0 - u) * c + u * h_prev)
+    m_out_ref[...] = m_new.astype(m_out_ref.dtype)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "input_size", "hidden_size", "block_h", "block_k", "act_scale",
+    "act_min", "act_max", "lut_scale", "lut_min", "lut_max", "weight_bits",
+    "interpret"))
+def _fused_q8_step_dbuf(w_q: Array, scales: Array, b4: Array, m_prev: Array,
+                        h_prev: Array, dx: Array, dh: Array, *,
+                        input_size: int, hidden_size: int, block_h: int,
+                        block_k: int, act_scale: float, act_min: float,
+                        act_max: float, lut_scale: float, lut_min: float,
+                        lut_max: float, weight_bits: int, interpret: bool):
+    """Double-buffered variant of :func:`_fused_q8_step` (bit-identical).
+
+    Grid is ``(nbo,)`` only: the k-walk moves into an in-kernel
+    ``fori_loop`` over fired blocks so the weight DMA for block ``j+1``
+    can be issued while block ``j`` accumulates. The fired delta blocks
+    are pre-gathered (activation-sized, the Delta Unit's job) with the
+    block index leading, so the loop indexes VMEM on the leading dim
+    only; the weight volume is re-tiled to ``[nbo, nbk, 3, block_h,
+    wbk]`` so one fired block is one leading DMA index (loop-invariant —
+    XLA hoists it out of `lax.scan` sequence bodies).
+    """
+    lay = QuantDeltaLayout(w_q, scales, b4, input_size, hidden_size, block_h,
+                           block_k, act_scale, act_min, act_max, lut_scale,
+                           lut_min, lut_max, gates=3)
+    b = dx.shape[0]
+    h_dim, hp = hidden_size, lay.hp
+    nbk = lay.nbk
+    wbk = block_k // 2 if weight_bits == 4 else block_k
+    d_cat, m4, hprev, n_active, active_ids = _prep_step_operands(
+        lay, m_prev, h_prev, dx, dh)
+    d_act = jnp.take(d_cat.reshape(b, nbk, block_k), active_ids,
+                     axis=1).transpose(1, 0, 2)                # [nbk, B, BK]
+    w_stream = w_q.reshape(3, lay.nbo, block_h, nbk,
+                           wbk).transpose(1, 3, 0, 2, 4)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(lay.nbo,),
+        in_specs=[
+            pl.BlockSpec((nbk, b, block_k),
+                         lambda o, n, ids: (0, 0, 0)),         # d_act
+            pl.BlockSpec(memory_space=pltpu.ANY),              # w_stream HBM
+            pl.BlockSpec((3, block_h), lambda o, n, ids: (0, o)),   # scales
+            pl.BlockSpec((4, block_h), lambda o, n, ids: (0, o)),   # b4
+            pl.BlockSpec((b, 4, block_h),
+                         lambda o, n, ids: (0, 0, o)),         # m_prev
+            pl.BlockSpec((b, block_h), lambda o, n, ids: (0, o)),   # h_prev
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 4, block_h), lambda o, n, ids: (0, 0, o)),
+            pl.BlockSpec((b, block_h), lambda o, n, ids: (0, o)),
+        ],
+        scratch_shapes=[pltpu.VMEM((2, 3, block_h, wbk), jnp.int8),
+                        pltpu.VMEM((b, 4, block_h), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    m_new, h_new = pl.pallas_call(
+        functools.partial(_q8_gru_kernel_dbuf, nbk_x=lay.nbk_x,
+                          weight_bits=weight_bits,
+                          act_scale=act_scale, act_min=act_min,
+                          act_max=act_max, lut_scale=lut_scale,
+                          lut_min=lut_min, lut_max=lut_max),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 4, hp), m_prev.dtype),
+            jax.ShapeDtypeStruct((b, hp), h_prev.dtype),
+        ],
+        interpret=interpret,
+    )(n_active, active_ids, d_act, w_stream, scales, b4, m4, hprev)
+    return (m_new[:, :, :h_dim].reshape(b, 4 * h_dim), h_new[:, :h_dim])
+
+
+# ---------------------------------------------------------------------------
 # LSTM instantiation (gates=4, no seam routing, saturating Q8.8 cell state)
 # ---------------------------------------------------------------------------
 
 def _q8_lstm_kernel(n_active_ref, active_ids_ref, d_ref, w_ref, s_ref, b_ref,
                     m_ref, c_ref, m_out_ref, h_out_ref, c_out_ref, acc_ref,
-                    *, nbk: int, act_scale: float, act_min: float,
-                    act_max: float, lut_scale: float, lut_min: float,
-                    lut_max: float):
+                    *, nbk: int, weight_bits: int, act_scale: float,
+                    act_min: float, act_max: float, lut_scale: float,
+                    lut_min: float, lut_max: float):
     """One (o-block, k-step) cell of the int8 fused LSTM layer step.
 
     Same integer-accumulator semantics as the GRU kernel, but every fired
@@ -509,7 +771,10 @@ def _q8_lstm_kernel(n_active_ref, active_ids_ref, d_ref, w_ref, s_ref, b_ref,
     @pl.when(i < n_active_ref[0])
     def _accumulate():
         d = d_ref[...]                               # [B, BK] on the Q8.8 grid
-        w = w_ref[...].astype(jnp.float32)           # int8 codes -> f32
+        if weight_bits == 4:
+            w = _kernel_unpack_nibbles(w_ref[...])   # nibbles -> f32 codes
+        else:
+            w = w_ref[...].astype(jnp.float32)       # int8 codes -> f32
         acc_ref[...] += jax.lax.dot_general(d, w, (((1,), (2,)), ((), ())),
                                             preferred_element_type=jnp.float32)
 
@@ -538,14 +803,15 @@ def _q8_lstm_kernel(n_active_ref, active_ids_ref, d_ref, w_ref, s_ref, b_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "input_size", "hidden_size", "block_h", "block_k", "act_scale",
-    "act_min", "act_max", "lut_scale", "lut_min", "lut_max", "interpret"))
+    "act_min", "act_max", "lut_scale", "lut_min", "lut_max", "weight_bits",
+    "interpret"))
 def _fused_q8_lstm_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
                         h_prev: Array, c_prev: Array, dx: Array, dh: Array,
                         *, input_size: int, hidden_size: int, block_h: int,
                         block_k: int, act_scale: float, act_min: float,
                         act_max: float, lut_scale: float, lut_min: float,
-                        lut_max: float, interpret: bool):
-    """One int8 fused LSTM layer step on already-encoded (on-grid) deltas.
+                        lut_max: float, weight_bits: int, interpret: bool):
+    """One int8/int4 fused LSTM layer step on already-encoded deltas.
 
     ``m_prev: [B, 4H]`` (code-domain accumulator), ``c_prev: [B, H]`` (on
     the Q8.8 grid), ``dx: [B, I]``, ``dh: [B, H]`` ->
@@ -557,6 +823,7 @@ def _fused_q8_lstm_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
     b = dx.shape[0]
     h_dim, hp = hidden_size, lay.hp
     nbk = lay.nbk
+    wbk = block_k // 2 if weight_bits == 4 else block_k
     # the shared prologue also pads h_prev; the LSTM activation never
     # reads it (h = o * tanh(c)), so it is simply not handed to the kernel
     d_cat, m4, _, n_active, active_ids = _prep_step_operands(
@@ -569,8 +836,8 @@ def _fused_q8_lstm_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
         in_specs=[
             pl.BlockSpec((b, block_k),
                          lambda o, i, n, ids: (0, ids[i])),        # d_cat
-            pl.BlockSpec((4, block_h, block_k),
-                         lambda o, i, n, ids: (0, o, ids[i])),     # w_q (int8)
+            pl.BlockSpec((4, block_h, wbk),
+                         lambda o, i, n, ids: (0, o, ids[i])),     # w_q packed
             pl.BlockSpec((4, block_h),
                          lambda o, i, n, ids: (0, o)),             # scales
             pl.BlockSpec((4, block_h),
@@ -588,7 +855,7 @@ def _fused_q8_lstm_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
         scratch_shapes=[pltpu.VMEM((b, 4, block_h), jnp.float32)],
     )
     m_new, h_new, c_new = pl.pallas_call(
-        functools.partial(_q8_lstm_kernel, nbk=nbk,
+        functools.partial(_q8_lstm_kernel, nbk=nbk, weight_bits=weight_bits,
                           act_scale=act_scale, act_min=act_min,
                           act_max=act_max, lut_scale=lut_scale,
                           lut_min=lut_min, lut_max=lut_max),
@@ -604,18 +871,151 @@ def _fused_q8_lstm_step(w_q: Array, scales: Array, b4: Array, m_prev: Array,
             c_new[:, :h_dim])
 
 
+def _q8_lstm_kernel_dbuf(n_active_ref, active_ids_ref, d_ref, w_hbm, s_ref,
+                         b_ref, m_ref, c_ref, m_out_ref, h_out_ref,
+                         c_out_ref, wbuf, acc_ref, sem, *, weight_bits: int,
+                         act_scale: float, act_min: float, act_max: float,
+                         lut_scale: float, lut_min: float, lut_max: float):
+    """One o-block of the double-buffered int8/int4 fused LSTM layer step
+    (the LSTM twin of :func:`_q8_gru_kernel_dbuf`: no seam routing, all
+    four delta memories take both streams, saturating Q8.8 cell state —
+    bit-identical to :func:`_q8_lstm_kernel`)."""
+    o = pl.program_id(0)
+    n = n_active_ref[0]
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def dma(slot, j):
+        return pltpu.make_async_copy(
+            w_hbm.at[o, active_ids_ref[j]], wbuf.at[slot], sem.at[slot])
+
+    @pl.when(n > 0)
+    def _stream():
+        dma(0, 0).start()
+
+        def body(j, carry):
+            slot = jax.lax.rem(j, 2)
+
+            @pl.when(j + 1 < n)
+            def _prefetch():
+                dma(1 - slot, j + 1).start()
+
+            dma(slot, j).wait()
+            if weight_bits == 4:
+                w = _kernel_unpack_nibbles(wbuf[slot])
+            else:
+                w = wbuf[slot].astype(jnp.float32)
+            d = d_ref[j]                             # fired delta block j
+            acc_ref[...] += jax.lax.dot_general(
+                d, w, (((1,), (2,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return carry
+
+        jax.lax.fori_loop(0, n, body, 0)
+
+    def q88(v):
+        return _grid_round(v, act_scale, act_min, act_max)
+
+    def lut(v):
+        return _grid_round(v, lut_scale, lut_min, lut_max)
+
+    m_new = m_ref[...].astype(jnp.float32) + acc_ref[...]      # code domain
+    s = s_ref[...].astype(jnp.float32)                         # [4, BH]
+    msc = b_ref[...][None] + m_new * s[None]                   # dequantized
+    c_prev = c_ref[...].astype(jnp.float32)
+    gi = lut(jax.nn.sigmoid(q88(msc[:, 0])))
+    gf = lut(jax.nn.sigmoid(q88(msc[:, 1])))
+    gg = lut(jnp.tanh(q88(msc[:, 2])))
+    go = lut(jax.nn.sigmoid(q88(msc[:, 3])))
+    c_new = q88(gf * c_prev + gi * gg)            # saturating Q8.8 accumulator
+    h_new = q88(go * lut(jnp.tanh(c_new)))
+    m_out_ref[...] = m_new.astype(m_out_ref.dtype)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "input_size", "hidden_size", "block_h", "block_k", "act_scale",
+    "act_min", "act_max", "lut_scale", "lut_min", "lut_max", "weight_bits",
+    "interpret"))
+def _fused_q8_lstm_step_dbuf(w_q: Array, scales: Array, b4: Array,
+                             m_prev: Array, h_prev: Array, c_prev: Array,
+                             dx: Array, dh: Array, *, input_size: int,
+                             hidden_size: int, block_h: int, block_k: int,
+                             act_scale: float, act_min: float,
+                             act_max: float, lut_scale: float,
+                             lut_min: float, lut_max: float,
+                             weight_bits: int, interpret: bool):
+    """Double-buffered variant of :func:`_fused_q8_lstm_step`
+    (bit-identical; see :func:`_fused_q8_step_dbuf` for the scheme)."""
+    lay = QuantDeltaLayout(w_q, scales, b4, input_size, hidden_size, block_h,
+                           block_k, act_scale, act_min, act_max, lut_scale,
+                           lut_min, lut_max, gates=4)
+    b = dx.shape[0]
+    h_dim, hp = hidden_size, lay.hp
+    nbk = lay.nbk
+    wbk = block_k // 2 if weight_bits == 4 else block_k
+    d_cat, m4, _, n_active, active_ids = _prep_step_operands(
+        lay, m_prev, h_prev, dx, dh)
+    cprev = jnp.pad(c_prev, ((0, 0), (0, hp - h_dim)))
+    d_act = jnp.take(d_cat.reshape(b, nbk, block_k), active_ids,
+                     axis=1).transpose(1, 0, 2)                # [nbk, B, BK]
+    w_stream = w_q.reshape(4, lay.nbo, block_h, nbk,
+                           wbk).transpose(1, 3, 0, 2, 4)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(lay.nbo,),
+        in_specs=[
+            pl.BlockSpec((nbk, b, block_k),
+                         lambda o, n, ids: (0, 0, 0)),         # d_act
+            pl.BlockSpec(memory_space=pltpu.ANY),              # w_stream HBM
+            pl.BlockSpec((4, block_h), lambda o, n, ids: (0, o)),   # scales
+            pl.BlockSpec((4, block_h), lambda o, n, ids: (0, o)),   # b4
+            pl.BlockSpec((b, 4, block_h),
+                         lambda o, n, ids: (0, 0, o)),         # m_prev
+            pl.BlockSpec((b, block_h), lambda o, n, ids: (0, o)),   # c_prev
+        ],
+        out_specs=[
+            pl.BlockSpec((b, 4, block_h), lambda o, n, ids: (0, 0, o)),
+            pl.BlockSpec((b, block_h), lambda o, n, ids: (0, o)),
+            pl.BlockSpec((b, block_h), lambda o, n, ids: (0, o)),
+        ],
+        scratch_shapes=[pltpu.VMEM((2, 4, block_h, wbk), jnp.int8),
+                        pltpu.VMEM((b, 4, block_h), jnp.float32),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    m_new, h_new, c_new = pl.pallas_call(
+        functools.partial(_q8_lstm_kernel_dbuf, weight_bits=weight_bits,
+                          act_scale=act_scale, act_min=act_min,
+                          act_max=act_max, lut_scale=lut_scale,
+                          lut_min=lut_min, lut_max=lut_max),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 4, hp), m_prev.dtype),
+            jax.ShapeDtypeStruct((b, hp), h_prev.dtype),
+            jax.ShapeDtypeStruct((b, hp), c_prev.dtype),
+        ],
+        interpret=interpret,
+    )(n_active, active_ids, d_act, w_stream, scales, b4, m4, cprev)
+    return (m_new[:, :, :h_dim].reshape(b, 4 * h_dim), h_new[:, :h_dim],
+            c_new[:, :h_dim])
+
+
 def deltalstm_q8_step(layout: QuantDeltaLayout, m_prev: Array, h_prev: Array,
                       c_prev: Array, dx: Array, dh: Array, *,
-                      interpret: bool = True):
-    """Public int8 LSTM single-step entry on encoded deltas (see
-    :func:`_fused_q8_lstm_step`)."""
-    return _fused_q8_lstm_step(
+                      interpret: bool = True, buffered: bool = False):
+    """Public int8/int4 LSTM single-step entry on encoded deltas (see
+    :func:`_fused_q8_lstm_step`; ``buffered=True`` runs the
+    double-buffered weight-streaming variant — bit-identical output)."""
+    step = _fused_q8_lstm_step_dbuf if buffered else _fused_q8_lstm_step
+    return step(
         layout.w_q, layout.scales, layout.b4, m_prev, h_prev, c_prev, dx, dh,
         input_size=layout.input_size, hidden_size=layout.hidden_size,
         block_h=layout.block_h, block_k=layout.block_k,
         act_scale=layout.act_scale, act_min=layout.act_min,
         act_max=layout.act_max, lut_scale=layout.lut_scale,
-        lut_min=layout.lut_min, lut_max=layout.lut_max, interpret=interpret)
+        lut_min=layout.lut_min, lut_max=layout.lut_max,
+        weight_bits=layout.weight_bits, interpret=interpret)
 
 
 def deltalstm_q8_step_ref(layout: QuantDeltaLayout, m_prev: Array,

@@ -56,7 +56,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.delta_q8 import (  # noqa: F401  (re-exports)
     QuantDeltaLayout, _grid_round, _GruBlockGeometry, _prep_step_operands,
     deltagru_q8_step, deltagru_q8_step_ref, pack_cat_volume,
-    pack_delta_weights_q8)
+    pack_delta_weights_q4, pack_delta_weights_q8, pack_nibbles,
+    unpack_nibbles)
 
 Array = jax.Array
 

@@ -32,17 +32,21 @@ Entry points:
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.core.sparsity import CELL_GATES
-from repro.kernels.delta_q8 import QuantDeltaLayout, pack_delta_weights_q8
+from repro.kernels.delta_q8 import (QuantDeltaLayout, _layout_codes_f32,
+                                    pack_delta_weights_q8)
+
+#: streamed weight widths with a packed runtime grid (int8 codes / the
+#: nibble-packed int4 volume) — anything else has no kernel to run it.
+SUPPORTED_WEIGHT_BITS = (4, 8)
 
 
 def quantize_delta_stack(params, cell: str = "gru", block: int = 128,
                          act_frac_bits: int = 8, act_int_bits: int = 8,
                          lut_frac_bits: int = 4,
-                         with_ref_codes: bool | None = None):
-    """Quantize a trained delta-RNN stack into the packed q8 runtime format.
+                         with_ref_codes: bool | None = None,
+                         bits: int = 8):
+    """Quantize a trained delta-RNN stack into the packed runtime format.
 
     Args:
       params: sequence of per-layer params of the given cell family
@@ -58,6 +62,10 @@ def quantize_delta_stack(params, cell: str = "gru", block: int = 128,
       act_frac_bits / act_int_bits: activation grid (paper: Q8.8).
       lut_frac_bits: LUT output grid (paper default: Q1.4).
       with_ref_codes: see :func:`pack_delta_weights_q8` (None = auto).
+      bits: streamed weight width — 8 (int8 codes, the paper's operating
+        point) or 4 (the nibble-packed int4 volume streaming half the
+        bytes per fired column). Anything else raises: there is no packed
+        grid or kernel for other widths.
 
     Returns:
       ``(qparams, layouts)`` — the fake-quant view stack and the per-layer
@@ -70,6 +78,11 @@ def quantize_delta_stack(params, cell: str = "gru", block: int = 128,
     if cell not in CELL_GATES:
         raise ValueError(f"unknown cell family {cell!r}; known gate "
                          f"counts: {CELL_GATES}")
+    if bits not in SUPPORTED_WEIGHT_BITS:
+        raise ValueError(
+            f"bits={bits!r} is not a packed runtime width; the quantized "
+            f"delta kernels stream int8 or nibble-packed int4 codes only "
+            f"(bits in {SUPPORTED_WEIGHT_BITS})")
     gates = CELL_GATES[cell]
     qparams, layouts = [], []
     for li, p in enumerate(params):
@@ -82,7 +95,8 @@ def quantize_delta_stack(params, cell: str = "gru", block: int = 128,
         lay = pack_delta_weights_q8(
             p.w_x, p.w_h, b=p.b, gates=gates, block_h=block, block_k=block,
             act_frac_bits=act_frac_bits, act_int_bits=act_int_bits,
-            lut_frac_bits=lut_frac_bits, with_ref_codes=with_ref_codes)
+            lut_frac_bits=lut_frac_bits, with_ref_codes=with_ref_codes,
+            weight_bits=bits)
         layouts.append(lay)
         qparams.append(type(p)(w_x=_dequant_slice(lay, "x"),
                                w_h=_dequant_slice(lay, "h"),
@@ -92,21 +106,23 @@ def quantize_delta_stack(params, cell: str = "gru", block: int = 128,
 
 def quantize_stack(params, block: int = 128, act_frac_bits: int = 8,
                    act_int_bits: int = 8, lut_frac_bits: int = 4,
-                   with_ref_codes: bool | None = None):
+                   with_ref_codes: bool | None = None, bits: int = 8):
     """GRU-pinned spelling of :func:`quantize_delta_stack` (the historical
     layer-level exporter; identical semantics with ``cell="gru"``)."""
     return quantize_delta_stack(
         params, cell="gru", block=block, act_frac_bits=act_frac_bits,
         act_int_bits=act_int_bits, lut_frac_bits=lut_frac_bits,
-        with_ref_codes=with_ref_codes)
+        with_ref_codes=with_ref_codes, bits=bits)
 
 
 def quantize_delta_model(params: dict, cell: str | None = None,
-                         interpret: bool | None = None, **kw):
+                         interpret: bool | None = None, bits: int = 8,
+                         **kw):
     """Quantize a model params dict of any cell family (head left fp32).
 
     ``cell=None`` infers the family from the dict's ``"gru"`` / ``"lstm"``
-    key. Returns a ready-to-run ``backend="fused_q8"``
+    key. Returns a ready-to-run ``backend="fused_q8"`` (``bits=8``) or
+    ``backend="fused_q4"`` (``bits=4``)
     :class:`~repro.core.program.DeltaProgram` (head included): hand it
     straight to ``DeltaStreamEngine(program, task)`` or call
     ``program.sequence(...)``. The dequantized fake-quant view stack is
@@ -121,11 +137,13 @@ def quantize_delta_model(params: dict, cell: str | None = None,
             f"quantize_delta_model(cell={cell!r}) needs a model params "
             f"dict with a {cell!r} stack; got {keys} — for a bare layer "
             "stack use quantize_delta_stack(params, cell=...)")
-    qstack, layouts = quantize_delta_stack(params[cell], cell=cell, **kw)
+    qstack, layouts = quantize_delta_stack(params[cell], cell=cell,
+                                           bits=bits, **kw)
     return DeltaProgram(
         layers=tuple(qstack), layouts=tuple(layouts), packs=None,
         head=params.get("head"), head_b=params.get("head_b"),
-        backend="fused_q8", interpret=interpret, cell=cell)
+        backend="fused_q8" if bits == 8 else "fused_q4",
+        interpret=interpret, cell=cell)
 
 
 def quantize_gru_model(params: dict, interpret: bool | None = None, **kw):
@@ -148,7 +166,7 @@ def quantize_gru_model(params: dict, interpret: bool | None = None, **kw):
 
 def _dequant_slice(lay: QuantDeltaLayout, which: str):
     h, i = lay.hidden_size, lay.input_size
-    codes = lay.w_q.astype(jnp.float32)
+    codes = _layout_codes_f32(lay)
     if which == "x":
         sl = codes[:, :h, :i]
     else:

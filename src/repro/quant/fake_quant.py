@@ -49,7 +49,25 @@ class QFormat:
 # Paper's operating formats.
 ACT_Q88 = QFormat(8, 8)      # INT16 activations
 WGT_Q17 = QFormat(0, 7)      # INT8 weights, |w| < 1
+WGT_Q13 = QFormat(0, 3)      # INT4 weights (nibble-packed fused_q4 grid)
 LUT_Q14 = QFormat(1, 4)      # 5-bit LUT output (best RMSE in the paper)
+
+#: streamed weight widths with a packed runtime kernel behind them
+WEIGHT_BITS_FORMATS = {8: WGT_Q17, 4: WGT_Q13}
+
+
+def weight_format_for_bits(bits: int) -> QFormat:
+    """The QAT weight grid matching a streamed width (8 -> Q0.7 int8,
+    4 -> Q0.3 int4 — the training-side twin of the ``fused_q8`` /
+    ``fused_q4`` runtime grids). Other widths raise: there is no packed
+    kernel to serve them."""
+    try:
+        return WEIGHT_BITS_FORMATS[bits]
+    except KeyError:
+        raise ValueError(
+            f"no weight grid for bits={bits!r}; supported widths: "
+            f"{sorted(WEIGHT_BITS_FORMATS)} (int8 / nibble-packed int4)"
+        ) from None
 
 
 def quantize(x: Array, fmt: QFormat) -> Array:

@@ -16,7 +16,8 @@ from dataclasses import dataclass, field
 
 import jax
 
-from repro.quant.fake_quant import ACT_Q88, WGT_Q17, QFormat, fake_quant
+from repro.quant.fake_quant import (ACT_Q88, WGT_Q17, QFormat, fake_quant,
+                                    weight_format_for_bits)
 from repro.quant.lut import lut_sigmoid, lut_tanh
 
 
@@ -26,6 +27,18 @@ class QatPolicy:
     act_fmt: QFormat = ACT_Q88
     lut_frac_bits: int = 4
     enabled: bool = True
+
+    @classmethod
+    def for_weight_bits(cls, bits: int, **kw) -> "QatPolicy":
+        """A policy whose weight grid matches a streamed width (8 = the
+        paper's int8 Q0.7, 4 = the ``fused_q4`` int4 Q0.3 grid); widths
+        without a packed kernel raise."""
+        return cls(weight_fmt=weight_format_for_bits(bits), **kw)
+
+    @property
+    def weight_bits(self) -> int:
+        """Total streamed weight width of this policy's grid."""
+        return self.weight_fmt.bits
 
     def quantize_params(self, params):
         if not self.enabled:
@@ -47,3 +60,4 @@ class QatPolicy:
 
 FP32 = QatPolicy(enabled=False)
 EDGEDRNN_QAT = QatPolicy()  # INT8 weights / INT16 acts / Q1.4 LUT
+EDGEDRNN_QAT_W4 = QatPolicy.for_weight_bits(4)  # INT4 weights (fused_q4)
